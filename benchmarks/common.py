@@ -1,0 +1,108 @@
+"""Shared benchmark harness: run Full-AutoML vs SubStrat vs baselines on a
+dataset and report the paper's metrics (time-reduction, relative-accuracy).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.automl.engine import AutoMLConfig, automl_fit
+from repro.core.baselines import (
+    ig_km_dst, ig_rand_dst, km_dst, mab_dst, mc_dst,
+)
+from repro.core.gen_dst import GenDSTConfig
+from repro.core.measures import factorize
+from repro.core.substrat import SubStratConfig, substrat
+from repro.data.tabular import DatasetSpec, make_dataset, train_test_split
+
+# quick-mode engine budgets (scaled so compute, not jit, dominates on CPU)
+QUICK_AUTOML = AutoMLConfig(n_trials=10, rungs=(60, 200))
+QUICK_FT = AutoMLConfig(n_trials=4, rungs=(120,))
+QUICK_GEN = GenDSTConfig(psi=10, phi=24)
+
+
+def substrat_config(**kw) -> SubStratConfig:
+    base = dict(gen=QUICK_GEN, sub_automl=QUICK_AUTOML, ft_automl=QUICK_FT)
+    base.update(kw)
+    return SubStratConfig(**base)
+
+
+BASELINE_DST_FNS: Dict[str, Callable] = {
+    "MC-100": lambda k, c, n, m: mc_dst(k, c, n, m, budget=100, batch=50),
+    "MC-100K": lambda k, c, n, m: mc_dst(k, c, n, m, budget=4000, batch=200),
+    "MAB": lambda k, c, n, m: mab_dst(k, c, n, m, rounds=200),
+    "KM": km_dst,
+    "IG-Rand": ig_rand_dst,
+    "IG-KM": ig_km_dst,
+}
+
+
+@dataclasses.dataclass
+class BenchResult:
+    dataset: str
+    method: str
+    time_s: float
+    test_acc: float
+    time_reduction: float
+    relative_accuracy: float
+
+
+def run_dataset(
+    spec: DatasetSpec,
+    *,
+    scale: float = 0.05,
+    seed: int = 0,
+    methods: Optional[list] = None,
+    sub_cfg: Optional[SubStratConfig] = None,
+    full_cfg: AutoMLConfig = QUICK_AUTOML,
+):
+    """Returns (full BenchResult, [method BenchResults])."""
+    X, y = make_dataset(spec, scale=scale)
+    Xtr, ytr, Xte, yte = train_test_split(X, y, 0.2, seed=seed)
+    coded = factorize(Xtr, ytr)     # shared across methods (like the paper's
+                                    # one-time preprocessing)
+    t0 = time.perf_counter()
+    full = automl_fit(Xtr, ytr, config=full_cfg, X_test=Xte, y_test=yte)
+    t_full = time.perf_counter() - t0
+    full_res = BenchResult(spec.name, "Full-AutoML", t_full, full.test_acc, 0.0, 1.0)
+
+    sub_cfg = sub_cfg or substrat_config()
+    out = []
+    methods = methods if methods is not None else (
+        ["SubStrat", "SubStrat-NF"] + list(BASELINE_DST_FNS)
+    )
+    # warm up the DST generators once (untimed): jit compilation is a
+    # one-time per-(shape, config) cost a production deployment amortizes
+    # across runs; the paper's sklearn stack has no analogous cost.  The
+    # AutoML engine's compiles hit Full-AutoML and SubStrat equally and are
+    # left in the timings.
+    from repro.core.gen_dst import gen_dst as _gd
+    for method in set(methods):
+        if method in ("SubStrat", "SubStrat-NF"):
+            _gd(jax.random.key(0), coded, sub_cfg.n, sub_cfg.m, sub_cfg.gen)
+        elif method in BASELINE_DST_FNS:
+            BASELINE_DST_FNS[method](jax.random.key(0), coded, None, None)
+    for method in methods:
+        key = jax.random.key(seed * 977 + 13)
+        if method == "SubStrat":
+            res = substrat(Xtr, ytr, key=key, config=sub_cfg, coded=coded,
+                           X_test=Xte, y_test=yte)
+        elif method == "SubStrat-NF":
+            cfg_nf = dataclasses.replace(sub_cfg, fine_tune=False)
+            res = substrat(Xtr, ytr, key=key, config=cfg_nf, coded=coded,
+                           X_test=Xte, y_test=yte)
+        else:
+            res = substrat(Xtr, ytr, key=key, config=sub_cfg, coded=coded,
+                           dst_fn=BASELINE_DST_FNS[method],
+                           X_test=Xte, y_test=yte)
+        t = res.total_time_s
+        acc = res.final.test_acc
+        out.append(BenchResult(
+            spec.name, method, t, acc,
+            1.0 - t / max(t_full, 1e-9), acc / max(full.test_acc, 1e-9),
+        ))
+    return full_res, out

@@ -1,0 +1,22 @@
+"""Figure 2: per-dataset (time-reduction, relative-accuracy) scatter points."""
+from __future__ import annotations
+
+from repro.data.tabular import PAPER_DATASETS
+from .common import run_dataset
+
+
+def main(datasets=("D2", "D3", "D6"), scale=0.2,
+         methods=("SubStrat", "IG-KM", "MC-100")):
+    points = []
+    for ds in datasets:
+        _, results = run_dataset(PAPER_DATASETS[ds], scale=scale,
+                                 methods=list(methods))
+        for r in results:
+            points.append((ds, r.method, r.time_reduction, r.relative_accuracy))
+    return points
+
+
+if __name__ == "__main__":
+    print("dataset,method,time_reduction,relative_accuracy")
+    for ds, m, tr, ra in main():
+        print(f"{ds},{m},{tr:.4f},{ra:.4f}")

@@ -1,0 +1,37 @@
+"""Figure 3: SubStrat configuration skyline — different (psi, phi, DST-size)
+settings trade time-reduction against relative accuracy."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.gen_dst import GenDSTConfig
+from repro.data.tabular import PAPER_DATASETS
+from .common import run_dataset, substrat_config
+
+SETTINGS = {
+    "SubStrat-default": substrat_config(),
+    "SubStrat-fast": substrat_config(gen=GenDSTConfig(psi=4, phi=12)),
+    "SubStrat-thorough": substrat_config(gen=GenDSTConfig(psi=20, phi=40)),
+    "SubStrat-wide": substrat_config(m=None, n=None),  # default sizes
+}
+
+
+def main(dataset="D3", scale=0.2):
+    spec = PAPER_DATASETS[dataset]
+    points = []
+    for name, cfg in SETTINGS.items():
+        _, results = run_dataset(spec, scale=scale, methods=["SubStrat"],
+                                 sub_cfg=cfg)
+        r = results[0]
+        points.append((name, r.time_reduction, r.relative_accuracy))
+    # skyline: drop strictly-dominated configs
+    skyline = [p for p in points
+               if not any(q[1] >= p[1] and q[2] >= p[2] and q != p for q in points)]
+    return points, skyline
+
+
+if __name__ == "__main__":
+    points, skyline = main()
+    print("setting,time_reduction,relative_accuracy,on_skyline")
+    for name, tr, ra in points:
+        print(f"{name},{tr:.4f},{ra:.4f},{(name, tr, ra) in skyline}")

@@ -1,0 +1,31 @@
+"""Figure 4: effect of DST size (n rows x m cols) on accuracy/time — the
+(sqrt(N), 0.25M) sweet spot."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.tabular import PAPER_DATASETS, make_dataset, train_test_split
+from .common import run_dataset, substrat_config
+
+
+def main(dataset="D3", scale=0.2):
+    spec = PAPER_DATASETS[dataset]
+    X, _ = make_dataset(spec, scale=scale)
+    N, M = X.shape
+    n_grid = [max(4, int(np.log2(N))), int(N ** 0.5), int(N ** 0.75)]
+    m_grid = [max(2, int(0.1 * M)), max(2, int(0.25 * M)), max(2, int(0.5 * M))]
+    cells = []
+    for n in n_grid:
+        for m in m_grid:
+            cfg = substrat_config(n=n, m=m)
+            _, results = run_dataset(spec, scale=scale, methods=["SubStrat"],
+                                     sub_cfg=cfg)
+            r = results[0]
+            cells.append((n, m, r.time_reduction, r.relative_accuracy))
+    return cells
+
+
+if __name__ == "__main__":
+    print("n,m,time_reduction,relative_accuracy")
+    for n, m, tr, ra in main():
+        print(f"{n},{m},{tr:.4f},{ra:.4f}")

@@ -1,0 +1,33 @@
+"""Figure 5: isolated effect of DST length (n, with m=0.25M) and width
+(m, with n=sqrt(N))."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.tabular import PAPER_DATASETS, make_dataset
+from .common import run_dataset, substrat_config
+
+
+def main(dataset="D3", scale=0.2):
+    spec = PAPER_DATASETS[dataset]
+    X, _ = make_dataset(spec, scale=scale)
+    N, M = X.shape
+    length_points, width_points = [], []
+    for n in (int(np.log2(N)), int(N ** 0.5), int(N ** 0.7), int(N ** 0.85)):
+        _, res = run_dataset(spec, scale=scale, methods=["SubStrat"],
+                             sub_cfg=substrat_config(n=n))
+        length_points.append((n, res[0].time_reduction, res[0].relative_accuracy))
+    for m in (2, max(2, int(0.25 * M)), max(3, int(0.5 * M)), M):
+        _, res = run_dataset(spec, scale=scale, methods=["SubStrat"],
+                             sub_cfg=substrat_config(m=m))
+        width_points.append((m, res[0].time_reduction, res[0].relative_accuracy))
+    return length_points, width_points
+
+
+if __name__ == "__main__":
+    lp, wp = main()
+    print("axis,value,time_reduction,relative_accuracy")
+    for n, tr, ra in lp:
+        print(f"n,{n},{tr:.4f},{ra:.4f}")
+    for m, tr, ra in wp:
+        print(f"m,{m},{tr:.4f},{ra:.4f}")

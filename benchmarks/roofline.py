@@ -1,0 +1,51 @@
+"""Roofline report: reads experiments/dryrun.json and prints the per-cell
+three-term roofline table (EXPERIMENTS.md §Roofline feeds from this)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN = Path(__file__).resolve().parents[1] / "experiments" / "dryrun.json"
+
+
+def load(path=DRYRUN):
+    if not Path(path).exists():
+        return {}
+    return json.loads(Path(path).read_text())
+
+
+def rows(data=None, mesh="single"):
+    data = data if data is not None else load()
+    out = []
+    for key, v in sorted(data.items()):
+        arch, shape, m = key.split("|")
+        if m != mesh:
+            continue
+        if v["status"] != "ok":
+            out.append((arch, shape, v["status"], v.get("reason", v.get("error", ""))[:60],
+                        None, None, None, None, None, None))
+            continue
+        r = v["roofline"]
+        out.append((
+            arch, shape, "ok", r["dominant"],
+            r["compute_s"], r["memory_s"], r["collective_s"],
+            r["roofline_fraction"], r["useful_flops_ratio"],
+            v["memory"]["peak_per_device_gb"],
+        ))
+    return out
+
+
+def main():
+    print("arch,shape,status,dominant,compute_s,memory_s,collective_s,"
+          "roofline_fraction,useful_flops_ratio,peak_gb_per_dev")
+    for row in rows():
+        arch, shape, status, dom, c, m, coll, frac, useful, peak = row
+        if status != "ok":
+            print(f"{arch},{shape},{status},{dom},,,,,,")
+        else:
+            print(f"{arch},{shape},ok,{dom},{c:.4f},{m:.4f},{coll:.4f},"
+                  f"{frac:.4f},{useful:.3f},{peak:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""Benchmark orchestrator — one section per paper table/figure + kernel
+micro-benches + the dry-run roofline table.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Prints ``name,us_per_call,derived`` CSV blocks per section.  --full uses the
+paper-scale settings (long); the default quick mode scales datasets down so
+the whole suite finishes on one CPU core.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def _section(title):
+    print(f"\n### {title}", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--skip", nargs="*", default=[],
+                    help="section names to skip (table4 fig2 fig3 fig4 fig5 "
+                         "kernels roofline)")
+    args = ap.parse_args()
+
+    quick = not args.full
+    t_start = time.time()
+
+    sections = []
+
+    if "kernels" not in args.skip:
+        sections.append(("kernels", _run_kernels))
+    if "table4" not in args.skip:
+        sections.append(("table4", lambda: _run_table4(quick)))
+    if "fig2" not in args.skip:
+        sections.append(("fig2", lambda: _run_fig2(quick)))
+    if "fig3" not in args.skip:
+        sections.append(("fig3", lambda: _run_fig3(quick)))
+    if "fig4" not in args.skip:
+        sections.append(("fig4", lambda: _run_fig4(quick)))
+    if "fig5" not in args.skip:
+        sections.append(("fig5", lambda: _run_fig5(quick)))
+    if "roofline" not in args.skip:
+        sections.append(("roofline", _run_roofline))
+
+    failures = 0
+    for name, fn in sections:
+        t0 = time.time()
+        try:
+            fn()
+        except Exception:  # noqa: BLE001 — keep the suite running
+            failures += 1
+            print(f"SECTION {name} FAILED:", file=sys.stderr)
+            traceback.print_exc()
+        print(f"# section {name} took {time.time()-t0:.1f}s", flush=True)
+    print(f"\n# benchmarks done in {time.time()-t_start:.1f}s, "
+          f"{failures} section failures")
+    if failures:
+        sys.exit(1)
+
+
+def _run_kernels():
+    _section("kernel micro-benchmarks (name,us_per_call,derived)")
+    from .kernels_bench import main as kmain
+    for name, us, derived in kmain():
+        print(f"{name},{us:.1f},{derived}")
+
+
+def _run_table4(quick):
+    _section("Table 4: mean time-reduction / relative-accuracy per method")
+    from .table4_baselines import main as t4
+    datasets = ("D2", "D3", "D6") if quick else tuple(f"D{i}" for i in range(1, 11))
+    table = t4(datasets=datasets, scale=0.2 if quick else 1.0,
+               reps=1 if quick else 5, print_rows=False)
+    print("method,time_reduction_mean,time_reduction_std,rel_acc_mean,rel_acc_std")
+    for m, (trm, trs, ram, ras) in sorted(table.items(), key=lambda kv: -kv[1][2]):
+        print(f"{m},{trm:.4f},{trs:.4f},{ram:.4f},{ras:.4f}")
+
+
+def _run_fig2(quick):
+    _section("Figure 2: per-dataset points")
+    from .fig2_per_dataset import main as f2
+    print("dataset,method,time_reduction,relative_accuracy")
+    for ds, m, tr, ra in f2(scale=0.2 if quick else 1.0):
+        print(f"{ds},{m},{tr:.4f},{ra:.4f}")
+
+
+def _run_fig3(quick):
+    _section("Figure 3: SubStrat settings skyline")
+    from .fig3_skyline import main as f3
+    points, skyline = f3(scale=0.2 if quick else 1.0)
+    sky = {p[0] for p in skyline}
+    print("setting,time_reduction,relative_accuracy,on_skyline")
+    for name, tr, ra in points:
+        print(f"{name},{tr:.4f},{ra:.4f},{name in sky}")
+
+
+def _run_fig4(quick):
+    _section("Figure 4: DST size heatmap")
+    from .fig4_dst_size import main as f4
+    print("n,m,time_reduction,relative_accuracy")
+    for n, m, tr, ra in f4(scale=0.15 if quick else 1.0):
+        print(f"{n},{m},{tr:.4f},{ra:.4f}")
+
+
+def _run_fig5(quick):
+    _section("Figure 5: isolated n / m sweeps")
+    from .fig5_isolated import main as f5
+    lp, wp = f5(scale=0.15 if quick else 1.0)
+    print("axis,value,time_reduction,relative_accuracy")
+    for n, tr, ra in lp:
+        print(f"n,{n},{tr:.4f},{ra:.4f}")
+    for m, tr, ra in wp:
+        print(f"m,{m},{tr:.4f},{ra:.4f}")
+
+
+def _run_roofline():
+    _section("Roofline (from experiments/dryrun.json)")
+    from .roofline import main as rmain
+    rmain()
+
+
+if __name__ == "__main__":
+    main()

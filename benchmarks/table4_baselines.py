@@ -1,0 +1,41 @@
+"""Table 4: mean time-reduction and relative-accuracy per method across
+datasets (SubStrat vs the baseline DST generators vs Full-AutoML)."""
+from __future__ import annotations
+
+import time
+from collections import defaultdict
+
+import numpy as np
+
+from repro.data.tabular import PAPER_DATASETS
+from .common import run_dataset
+
+
+def main(datasets=("D2", "D3", "D6"), scale=0.2, reps=1, methods=None,
+         print_rows=True):
+    rows = defaultdict(list)       # method -> [(time_red, rel_acc)]
+    for ds in datasets:
+        for rep in range(reps):
+            full, results = run_dataset(
+                PAPER_DATASETS[ds], scale=scale, seed=rep, methods=methods)
+            for r in results:
+                rows[r.method].append((r.time_reduction, r.relative_accuracy))
+            if print_rows:
+                print(f"# {ds} rep{rep}: full={full.time_s:.1f}s "
+                      f"acc={full.test_acc:.3f}", flush=True)
+                for r in results:
+                    print(f"#   {r.method:12s} tr={r.time_reduction:+.2%} "
+                          f"ra={r.relative_accuracy:.2%}", flush=True)
+    table = {}
+    for method, vals in rows.items():
+        tr = np.array([v[0] for v in vals])
+        ra = np.array([v[1] for v in vals])
+        table[method] = (tr.mean(), tr.std(), ra.mean(), ra.std())
+    return table
+
+
+if __name__ == "__main__":
+    t = main()
+    print("method,time_reduction_mean,time_reduction_std,rel_acc_mean,rel_acc_std")
+    for m, (trm, trs, ram, ras) in sorted(t.items(), key=lambda kv: -kv[1][2]):
+        print(f"{m},{trm:.4f},{trs:.4f},{ram:.4f},{ras:.4f}")

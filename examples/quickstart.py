@@ -1,0 +1,56 @@
+"""Quickstart: SubStrat vs Full-AutoML on a paper-shaped tabular dataset.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Reproduces the paper's headline comparison on one dataset: run the AutoML
+engine on the full data, then run SubStrat (Gen-DST subset -> AutoML ->
+restricted fine-tune) and report time-reduction + relative accuracy.
+"""
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax  # noqa: E402
+
+from repro.automl.engine import AutoMLConfig, automl_fit  # noqa: E402
+from repro.core.gen_dst import GenDSTConfig  # noqa: E402
+from repro.core.substrat import SubStratConfig, substrat  # noqa: E402
+from repro.data.tabular import PAPER_DATASETS, make_dataset, train_test_split  # noqa: E402
+
+
+def main():
+    spec = PAPER_DATASETS["D3"]           # car insurance, 10k x 18
+    X, y = make_dataset(spec, scale=0.5)
+    Xtr, ytr, Xte, yte = train_test_split(X, y)
+    print(f"dataset {spec.name} ({spec.domain}): {Xtr.shape[0]} train rows, "
+          f"{Xtr.shape[1]} columns")
+
+    t0 = time.perf_counter()
+    full = automl_fit(Xtr, ytr, config=AutoMLConfig(n_trials=10, rungs=(60, 200)),
+                      X_test=Xte, y_test=yte)
+    t_full = time.perf_counter() - t0
+    print(f"\nFull-AutoML : {t_full:6.1f}s  test-acc {full.test_acc:.3f} "
+          f"({full.spec.family}, {full.n_trials} trials)")
+
+    res = substrat(
+        Xtr, ytr, key=jax.random.key(0),
+        config=SubStratConfig(
+            gen=GenDSTConfig(psi=10, phi=24),
+            sub_automl=AutoMLConfig(n_trials=10, rungs=(60, 200)),
+            ft_automl=AutoMLConfig(n_trials=4, rungs=(120,)),
+        ),
+        X_test=Xte, y_test=yte,
+    )
+    print(f"SubStrat    : {res.total_time_s:6.1f}s  test-acc "
+          f"{res.final.test_acc:.3f} ({res.final.spec.family})")
+    print(f"  subset: {len(res.row_idx)} rows x {len(res.col_idx)}(+target) cols, "
+          f"|H(d)-H(D)| = {-res.dst_fitness:.4f}")
+    print(f"  phases: {', '.join(f'{k}={v:.1f}s' for k, v in res.times.items())}")
+    print(f"\ntime-reduction     = {1 - res.total_time_s / t_full:+.1%}")
+    print(f"relative-accuracy  = {res.final.test_acc / full.test_acc:.1%}")
+
+
+if __name__ == "__main__":
+    main()

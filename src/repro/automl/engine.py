@@ -1,0 +1,208 @@
+"""A search-based AutoML engine ``A(D, y) -> M*`` in JAX.
+
+Pipeline configuration = (preprocessor, feature-selector, model family, HPs).
+The engine runs random sampling + successive halving on the ``epochs``
+resource, under a trial or wall-clock budget, and returns the best pipeline
+by validation accuracy — our stand-in for Auto-Sklearn/TPOT (DESIGN.md §5.4).
+
+The paper's fine-tuning step (§3.4) maps to ``restrict_family=...``: a
+restricted, much shorter search that only considers pipelines using the same
+model family as the intermediate configuration M'.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .models import FAMILIES, accuracy, train_model
+
+__all__ = ["AutoMLConfig", "AutoMLResult", "automl_fit", "PipelineSpec", "apply_pipeline"]
+
+PREPROCS = ("none", "standardize", "minmax")
+FEATURE_FRACS = (1.0, 0.5)
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineSpec:
+    preproc: str
+    feature_frac: float
+    family: str
+    hp: tuple  # sorted (k, v) tuple
+
+
+@dataclasses.dataclass
+class AutoMLResult:
+    spec: PipelineSpec
+    params: Any
+    val_acc: float
+    test_acc: Optional[float]
+    time_s: float
+    n_trials: int
+    feat_idx: np.ndarray
+    pre_stats: Dict[str, np.ndarray]
+    trials: List[tuple]  # (spec, val_acc)
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoMLConfig:
+    n_trials: int = 24
+    time_budget_s: Optional[float] = None
+    rungs: Sequence[int] = (20, 60, 180)     # successive-halving epoch rungs
+    keep_frac: float = 0.34
+    val_frac: float = 0.2
+    seed: int = 0
+
+
+def _fit_preproc(name: str, X: np.ndarray) -> Dict[str, np.ndarray]:
+    if name == "standardize":
+        return {"mu": X.mean(0), "sd": X.std(0) + 1e-9}
+    if name == "minmax":
+        return {"lo": X.min(0), "hi": X.max(0)}
+    return {}
+
+
+def _apply_preproc(name: str, stats, X: np.ndarray) -> np.ndarray:
+    if name == "standardize":
+        return (X - stats["mu"]) / stats["sd"]
+    if name == "minmax":
+        rng = np.maximum(stats["hi"] - stats["lo"], 1e-9)
+        return (X - stats["lo"]) / rng * 2.0 - 1.0
+    return X
+
+
+def _select_features(frac: float, X_train: np.ndarray, y_train: np.ndarray) -> np.ndarray:
+    d = X_train.shape[1]
+    k = max(1, int(round(frac * d)))
+    if k >= d:
+        return np.arange(d)
+    # variance ranking (cheap, label-free)
+    var = X_train.var(axis=0)
+    return np.argsort(-var)[:k]
+
+
+def apply_pipeline(spec: PipelineSpec, pre_stats, feat_idx, X: np.ndarray) -> jnp.ndarray:
+    Xp = _apply_preproc(spec.preproc, pre_stats, X)
+    return jnp.asarray(Xp[:, feat_idx], dtype=jnp.float32)
+
+
+def _sample_specs(rng: np.random.Generator, n: int, families: Sequence[str]) -> List[PipelineSpec]:
+    specs = []
+    for _ in range(n):
+        fam = families[rng.integers(len(families))]
+        grid = FAMILIES[fam].hp_grid
+        hp = tuple(sorted((k, v[rng.integers(len(v))]) for k, v in grid.items()))
+        specs.append(
+            PipelineSpec(
+                preproc=PREPROCS[rng.integers(len(PREPROCS))],
+                feature_frac=FEATURE_FRACS[rng.integers(len(FEATURE_FRACS))],
+                family=fam,
+                hp=hp,
+            )
+        )
+    # dedup, keep order
+    seen, out = set(), []
+    for s in specs:
+        key = (s.preproc, s.feature_frac, s.family, s.hp)
+        if key not in seen:
+            seen.add(key)
+            out.append(s)
+    return out
+
+
+def automl_fit(
+    X: np.ndarray,
+    y: np.ndarray,
+    *,
+    config: AutoMLConfig = AutoMLConfig(),
+    restrict_family: Optional[str] = None,
+    X_test: Optional[np.ndarray] = None,
+    y_test: Optional[np.ndarray] = None,
+) -> AutoMLResult:
+    """Run the AutoML search.  Returns the best pipeline found.
+
+    ``restrict_family`` implements the paper's restricted fine-tune pass."""
+    t_start = time.perf_counter()
+    X = np.asarray(X, dtype=np.float32)
+    y = np.asarray(y)
+    classes, y_enc = np.unique(y, return_inverse=True)
+    n_classes = len(classes)
+    rng = np.random.default_rng(config.seed)
+
+    # train/val split
+    N = X.shape[0]
+    perm = rng.permutation(N)
+    n_val = max(1, int(config.val_frac * N))
+    val_idx, tr_idx = perm[:n_val], perm[n_val:]
+    X_tr, y_tr = X[tr_idx], y_enc[tr_idx]
+    X_val, y_val = X[val_idx], y_enc[val_idx]
+    y_tr_j, y_val_j = jnp.asarray(y_tr), jnp.asarray(y_val)
+
+    families = [restrict_family] if restrict_family else list(FAMILIES)
+    n_seed_trials = config.n_trials if not restrict_family else max(4, config.n_trials // 4)
+    specs = _sample_specs(rng, n_seed_trials, families)
+
+    def out_of_budget() -> bool:
+        return (
+            config.time_budget_s is not None
+            and time.perf_counter() - t_start > config.time_budget_s
+        )
+
+    # successive halving over epoch rungs
+    live: List[tuple] = []       # (spec, val_acc, params, feat_idx, pre_stats)
+    trials_log: List[tuple] = []
+    n_done = 0
+    pipe_cache: Dict[tuple, tuple] = {}
+
+    current = specs
+    for rung_i, epochs in enumerate(config.rungs):
+        scored = []
+        for spec in current:
+            if out_of_budget() and scored:
+                break
+            ckey = (spec.preproc, spec.feature_frac)
+            if ckey not in pipe_cache:
+                stats = _fit_preproc(spec.preproc, X_tr)
+                fidx = _select_features(spec.feature_frac, X_tr, y_tr)
+                Xtr_p = apply_pipeline(spec, stats, fidx, X_tr)
+                Xval_p = apply_pipeline(spec, stats, fidx, X_val)
+                pipe_cache[ckey] = (stats, fidx, Xtr_p, Xval_p)
+            stats, fidx, Xtr_p, Xval_p = pipe_cache[ckey]
+            params = train_model(
+                jax.random.key(config.seed + n_done),
+                Xtr_p, y_tr_j, spec.family, n_classes, dict(spec.hp), epochs,
+            )
+            vacc = accuracy(params, Xval_p, y_val_j, spec.family)
+            scored.append((spec, vacc, params, fidx, stats))
+            trials_log.append((spec, vacc))
+            n_done += 1
+        scored.sort(key=lambda t: -t[1])
+        live = scored
+        keep = max(1, int(np.ceil(len(scored) * config.keep_frac)))
+        current = [s for (s, *_rest) in scored[:keep]]
+        if out_of_budget():
+            break
+
+    best_spec, best_vacc, best_params, best_fidx, best_stats = live[0]
+    test_acc = None
+    if X_test is not None:
+        Xt = apply_pipeline(best_spec, best_stats, best_fidx, np.asarray(X_test, np.float32))
+        yt = jnp.asarray(np.searchsorted(classes, np.asarray(y_test)))
+        test_acc = accuracy(best_params, Xt, yt, best_spec.family)
+
+    return AutoMLResult(
+        spec=best_spec,
+        params=best_params,
+        val_acc=float(best_vacc),
+        test_acc=test_acc,
+        time_s=time.perf_counter() - t_start,
+        n_trials=n_done,
+        feat_idx=best_fidx,
+        pre_stats=best_stats,
+        trials=trials_log,
+    )

@@ -1,0 +1,204 @@
+"""JAX-native model families for the AutoML substrate.
+
+Each family implements the tiny protocol (init / train / predict) on dense
+``(N, d)`` float32 features and integer labels.  Training is jitted,
+full-batch gradient descent with Adam (cost scales with N — exactly the
+property SubStrat exploits), except the closed-form families (GNB, centroid).
+
+``epochs`` is the successive-halving resource unit.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["FAMILIES", "ModelFamily", "train_model", "predict_model", "accuracy"]
+
+
+class ModelFamily(NamedTuple):
+    name: str
+    init: Callable[..., Any]
+    loss: Callable[..., jax.Array] | None   # None => closed-form fit
+    fit_closed: Callable[..., Any] | None
+    predict: Callable[..., jax.Array]
+    hp_grid: Dict[str, tuple]
+
+
+# ---------------------------------------------------------------------------
+# gradient-trained families
+# ---------------------------------------------------------------------------
+
+
+def _xent(logits, y, n_classes):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+
+
+# -- logistic regression -----------------------------------------------------
+
+def _logreg_init(key, d, c, hp):
+    return {"w": jnp.zeros((d, c)), "b": jnp.zeros((c,))}
+
+
+def _logreg_loss(params, X, y, c, hp):
+    logits = X @ params["w"] + params["b"]
+    return _xent(logits, y, c) + hp["l2"] * jnp.sum(params["w"] ** 2)
+
+
+def _logreg_predict(params, X):
+    return X @ params["w"] + params["b"]
+
+
+# -- MLP ----------------------------------------------------------------------
+
+def _mlp_init(key, d, c, hp):
+    width, depth = int(hp["width"]), int(hp["depth"])
+    dims = [d] + [width] * depth + [c]
+    keys = jax.random.split(key, len(dims) - 1)
+    layers = []
+    for i, k in enumerate(keys):
+        scale = (2.0 / dims[i]) ** 0.5
+        layers.append(
+            {"w": jax.random.normal(k, (dims[i], dims[i + 1])) * scale,
+             "b": jnp.zeros((dims[i + 1],))}
+        )
+    return {"layers": layers}
+
+
+def _mlp_forward(params, X):
+    h = X
+    for i, lyr in enumerate(params["layers"]):
+        h = h @ lyr["w"] + lyr["b"]
+        if i < len(params["layers"]) - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def _mlp_loss(params, X, y, c, hp):
+    reg = sum(jnp.sum(l["w"] ** 2) for l in params["layers"])
+    return _xent(_mlp_forward(params, X), y, c) + hp["l2"] * reg
+
+
+# -- linear SVM (multi-class hinge) -------------------------------------------
+
+def _svm_loss(params, X, y, c, hp):
+    logits = X @ params["w"] + params["b"]
+    correct = jnp.take_along_axis(logits, y[:, None], axis=1)
+    margins = jnp.maximum(0.0, logits - correct + 1.0)
+    margins = margins.at[jnp.arange(X.shape[0]), y].set(0.0)
+    return margins.sum(axis=1).mean() + hp["l2"] * jnp.sum(params["w"] ** 2)
+
+
+# ---------------------------------------------------------------------------
+# closed-form families
+# ---------------------------------------------------------------------------
+
+
+def _gnb_fit(key, X, y, c, hp):
+    eps = hp["var_smoothing"]
+    onehot = jax.nn.one_hot(y, c)                      # (N, c)
+    cnt = onehot.sum(0)[:, None]                       # (c, 1)
+    mean = (onehot.T @ X) / jnp.maximum(cnt, 1.0)      # (c, d)
+    sq = (onehot.T @ (X ** 2)) / jnp.maximum(cnt, 1.0)
+    var = jnp.maximum(sq - mean ** 2, 0.0) + eps
+    prior = jnp.log(jnp.maximum(cnt[:, 0] / X.shape[0], 1e-12))
+    return {"mean": mean, "var": var, "prior": prior}
+
+
+def _gnb_predict(params, X):
+    # log N(x | mu, var) summed over dims + log prior
+    mu, var, prior = params["mean"], params["var"], params["prior"]
+    ll = -0.5 * (
+        ((X[:, None, :] - mu[None]) ** 2) / var[None] + jnp.log(2 * jnp.pi * var)[None]
+    ).sum(-1)
+    return ll + prior[None]
+
+
+def _centroid_fit(key, X, y, c, hp):
+    onehot = jax.nn.one_hot(y, c)
+    cnt = onehot.sum(0)[:, None]
+    cent = (onehot.T @ X) / jnp.maximum(cnt, 1.0)
+    overall = X.mean(0, keepdims=True)
+    cent = overall + (cent - overall) * (1.0 - hp["shrinkage"])
+    return {"cent": cent}
+
+
+def _centroid_predict(params, X):
+    d2 = ((X[:, None, :] - params["cent"][None]) ** 2).sum(-1)
+    return -d2
+
+
+FAMILIES: Dict[str, ModelFamily] = {
+    "logreg": ModelFamily(
+        "logreg", _logreg_init, _logreg_loss, None, _logreg_predict,
+        {"lr": (0.3, 0.1, 0.03), "l2": (0.0, 1e-4, 1e-2)},
+    ),
+    "mlp": ModelFamily(
+        "mlp", _mlp_init, _mlp_loss, None, _mlp_forward,
+        {"lr": (0.01, 0.003, 0.001), "l2": (0.0, 1e-4), "width": (32, 64, 128), "depth": (1, 2)},
+    ),
+    "linear_svm": ModelFamily(
+        "linear_svm", _logreg_init, _svm_loss, None, _logreg_predict,
+        {"lr": (0.1, 0.03, 0.01), "l2": (1e-4, 1e-2)},
+    ),
+    "gnb": ModelFamily(
+        "gnb", None, None, _gnb_fit, _gnb_predict,
+        {"var_smoothing": (1e-9, 1e-6, 1e-3)},
+    ),
+    "centroid": ModelFamily(
+        "centroid", None, None, _centroid_fit, _centroid_predict,
+        {"shrinkage": (0.0, 0.2, 0.5)},
+    ),
+}
+
+
+# ---------------------------------------------------------------------------
+# jitted training / eval drivers
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("family", "c", "epochs", "hp_static"))
+def _train_gd(key, X, y, family: str, c: int, epochs: int, hp_static: tuple):
+    hp = dict(hp_static)
+    fam = FAMILIES[family]
+    params = fam.init(key, X.shape[1], c, hp)
+    lr = hp["lr"]
+    # Adam
+    grad_fn = jax.grad(lambda p: fam.loss(p, X, y, c, hp))
+    flat0, tree = jax.tree.flatten(params)
+    m0 = [jnp.zeros_like(x) for x in flat0]
+    v0 = [jnp.zeros_like(x) for x in flat0]
+
+    def step(carry, t):
+        flat, m, v = carry
+        g = jax.tree.leaves(grad_fn(jax.tree.unflatten(tree, flat)))
+        m = [0.9 * mi + 0.1 * gi for mi, gi in zip(m, g)]
+        v = [0.999 * vi + 0.001 * gi ** 2 for vi, gi in zip(v, g)]
+        tcorr = t + 1
+        flat = [
+            fi - lr * (mi / (1 - 0.9 ** tcorr)) / (jnp.sqrt(vi / (1 - 0.999 ** tcorr)) + 1e-8)
+            for fi, mi, vi in zip(flat, m, v)
+        ]
+        return (flat, m, v), None
+
+    (flat, _, _), _ = jax.lax.scan(step, (flat0, m0, v0), jnp.arange(epochs))
+    return jax.tree.unflatten(tree, flat)
+
+
+def train_model(key, X, y, family: str, n_classes: int, hp: dict, epochs: int):
+    fam = FAMILIES[family]
+    if fam.fit_closed is not None:
+        return fam.fit_closed(key, X, y, n_classes, hp)
+    return _train_gd(key, X, y, family, n_classes, epochs, tuple(sorted(hp.items())))
+
+
+def predict_model(params, X, family: str):
+    return FAMILIES[family].predict(params, X)
+
+
+def accuracy(params, X, y, family: str) -> float:
+    logits = predict_model(params, X, family)
+    return float((jnp.argmax(logits, axis=1) == y).mean())

@@ -1,0 +1,28 @@
+"""Assigned-architecture registry: ``--arch <id>`` resolves here."""
+from __future__ import annotations
+
+from typing import Dict
+
+from .base import ArchDef, input_specs, decode_operand_specs, smoke_batch
+from . import (
+    whisper_base, zamba2_2p7b, qwen3_8b, llama3_405b, gemma_2b,
+    granite_3_2b, phi3_vision_4p2b, mamba2_130m, qwen2_moe_a2p7b, kimi_k2_1t,
+)
+
+ARCHS: Dict[str, ArchDef] = {
+    mod.ARCH.arch_id: mod.ARCH
+    for mod in (
+        whisper_base, zamba2_2p7b, qwen3_8b, llama3_405b, gemma_2b,
+        granite_3_2b, phi3_vision_4p2b, mamba2_130m, qwen2_moe_a2p7b,
+        kimi_k2_1t,
+    )
+}
+
+
+def get_arch(arch_id: str) -> ArchDef:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; available: {sorted(ARCHS)}")
+    return ARCHS[arch_id]
+
+
+__all__ = ["ARCHS", "get_arch", "ArchDef", "input_specs", "decode_operand_specs", "smoke_batch"]

@@ -1,0 +1,136 @@
+"""Architecture registry scaffolding: ArchDef, input specs, smoke batches.
+
+Every assigned architecture module defines ``ARCH = ArchDef(...)`` with the
+exact published config and a reduced smoke config of the same family.
+``input_specs`` produces ShapeDtypeStruct stand-ins (no allocation) for
+every (arch × shape) cell; ``smoke_batch`` produces small concrete arrays
+for the CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import encdec, lm
+from ..models.config import ModelConfig, ShapeSpec, SHAPES
+
+__all__ = ["ArchDef", "input_specs", "smoke_batch", "decode_operand_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchDef:
+    arch_id: str
+    config: ModelConfig
+    smoke: ModelConfig
+    optimizer: str = "adamw"
+    peak_lr: float = 3e-4
+    grad_accum: int = 1                      # microbatch accumulation, train_4k
+    skip_shapes: Tuple[Tuple[str, str], ...] = ()   # (shape_name, reason)
+    # pure data-parallel over ALL mesh axes (for archs whose inner dims don't
+    # divide the model axis — e.g. mamba2-130m with 24 ssm heads):
+    dp_over_model: bool = False
+
+    def skip_reason(self, shape_name: str) -> Optional[str]:
+        for name, reason in self.skip_shapes:
+            if name == shape_name:
+                return reason
+        return None
+
+
+FULL_ATTN_SKIP = (
+    ("long_500k", "skipped (full-attention arch; 524288-token dense prefill/"
+                  "decode cache is outside the published model family — DESIGN.md §4)"),
+)
+
+
+def _token_struct(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model-input ShapeDtypeStructs for train/prefill batches."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        S_dec = max(8, S // cfg.dec_ratio)
+        specs = {
+            "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16),
+            "tokens": _token_struct((B, S_dec)),
+        }
+        if shape.kind == "train":
+            specs["labels"] = _token_struct((B, S_dec))
+        return specs
+    if cfg.family == "vlm":
+        n_img = cfg.n_img_tokens
+        specs = {
+            "tokens": _token_struct((B, S - n_img)),
+            "patch_embeds": jax.ShapeDtypeStruct((B, n_img, cfg.d_model), jnp.bfloat16),
+        }
+        if shape.kind == "train":
+            specs["labels"] = _token_struct((B, S - n_img))
+        return specs
+    specs = {"tokens": _token_struct((B, S))}
+    if shape.kind == "train":
+        specs["labels"] = _token_struct((B, S))
+    return specs
+
+
+def decode_operand_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """(cache, token, pos) ShapeDtypeStructs for a decode cell.
+
+    The cache holds ``seq_len`` positions; the new token writes at
+    pos = seq_len - 1 and attends over the full window."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        S_dec = max(8, S // cfg.dec_ratio)
+        cache = jax.eval_shape(
+            lambda: encdec.EncDecCache(
+                self_kv=encdec.KVCache(
+                    jnp.zeros((cfg.n_layers, B, S_dec, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16),
+                    jnp.zeros((cfg.n_layers, B, S_dec, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16),
+                ),
+                cross_kv=encdec.KVCache(
+                    jnp.zeros((cfg.n_layers, B, S, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16),
+                    jnp.zeros((cfg.n_layers, B, S, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16),
+                ),
+            )
+        )
+        pos_ref = S_dec - 1
+    else:
+        cache = jax.eval_shape(lambda: lm.init_cache(cfg, B, S))
+        pos_ref = S - 1
+    token = _token_struct((B, 1))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return cache, token, pos, pos_ref
+
+
+def smoke_batch(cfg: ModelConfig, *, batch: int = 2, seq: int = 32, seed: int = 0):
+    """Small concrete batch matching ``input_specs`` layout (train kind)."""
+    rng = np.random.default_rng(seed)
+    V = cfg.vocab_size
+    if cfg.family == "encdec":
+        S_dec = max(8, seq // cfg.dec_ratio)
+        return {
+            "frames": jnp.asarray(
+                rng.normal(0, 1, (batch, seq, cfg.d_model)), jnp.bfloat16
+            ),
+            "tokens": jnp.asarray(rng.integers(0, V, (batch, S_dec)), jnp.int32),
+            "labels": jnp.asarray(rng.integers(0, V, (batch, S_dec)), jnp.int32),
+        }
+    if cfg.family == "vlm":
+        n_img = cfg.n_img_tokens
+        S_text = max(4, seq - n_img)
+        return {
+            "tokens": jnp.asarray(rng.integers(0, V, (batch, S_text)), jnp.int32),
+            "patch_embeds": jnp.asarray(
+                rng.normal(0, 1, (batch, n_img, cfg.d_model)), jnp.bfloat16
+            ),
+            "labels": jnp.asarray(rng.integers(0, V, (batch, S_text)), jnp.int32),
+        }
+    return {
+        "tokens": jnp.asarray(rng.integers(0, V, (batch, seq)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, V, (batch, seq)), jnp.int32),
+    }

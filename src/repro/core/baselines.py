@@ -1,0 +1,400 @@
+"""The paper's 10 baseline DST generators (SubStrat §4.2, Table 3).
+
+Categories:
+  A. Monte-Carlo search  (MC-100 / MC-100K / MC-24H → ``mc_dst`` w/ budget)
+  B. Multi-Arm Bandit    (``mab_dst`` — eps-greedy over row-arms + col-arms)
+  C. Greedy selection    (``greedy_seq_dst``, ``greedy_mult_dst``)
+  D. K-Means clustering  (``km_dst``)
+  E. Information gain    (``ig_rand_dst``, ``ig_km_dst``)
+  F. SubStrat-NF         (wrapper-level: substrat(..., fine_tune=False))
+
+All baselines return ``(row_idx (n,), col_mask (M,))`` like Gen-DST, operate
+on the same factorized ``CodedDataset`` and the same entropy loss, and run
+jitted on device.  Greedy baselines take a per-step candidate pool (the paper
+notes the exact greedy variants exceeded 24 h; the pool bound keeps them
+runnable — set ``pool >= N`` for exact behaviour on small data).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .measures import (
+    CodedDataset,
+    column_counts,
+    column_entropy_from_counts,
+    full_column_entropy,
+    subset_counts,
+)
+from .gen_dst import (
+    DSTResult,
+    _init_population,
+    _entropy_fitness,
+    _rank_desc,
+    default_dst_size,
+)
+
+__all__ = [
+    "mc_dst",
+    "mab_dst",
+    "greedy_seq_dst",
+    "greedy_mult_dst",
+    "km_dst",
+    "ig_rand_dst",
+    "ig_km_dst",
+    "information_gain",
+    "kmeans",
+]
+
+
+def _resolve_nm(coded: CodedDataset, n, m):
+    N, M = coded.codes.shape
+    dn, dm = default_dst_size(N, M)
+    return (dn if n is None else min(n, N)), (dm if m is None else min(m, M))
+
+
+# ---------------------------------------------------------------------------
+# A. Monte-Carlo search
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("n", "m", "budget", "batch", "B", "target"))
+def _mc_jit(key, codes, n, m, budget, batch, B, target):
+    N, M = codes.shape
+    f_ref = full_column_entropy(codes, B).mean()
+    n_batches = max(1, budget // batch)
+
+    def body(carry, key_b):
+        best_f, best_r, best_c = carry
+        rows, cols = _init_population(key_b, N, M, n, m, batch, target)
+        fit = _entropy_fitness(codes, B, f_ref, rows, cols)
+        i = jnp.argmax(fit)
+        better = fit[i] > best_f
+        return (
+            jnp.where(better, fit[i], best_f),
+            jnp.where(better, rows[i], best_r),
+            jnp.where(better, cols[i], best_c),
+        ), fit[i]
+
+    r0, c0 = _init_population(key, N, M, n, m, 2, target)
+    carry0 = (jnp.float32(-jnp.inf), r0[0], c0[0])
+    (best_f, best_r, best_c), hist = jax.lax.scan(
+        body, carry0, jax.random.split(key, n_batches)
+    )
+    return best_r, best_c, best_f, hist, f_ref
+
+
+def mc_dst(key, coded: CodedDataset, n=None, m=None, *, budget: int = 100, batch: int = 50):
+    """Monte-Carlo search over random DSTs with a candidate budget."""
+    n, m = _resolve_nm(coded, n, m)
+    batch = min(batch, budget)
+    r, c, f, hist, f_ref = _mc_jit(
+        key, coded.codes, n, m, budget, batch, coded.max_bins, coded.target_col
+    )
+    return DSTResult(r, c, f, hist, f_ref)
+
+
+# ---------------------------------------------------------------------------
+# B. Multi-Arm Bandit (eps-greedy over row-arms and column-arms)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "m", "rounds", "B", "target")
+)
+def _mab_jit(key, codes, n, m, rounds, B, target, eps):
+    N, M = codes.shape
+    f_ref = full_column_entropy(codes, B).mean()
+    tgt = jnp.zeros((M,), bool).at[target].set(True)
+
+    def pick(key, values, k, forbid_mask=None):
+        """eps-greedy: noisy-argmax over value estimates; eps => pure noise."""
+        kn, ke = jax.random.split(key)
+        noise = jax.random.uniform(kn, values.shape) * 1e-3
+        explore = jax.random.uniform(ke, ()) < eps
+        scores = jnp.where(explore, jax.random.uniform(kn, values.shape), values + noise)
+        if forbid_mask is not None:
+            scores = scores - jnp.where(forbid_mask, jnp.inf, 0.0)
+        return jnp.argsort(-scores)[:k]
+
+    def body(carry, key_t):
+        rv, cv, rn, cn, best_f, best_r, best_c = carry
+        kr, kc = jax.random.split(key_t)
+        r = pick(kr, rv, n).astype(jnp.int32)
+        c_sel = pick(kc, cv, m - 1, forbid_mask=tgt).astype(jnp.int32)
+        cm = tgt.at[c_sel].set(True)
+        h = column_entropy_from_counts(subset_counts(codes, r, B))
+        cmf = cm.astype(jnp.float32)
+        f_d = jnp.sum(h * cmf) / jnp.maximum(cmf.sum(), 1.0)
+        reward = -jnp.abs(f_d - f_ref)
+        # incremental-mean update of the chosen arms
+        rn = rn.at[r].add(1.0)
+        cn2 = cn.at[c_sel].add(1.0)
+        rv = rv.at[r].add((reward - rv[r]) / rn[r])
+        cv = cv.at[c_sel].add((reward - cv[c_sel]) / cn2[c_sel])
+        better = reward > best_f
+        best_f = jnp.where(better, reward, best_f)
+        best_r = jnp.where(better, r, best_r)
+        best_c = jnp.where(better, cm, best_c)
+        return (rv, cv, rn, cn2, best_f, best_r, best_c), reward
+
+    r0, c0 = _init_population(key, N, M, n, m, 2, target)
+    carry0 = (
+        jnp.zeros((N,)), jnp.zeros((M,)), jnp.zeros((N,)), jnp.zeros((M,)),
+        jnp.float32(-jnp.inf), r0[0], c0[0],
+    )
+    carry, hist = jax.lax.scan(body, carry0, jax.random.split(key, rounds))
+    _, _, _, _, best_f, best_r, best_c = carry
+    return best_r, best_c, best_f, hist, f_ref
+
+
+def mab_dst(key, coded: CodedDataset, n=None, m=None, *, rounds: int = 200, eps: float = 0.15):
+    n, m = _resolve_nm(coded, n, m)
+    r, c, f, hist, f_ref = _mab_jit(
+        key, coded.codes, n, m, rounds, coded.max_bins, coded.target_col, eps
+    )
+    return DSTResult(r, c, f, hist, f_ref)
+
+
+# ---------------------------------------------------------------------------
+# C. Greedy selection
+# ---------------------------------------------------------------------------
+
+
+def _greedy_cols(h: jax.Array, f_ref, m: int, target: int):
+    """Greedy column selection given per-column entropies h (M,).
+
+    Iteratively adds the column whose inclusion brings mean(H_sel) closest
+    to f_ref.  Fixed-shape scan over m-1 steps."""
+    M = h.shape[0]
+    cm0 = jnp.zeros((M,), bool).at[target].set(True)
+
+    def step(cm, _):
+        cnt = cm.sum()
+        cur = jnp.sum(h * cm) / jnp.maximum(cnt, 1)
+        # candidate means if each column were added
+        cand = (cur * cnt + h) / (cnt + 1)
+        loss = jnp.abs(cand - f_ref) + jnp.where(cm, jnp.inf, 0.0)
+        j = jnp.argmin(loss)
+        return cm.at[j].set(True), None
+
+    cm, _ = jax.lax.scan(step, cm0, None, length=m - 1)
+    return cm
+
+
+@functools.partial(jax.jit, static_argnames=("n", "m", "pool", "B", "target"))
+def _greedy_seq_jit(key, codes, n, m, pool, B, target):
+    N, M = codes.shape
+    h_full = full_column_entropy(codes, B)
+    f_ref = h_full.mean()
+
+    # --- phase 1: greedy rows (all columns active), incremental histograms --
+    def step(carry, key_t):
+        counts, rows, t = carry
+        cand = jax.random.randint(key_t, (pool,), 0, N, dtype=jnp.int32)
+        cand_rows = jnp.take(codes, cand, axis=0)              # (pool, M)
+        onehot = jax.nn.one_hot(cand_rows, B, dtype=jnp.float32)  # (pool, M, B)
+        new_counts = counts[None] + onehot                     # (pool, M, B)
+        h = column_entropy_from_counts(new_counts)             # (pool, M)
+        loss = jnp.abs(h.mean(axis=-1) - f_ref)                # (pool,)
+        i = jnp.argmin(loss)
+        counts = new_counts[i]
+        rows = rows.at[t].set(cand[i])
+        return (counts, rows, t + 1), loss[i]
+
+    carry0 = (jnp.zeros((M, B), jnp.float32), jnp.zeros((n,), jnp.int32), 0)
+    (counts, rows, _), hist = jax.lax.scan(
+        step, carry0, jax.random.split(key, n)
+    )
+
+    # --- phase 2: greedy columns w.r.t. the selected rows --------------------
+    h_sub = column_entropy_from_counts(counts)
+    cm = _greedy_cols(h_sub, f_ref, m, target)
+    cmf = cm.astype(jnp.float32)
+    f_d = jnp.sum(h_sub * cmf) / jnp.maximum(cmf.sum(), 1.0)
+    return rows, cm, -jnp.abs(f_d - f_ref), hist, f_ref
+
+
+def greedy_seq_dst(key, coded: CodedDataset, n=None, m=None, *, pool: int = 64):
+    n, m = _resolve_nm(coded, n, m)
+    r, c, f, hist, f_ref = _greedy_seq_jit(
+        key, coded.codes, n, m, pool, coded.max_bins, coded.target_col
+    )
+    return DSTResult(r, c, f, hist, f_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "m", "pool", "B", "target"))
+def _greedy_mult_jit(key, codes, n, m, pool, B, target):
+    """Greedy row+column co-selection: each step adds the best row, then the
+    best column (until m columns), measuring loss on the growing subset."""
+    N, M = codes.shape
+    h_full = full_column_entropy(codes, B)
+    f_ref = h_full.mean()
+    tgt = jnp.zeros((M,), bool).at[target].set(True)
+
+    def step(carry, inp):
+        key_t, t = inp
+        counts, rows, cm = carry
+        cand = jax.random.randint(key_t, (pool,), 0, N, dtype=jnp.int32)
+        cand_rows = jnp.take(codes, cand, axis=0)
+        onehot = jax.nn.one_hot(cand_rows, B, dtype=jnp.float32)
+        new_counts = counts[None] + onehot
+        h = column_entropy_from_counts(new_counts)             # (pool, M)
+        cmf = cm.astype(jnp.float32)
+        f_d = jnp.sum(h * cmf[None], axis=-1) / jnp.maximum(cmf.sum(), 1.0)
+        loss = jnp.abs(f_d - f_ref)
+        i = jnp.argmin(loss)
+        counts = new_counts[i]
+        rows = rows.at[t].set(cand[i])
+        # column step: add one column while fewer than m selected
+        h_i = h[i]
+        cnt = cm.sum()
+        cur = jnp.sum(h_i * cmf) / jnp.maximum(cnt, 1)
+        cand_mean = (cur * cnt + h_i) / (cnt + 1)
+        closs = jnp.abs(cand_mean - f_ref) + jnp.where(cm, jnp.inf, 0.0)
+        j = jnp.argmin(closs)
+        cm = jnp.where(cnt < m, cm.at[j].set(True), cm)
+        return (counts, rows, cm), loss[i]
+
+    carry0 = (jnp.zeros((M, B), jnp.float32), jnp.zeros((n,), jnp.int32), tgt)
+    (counts, rows, cm), hist = jax.lax.scan(
+        step, carry0, (jax.random.split(key, n), jnp.arange(n))
+    )
+    h_sub = column_entropy_from_counts(counts)
+    cmf = cm.astype(jnp.float32)
+    f_d = jnp.sum(h_sub * cmf) / jnp.maximum(cmf.sum(), 1.0)
+    return rows, cm, -jnp.abs(f_d - f_ref), hist, f_ref
+
+
+def greedy_mult_dst(key, coded: CodedDataset, n=None, m=None, *, pool: int = 64):
+    n, m = _resolve_nm(coded, n, m)
+    r, c, f, hist, f_ref = _greedy_mult_jit(
+        key, coded.codes, n, m, pool, coded.max_bins, coded.target_col
+    )
+    return DSTResult(r, c, f, hist, f_ref)
+
+
+# ---------------------------------------------------------------------------
+# D. K-Means clustering
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters"))
+def kmeans(key, points: jax.Array, k: int, iters: int = 10):
+    """Lloyd's k-means; returns (centroids (k,d), nearest-point index (k,))."""
+    P, d = points.shape
+    mu = points.std(axis=0) + 1e-9
+    z = (points - points.mean(axis=0)) / mu
+    init_idx = jax.random.choice(key, P, (k,), replace=False)
+    cent = z[init_idx]
+
+    def step(cent, _):
+        d2 = ((z[:, None, :] - cent[None, :, :]) ** 2).sum(-1)   # (P, k)
+        assign = jnp.argmin(d2, axis=1)
+        onehot = jax.nn.one_hot(assign, k, dtype=jnp.float32)    # (P, k)
+        sums = onehot.T @ z                                       # (k, d)
+        cnts = onehot.sum(0)[:, None]
+        new = jnp.where(cnts > 0, sums / jnp.maximum(cnts, 1), cent)
+        return new, None
+
+    cent, _ = jax.lax.scan(step, cent, None, length=iters)
+    d2 = ((z[:, None, :] - cent[None, :, :]) ** 2).sum(-1)
+    nearest = jnp.argmin(d2, axis=0)                              # (k,)
+    return cent, nearest.astype(jnp.int32)
+
+
+def _km_rows(key, coded: CodedDataset, n: int, max_points: int = 16384):
+    """n representative rows = nearest rows to n k-means centroids."""
+    N = coded.values.shape[0]
+    if N > max_points:
+        sel = jax.random.choice(key, N, (max_points,), replace=False)
+        pts = jnp.take(coded.values, sel, axis=0)
+        _, nearest = kmeans(key, pts, n)
+        return jnp.take(sel, nearest).astype(jnp.int32)
+    _, nearest = kmeans(key, coded.values, n)
+    return nearest
+
+
+def _km_cols(key, coded: CodedDataset, m: int, max_dims: int = 2048):
+    """m representative columns = nearest column-vectors to m centroids."""
+    N, M = coded.values.shape
+    tgt = coded.target_col
+    if N > max_dims:
+        sel = jax.random.choice(key, N, (max_dims,), replace=False)
+        colpts = jnp.take(coded.values, sel, axis=0).T            # (M, max_dims)
+    else:
+        colpts = coded.values.T
+    k = min(m - 1, M - 1)
+    _, nearest = kmeans(key, colpts, k)
+    cm = jnp.zeros((M,), bool).at[tgt].set(True).at[nearest].set(True)
+    return cm
+
+
+def km_dst(key, coded: CodedDataset, n=None, m=None):
+    n, m = _resolve_nm(coded, n, m)
+    kr, kc = jax.random.split(key)
+    rows = _km_rows(kr, coded, n)
+    cm = _km_cols(kc, coded, m)
+    f_ref = full_column_entropy(coded.codes, coded.max_bins).mean()
+    h = column_entropy_from_counts(subset_counts(coded.codes, rows, coded.max_bins))
+    cmf = cm.astype(jnp.float32)
+    f_d = jnp.sum(h * cmf) / jnp.maximum(cmf.sum(), 1.0)
+    return DSTResult(rows, cm, -jnp.abs(f_d - f_ref), jnp.zeros((0,)), f_ref)
+
+
+# ---------------------------------------------------------------------------
+# E. Information gain
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("B", "target"))
+def information_gain(codes: jax.Array, B: int, target: int) -> jax.Array:
+    """IG(col j; y) = H(y) - H(y | x_j), from joint code histograms."""
+    N, M = codes.shape
+    y = codes[:, target]
+    # joint counts per column: (M, B, B) would be large; loop via vmap on cols
+    def per_col(cj):
+        flat = cj * B + y
+        joint = jnp.zeros((B * B,), jnp.float32).at[flat].add(1.0).reshape(B, B)
+        pj = joint.sum(axis=1)                       # count of x=v
+        cond = joint / jnp.maximum(pj[:, None], 1e-12)
+        h_cond = -jnp.sum(
+            jnp.where(cond > 0, cond * jnp.log2(jnp.maximum(cond, 1e-30)), 0.0), axis=1
+        )                                            # (B,)
+        return jnp.sum((pj / N) * h_cond)
+    h_y_given_x = jax.vmap(per_col, in_axes=1)(codes)   # (M,)
+    py = jnp.zeros((B,), jnp.float32).at[y].add(1.0) / N
+    h_y = -jnp.sum(jnp.where(py > 0, py * jnp.log2(jnp.maximum(py, 1e-30)), 0.0))
+    ig = h_y - h_y_given_x
+    return ig.at[target].set(-jnp.inf)  # target never selects itself
+
+
+def _ig_cols(coded: CodedDataset, m: int) -> jax.Array:
+    ig = information_gain(coded.codes, coded.max_bins, coded.target_col)
+    top = jnp.argsort(-ig)[: m - 1]
+    return jnp.zeros((coded.num_cols,), bool).at[coded.target_col].set(True).at[top].set(True)
+
+
+def ig_rand_dst(key, coded: CodedDataset, n=None, m=None):
+    n, m = _resolve_nm(coded, n, m)
+    cm = _ig_cols(coded, m)
+    rows = jax.random.choice(key, coded.num_rows, (n,), replace=False).astype(jnp.int32)
+    f_ref = full_column_entropy(coded.codes, coded.max_bins).mean()
+    h = column_entropy_from_counts(subset_counts(coded.codes, rows, coded.max_bins))
+    cmf = cm.astype(jnp.float32)
+    f_d = jnp.sum(h * cmf) / jnp.maximum(cmf.sum(), 1.0)
+    return DSTResult(rows, cm, -jnp.abs(f_d - f_ref), jnp.zeros((0,)), f_ref)
+
+
+def ig_km_dst(key, coded: CodedDataset, n=None, m=None):
+    n, m = _resolve_nm(coded, n, m)
+    cm = _ig_cols(coded, m)
+    rows = _km_rows(key, coded, n)
+    f_ref = full_column_entropy(coded.codes, coded.max_bins).mean()
+    h = column_entropy_from_counts(subset_counts(coded.codes, rows, coded.max_bins))
+    cmf = cm.astype(jnp.float32)
+    f_d = jnp.sum(h * cmf) / jnp.maximum(cmf.sum(), 1.0)
+    return DSTResult(rows, cm, -jnp.abs(f_d - f_ref), jnp.zeros((0,)), f_ref)

@@ -1,0 +1,321 @@
+"""Gen-DST (SubStrat Algorithm 1) — fully vectorized genetic algorithm in JAX.
+
+Genome representation (DESIGN.md §5.2):
+  * rows   : (phi, n) int32 index matrix (a candidate's row subset r).
+  * columns: (phi, M) bool membership mask with exactly ``m`` True entries,
+             the target column always pinned True (paper §3.3: the target
+             column is inserted into every DST and cannot be mutated).
+
+The whole GA — mutation, crossover, royalty-tournament selection, fitness —
+runs on device under one ``lax.scan`` over generations: no host round trips.
+Fitness is the paper's ``f(G) = -|F(D[r,c]) - F(D)|`` with F = dataset
+entropy evaluated via masked histograms (see measures.py / kernels/entropy).
+
+Fixed-shape set operations:
+  * "choose k random members of a mask" and "refill a mask to size m" use
+    rank-of-random-scores tricks (double argsort) — O(M log M), fixed shape.
+  * row-set dedup after crossover sorts the child and replaces duplicate
+    slots with fresh uniform indices (collision probability ~ n^2/N; a
+    surviving duplicate only double-weights one row in the histogram).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .measures import (
+    CodedDataset,
+    column_entropy_from_counts,
+    full_column_entropy,
+    subset_counts,
+    MEASURES,
+)
+
+__all__ = ["GenDSTConfig", "DSTResult", "gen_dst", "default_dst_size", "random_dst"]
+
+
+class GenDSTConfig(NamedTuple):
+    psi: int = 30          # generations
+    phi: int = 100         # population size (must be even)
+    xi: float = 0.025      # mutation probability per candidate
+    alpha: float = 0.05    # royalty (elite) fraction
+    p_rc: float = 0.9      # P(mutate/cross rows) vs columns
+    measure: str = "entropy"
+
+
+class DSTResult(NamedTuple):
+    row_idx: jax.Array     # (n,) int32
+    col_mask: jax.Array    # (M,) bool
+    fitness: jax.Array     # scalar, = -|F(d) - F(D)|
+    history: jax.Array     # (psi,) best fitness per generation
+    f_ref: jax.Array       # F(D)
+
+
+def default_dst_size(N: int, M: int) -> tuple[int, int]:
+    """Paper default DST size: (sqrt(N), 0.25*M), clamped to the data."""
+    n = max(2, min(N, int(round(float(N) ** 0.5))))
+    m = max(2, min(M, int(round(0.25 * M))))
+    return n, m
+
+
+# ---------------------------------------------------------------------------
+# fixed-shape mask utilities
+# ---------------------------------------------------------------------------
+
+
+def _rank_desc(scores: jax.Array) -> jax.Array:
+    """rank[i] = position of scores[i] in descending order (0 = largest)."""
+    order = jnp.argsort(-scores)
+    return jnp.argsort(order)
+
+
+def _sample_members(key, mask: jax.Array, k) -> jax.Array:
+    """Random sub-mask with min(k, |mask|) True entries drawn from ``mask``.
+
+    ``k`` may be a traced scalar."""
+    scores = jax.random.uniform(key, mask.shape) - jnp.where(mask, 0.0, jnp.inf)
+    return mask & (_rank_desc(scores) < k)
+
+
+def _refill_to(key, mask: jax.Array, m, forbidden: Optional[jax.Array] = None) -> jax.Array:
+    """Add random positions outside ``mask`` (and ``forbidden``) until |mask| = m."""
+    deficit = m - mask.sum()
+    blocked = mask if forbidden is None else (mask | forbidden)
+    scores = jax.random.uniform(key, mask.shape) - jnp.where(blocked, jnp.inf, 0.0)
+    add = (~blocked) & (_rank_desc(scores) < deficit)
+    return mask | add
+
+
+def _dedup_rows(key, rows: jax.Array, N: int) -> jax.Array:
+    """Sort a row-index vector and replace duplicate slots with fresh indices."""
+    s = jnp.sort(rows)
+    dup = jnp.concatenate([jnp.zeros((1,), bool), s[1:] == s[:-1]])
+    fresh = jax.random.randint(key, rows.shape, 0, N, dtype=rows.dtype)
+    return jnp.where(dup, fresh, s)
+
+
+# ---------------------------------------------------------------------------
+# population init
+# ---------------------------------------------------------------------------
+
+
+def _init_population(key, N: int, M: int, n: int, m: int, phi: int, target: int):
+    kr, kc, kd = jax.random.split(key, 3)
+    rows = jax.random.randint(kr, (phi, n), 0, N, dtype=jnp.int32)
+    rows = jax.vmap(_dedup_rows, in_axes=(0, 0, None))(
+        jax.random.split(kd, phi), rows, N
+    )
+    tgt = jnp.zeros((M,), bool).at[target].set(True)
+    def one_colmask(k):
+        empty = jnp.zeros((M,), bool)
+        return _refill_to(k, tgt, m, forbidden=empty) | tgt
+    cols = jax.vmap(one_colmask)(jax.random.split(kc, phi))
+    return rows, cols
+
+
+# ---------------------------------------------------------------------------
+# fitness
+# ---------------------------------------------------------------------------
+
+
+def _entropy_fitness(codes, B, f_ref, rows, cols):
+    """Vectorized fitness over the population (entropy fast path)."""
+    def one(r, cm):
+        h = column_entropy_from_counts(subset_counts(codes, r, B))
+        cmf = cm.astype(jnp.float32)
+        f_d = jnp.sum(h * cmf) / jnp.maximum(cmf.sum(), 1.0)
+        return -jnp.abs(f_d - f_ref)
+    return jax.vmap(one)(rows, cols)
+
+
+def _generic_fitness(values, measure_fn, f_ref, rows, cols):
+    def one(r, cm):
+        return -jnp.abs(measure_fn(values, r, cm) - f_ref)
+    return jax.vmap(one)(rows, cols)
+
+
+# ---------------------------------------------------------------------------
+# GA operators
+# ---------------------------------------------------------------------------
+
+
+def _mutate(key, rows, cols, *, N, M, n, m, xi, p_rc, target):
+    phi = rows.shape[0]
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    do_mut = jax.random.uniform(k1, (phi,)) < xi
+    mut_rows = jax.random.uniform(k2, (phi,)) < p_rc
+
+    # --- row mutation: replace one random slot with a fresh index -----------
+    slot = jax.random.randint(k3, (phi,), 0, n)
+    fresh = jax.random.randint(k4, (phi,), 0, N, dtype=rows.dtype)
+    # skip if fresh already a member (keeps |r ∩ r'| = n-1 semantics cheaply)
+    already = (rows == fresh[:, None]).any(axis=1)
+    apply_row = do_mut & mut_rows & (~already)
+    new_rows = rows.at[jnp.arange(phi), slot].set(
+        jnp.where(apply_row, fresh, rows[jnp.arange(phi), slot])
+    )
+
+    # --- column mutation: swap one ON (non-target) for one OFF column -------
+    tgt = jnp.zeros((M,), bool).at[target].set(True)
+    def col_mut(k, cm):
+        ka, kb = jax.random.split(k)
+        off = _sample_members(ka, cm & (~tgt), 1)   # one member to drop
+        on = _sample_members(kb, ~cm, 1)            # one non-member to add
+        ok = (off.sum() == 1) & (on.sum() == 1)
+        return jnp.where(ok, (cm & ~off) | on, cm)
+    mutated_cols = jax.vmap(col_mut)(jax.random.split(k5, phi), cols)
+    apply_col = (do_mut & (~mut_rows))[:, None]
+    new_cols = jnp.where(apply_col, mutated_cols, cols)
+    return new_rows, new_cols
+
+
+def _crossover(key, rows, cols, *, N, M, n, m, p_rc, target):
+    """Pairwise split-and-swap crossover over the whole population."""
+    phi = rows.shape[0]
+    half = phi // 2
+    kp, kt, ks, kra, krb, kca, kcb, kfa, kfb, kda, kdb = jax.random.split(key, 11)
+
+    perm = jax.random.permutation(kp, phi)
+    ra, rb = rows[perm[:half]], rows[perm[half:]]
+    ca, cb = cols[perm[:half]], cols[perm[half:]]
+
+    cross_rows = jax.random.uniform(kt, (half,)) < p_rc
+
+    # --- row crossover: child_ab = s rows of a + (n-s) rows of b ------------
+    s_r = jax.random.randint(ks, (half,), 1, jnp.maximum(n, 2))
+    pa = jax.vmap(lambda k, r: jax.random.permutation(k, r))(
+        jax.random.split(kra, half), ra
+    )
+    pb = jax.vmap(lambda k, r: jax.random.permutation(k, r))(
+        jax.random.split(krb, half), rb
+    )
+    take_a = jnp.arange(n)[None, :] < s_r[:, None]
+    child_ab_rows = jnp.where(take_a, pa, pb)   # s from a, rest from b
+    child_ba_rows = jnp.where(take_a, pb, pa)
+    child_ab_rows = jax.vmap(_dedup_rows, in_axes=(0, 0, None))(
+        jax.random.split(kda, half), child_ab_rows, N
+    )
+    child_ba_rows = jax.vmap(_dedup_rows, in_axes=(0, 0, None))(
+        jax.random.split(kdb, half), child_ba_rows, N
+    )
+
+    # --- column crossover: union of s members of a and (m-s) of b, refill ---
+    tgt = jnp.zeros((M,), bool).at[target].set(True)
+    s_c = jax.random.randint(ks, (half,), 1, jnp.maximum(m - 1, 2))
+    def col_child(k, kf, cma, cmb, s):
+        k1, k2 = jax.random.split(k)
+        u = _sample_members(k1, cma & ~tgt, s) | _sample_members(
+            k2, cmb & ~tgt, m - 1 - s
+        )
+        u = u | tgt
+        return _refill_to(kf, u, m)
+    child_ab_cols = jax.vmap(col_child)(
+        jax.random.split(kca, half), jax.random.split(kfa, half), ca, cb, s_c
+    )
+    child_ba_cols = jax.vmap(col_child)(
+        jax.random.split(kcb, half), jax.random.split(kfb, half), cb, ca, s_c
+    )
+
+    # row-cross keeps own columns; col-cross keeps own rows (paper §3.3)
+    ab_rows = jnp.where(cross_rows[:, None], child_ab_rows, ra)
+    ba_rows = jnp.where(cross_rows[:, None], child_ba_rows, rb)
+    ab_cols = jnp.where(cross_rows[:, None], ca, child_ab_cols)
+    ba_cols = jnp.where(cross_rows[:, None], cb, child_ba_cols)
+
+    new_rows = jnp.concatenate([ab_rows, ba_rows], axis=0)
+    new_cols = jnp.concatenate([ab_cols, ba_cols], axis=0)
+    return new_rows, new_cols
+
+
+def _select(key, rows, cols, fitness, *, alpha):
+    """Royalty tournament: keep top alpha*phi, sample the rest ∝ fitness."""
+    phi = fitness.shape[0]
+    n_elite = max(1, int(round(alpha * phi)))
+    order = jnp.argsort(-fitness)
+    elite = order[:n_elite]
+    # fitness-proportional sampling on shifted fitness (fitness <= 0)
+    w = fitness - fitness.min() + 1e-9
+    drawn = jax.random.choice(key, phi, (phi - n_elite,), replace=True, p=w / w.sum())
+    keep = jnp.concatenate([elite, drawn])
+    return rows[keep], cols[keep]
+
+
+# ---------------------------------------------------------------------------
+# main entry point
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "m", "cfg", "B", "target"),
+)
+def _gen_dst_jit(key, codes, values, n, m, cfg: GenDSTConfig, B, target):
+    N, M = codes.shape
+    if cfg.measure == "entropy":
+        h_full = full_column_entropy(codes, B)
+        f_ref = h_full.mean()
+        fitness_fn = lambda r, c: _entropy_fitness(codes, B, f_ref, r, c)
+    else:
+        measure_fn = MEASURES[cfg.measure]
+        f_ref = measure_fn(values)
+        fitness_fn = lambda r, c: _generic_fitness(values, measure_fn, f_ref, r, c)
+
+    k0, kloop = jax.random.split(key)
+    rows, cols = _init_population(k0, N, M, n, m, cfg.phi, target)
+    fit0 = fitness_fn(rows, cols)
+    best0 = jnp.argmax(fit0)
+    carry0 = (rows, cols, fit0[best0], rows[best0], cols[best0], kloop)
+
+    def generation(carry, _):
+        rows, cols, best_f, best_r, best_c, key = carry
+        key, km, kx, ksel = jax.random.split(key, 4)
+        rows2, cols2 = _mutate(
+            km, rows, cols, N=N, M=M, n=n, m=m, xi=cfg.xi, p_rc=cfg.p_rc, target=target
+        )
+        rows2, cols2 = _crossover(
+            kx, rows2, cols2, N=N, M=M, n=n, m=m, p_rc=cfg.p_rc, target=target
+        )
+        fit = fitness_fn(rows2, cols2)
+        gbest = jnp.argmax(fit)
+        better = fit[gbest] > best_f
+        best_f = jnp.where(better, fit[gbest], best_f)
+        best_r = jnp.where(better, rows2[gbest], best_r)
+        best_c = jnp.where(better, cols2[gbest], best_c)
+        rows3, cols3 = _select(ksel, rows2, cols2, fit, alpha=cfg.alpha)
+        return (rows3, cols3, best_f, best_r, best_c, key), best_f
+
+    carry, history = jax.lax.scan(generation, carry0, None, length=cfg.psi)
+    _, _, best_f, best_r, best_c, _ = carry
+    return best_r, best_c, best_f, history, f_ref
+
+
+def gen_dst(
+    key: jax.Array,
+    coded: CodedDataset,
+    n: Optional[int] = None,
+    m: Optional[int] = None,
+    cfg: GenDSTConfig = GenDSTConfig(),
+) -> DSTResult:
+    """Run Gen-DST on a factorized dataset; returns the best DST found."""
+    N, M = coded.codes.shape
+    dn, dm = default_dst_size(N, M)
+    n = dn if n is None else min(n, N)
+    m = dm if m is None else min(m, M)
+    assert cfg.phi % 2 == 0, "population size must be even (pairwise crossover)"
+    best_r, best_c, best_f, history, f_ref = _gen_dst_jit(
+        key, coded.codes, coded.values, n, m, cfg, coded.max_bins, coded.target_col
+    )
+    return DSTResult(best_r, best_c, best_f, history, f_ref)
+
+
+def random_dst(key, coded: CodedDataset, n: Optional[int] = None, m: Optional[int] = None):
+    """A uniformly random DST (the paper's trivial baseline building block)."""
+    N, M = coded.codes.shape
+    dn, dm = default_dst_size(N, M)
+    n = dn if n is None else min(n, N)
+    m = dm if m is None else min(m, M)
+    rows, cols = _init_population(key, N, M, n, m, 2, coded.target_col)
+    return DSTResult(rows[0], cols[0], jnp.float32(jnp.nan), jnp.zeros((0,)), jnp.float32(jnp.nan))

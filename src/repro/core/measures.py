@@ -1,0 +1,266 @@
+"""Dataset measures for measure-preserving data subsets (SubStrat §3.1).
+
+The paper's primary measure is *dataset entropy* (Def. 3.4): the mean, over
+columns, of the Shannon entropy (log2) of each column's empirical value
+distribution.  (The formula as printed in the paper is notationally sloppy;
+the worked Example 3.5 pins the intended semantics to standard per-column
+Shannon entropy, which we match to 3 decimal places in tests.)
+
+All entropy computation operates on *factorized* datasets: every column is
+mapped once, up front, to dense integer codes in ``[0, n_bins_j)``.
+Categorical / discrete columns keep exact value identity (paper-faithful);
+continuous columns are quantile-binned to at most ``max_bins`` codes (see
+DESIGN.md §5.1 — Def. 3.4 is degenerate on unrepeated floats).
+
+Layout conventions
+------------------
+``codes``   : (N, M) int32 — per-cell code.
+``n_bins``  : (M,)  int32 — number of distinct codes per column.
+``B``       : static int — histogram width (>= max(n_bins)); padding bins
+              always have zero count, so they contribute 0 to the entropy.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "CodedDataset",
+    "factorize",
+    "column_counts",
+    "column_entropy_from_counts",
+    "column_entropy",
+    "dataset_entropy",
+    "subset_counts",
+    "subset_entropy",
+    "full_column_entropy",
+    "measure_pnorm",
+    "measure_mean_correlation",
+    "measure_coeff_variation",
+    "MEASURES",
+]
+
+
+class CodedDataset(NamedTuple):
+    """A factorized dataset ready for entropy computation.
+
+    ``values`` keeps the raw (float) matrix for measures other than entropy
+    and for downstream AutoML training; ``codes`` drives the entropy measure.
+    """
+
+    codes: jax.Array          # (N, M) int32
+    values: jax.Array         # (N, M) float32 (raw, un-normalized)
+    n_bins: jax.Array         # (M,) int32
+    target_col: int           # index of the target column (always in DSTs)
+    max_bins: int             # static histogram width B
+
+    @property
+    def num_rows(self) -> int:
+        return self.codes.shape[0]
+
+    @property
+    def num_cols(self) -> int:
+        return self.codes.shape[1]
+
+
+def factorize(
+    X: np.ndarray,
+    y: Optional[np.ndarray] = None,
+    *,
+    max_bins: int = 256,
+    categorical_threshold: int = 64,
+) -> CodedDataset:
+    """Factorize a raw matrix (optionally with a target column) to codes.
+
+    Columns with <= ``categorical_threshold`` distinct values keep exact value
+    identity (one code per distinct value).  Denser columns are quantile-
+    binned to ``max_bins`` codes.  The target column ``y`` (if given) is
+    appended as the last column and is always treated as categorical.
+    """
+    X = np.asarray(X)
+    cols = [np.asarray(X[:, j]) for j in range(X.shape[1])]
+    if y is not None:
+        cols.append(np.asarray(y))
+    N = X.shape[0]
+    codes = np.empty((N, len(cols)), dtype=np.int32)
+    n_bins = np.empty((len(cols),), dtype=np.int32)
+    values = np.empty((N, len(cols)), dtype=np.float32)
+    for j, col in enumerate(cols):
+        colf = col.astype(np.float64)
+        values[:, j] = colf.astype(np.float32)
+        uniq, inv = np.unique(colf, return_inverse=True)
+        if len(uniq) <= max(categorical_threshold, 2) or (
+            y is not None and j == len(cols) - 1
+        ):
+            codes[:, j] = inv.astype(np.int32)
+            n_bins[j] = len(uniq)
+        else:
+            # quantile binning to at most max_bins codes
+            qs = np.quantile(colf, np.linspace(0.0, 1.0, max_bins + 1)[1:-1])
+            binned = np.searchsorted(qs, colf, side="right")
+            # re-densify (some quantile bins may be empty)
+            uniq_b, inv_b = np.unique(binned, return_inverse=True)
+            codes[:, j] = inv_b.astype(np.int32)
+            n_bins[j] = len(uniq_b)
+    B = int(max(int(n_bins.max()), 2))
+    return CodedDataset(
+        codes=jnp.asarray(codes),
+        values=jnp.asarray(values),
+        n_bins=jnp.asarray(n_bins),
+        target_col=len(cols) - 1 if y is not None else X.shape[1] - 1,
+        max_bins=B,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Histogram + entropy primitives (pure jnp; the Pallas kernel in
+# repro/kernels/entropy mirrors subset_counts' masked-histogram semantics).
+# ---------------------------------------------------------------------------
+
+
+def column_counts(codes: jax.Array, B: int, weights: Optional[jax.Array] = None) -> jax.Array:
+    """Per-column histogram via flat scatter-add.
+
+    codes: (n, M) int32;  weights: optional (n,) f32 row weights.
+    Returns (M, B) float32 counts.
+    """
+    n, M = codes.shape
+    flat = (codes + jnp.arange(M, dtype=codes.dtype)[None, :] * B).ravel()
+    w = jnp.ones((n,), jnp.float32) if weights is None else weights.astype(jnp.float32)
+    w = jnp.broadcast_to(w[:, None], (n, M)).ravel()
+    counts = jnp.zeros((M * B,), jnp.float32).at[flat].add(w)
+    return counts.reshape(M, B)
+
+
+def column_entropy_from_counts(counts: jax.Array) -> jax.Array:
+    """Shannon entropy (log2) per column from (M, B) counts. Zero-safe."""
+    total = jnp.maximum(counts.sum(axis=-1, keepdims=True), 1e-12)
+    p = counts / total
+    h = -jnp.sum(jnp.where(p > 0, p * jnp.log2(jnp.maximum(p, 1e-30)), 0.0), axis=-1)
+    return h  # (M,)
+
+
+def column_entropy(codes: jax.Array, B: int, weights: Optional[jax.Array] = None) -> jax.Array:
+    return column_entropy_from_counts(column_counts(codes, B, weights))
+
+
+def dataset_entropy(
+    codes: jax.Array,
+    B: int,
+    col_mask: Optional[jax.Array] = None,
+    weights: Optional[jax.Array] = None,
+) -> jax.Array:
+    """H(D) (Def. 3.4): mean over (selected) columns of column entropy."""
+    h = column_entropy(codes, B, weights)
+    if col_mask is None:
+        return h.mean()
+    cm = col_mask.astype(jnp.float32)
+    return jnp.sum(h * cm) / jnp.maximum(cm.sum(), 1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("B", "chunk"))
+def full_column_entropy(codes: jax.Array, B: int, chunk: int = 65536) -> jax.Array:
+    """Column entropy of the full dataset, chunked over rows (bounded memory).
+
+    Used once per Gen-DST run to precompute the reference ``F(D)`` terms.
+    """
+    N, M = codes.shape
+    pad = (-N) % chunk
+    padded = jnp.pad(codes, ((0, pad), (0, 0)))
+    w = jnp.pad(jnp.ones((N,), jnp.float32), (0, pad))
+    def body(acc, xs):
+        c, wc = xs
+        return acc + column_counts(c, B, wc), None
+    counts, _ = jax.lax.scan(
+        body,
+        jnp.zeros((M, B), jnp.float32),
+        (padded.reshape(-1, chunk, M), w.reshape(-1, chunk)),
+    )
+    return column_entropy_from_counts(counts)
+
+
+def subset_counts(codes: jax.Array, row_idx: jax.Array, B: int) -> jax.Array:
+    """Histogram of the rows indexed by ``row_idx`` (gather path; single host).
+
+    codes: (N, M); row_idx: (n,) int32. Returns (M, B) counts.
+    """
+    sub = jnp.take(codes, row_idx, axis=0)  # (n, M)
+    return column_counts(sub, B)
+
+
+def subset_entropy(
+    codes: jax.Array,
+    row_idx: jax.Array,
+    col_mask: jax.Array,
+    B: int,
+) -> jax.Array:
+    """H(D[r, c]) for one candidate DST: rows by index, columns by mask."""
+    h = column_entropy_from_counts(subset_counts(codes, row_idx, B))  # (M,)
+    cm = col_mask.astype(jnp.float32)
+    return jnp.sum(h * cm) / jnp.maximum(cm.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Alternative dataset measures (paper §3.1: "other possible dataset measures
+# ... p-norm, mean-correlation, and coefficient of variation").  These run on
+# the raw float values of the subset.
+# ---------------------------------------------------------------------------
+
+
+def _subset_values(values: jax.Array, row_idx: jax.Array, col_mask: jax.Array):
+    sub = jnp.take(values, row_idx, axis=0)  # (n, M)
+    cm = col_mask.astype(jnp.float32)
+    return sub, cm
+
+
+def measure_pnorm(values, row_idx=None, col_mask=None, p: float = 2.0):
+    """Mean per-column p-norm, normalized by row count (scale-comparable)."""
+    if row_idx is None:
+        sub = values
+        cm = jnp.ones((values.shape[1],), jnp.float32) if col_mask is None else col_mask.astype(jnp.float32)
+    else:
+        sub, cm = _subset_values(values, row_idx, col_mask)
+    n = sub.shape[0]
+    norms = (jnp.sum(jnp.abs(sub) ** p, axis=0) / n) ** (1.0 / p)  # (M,)
+    return jnp.sum(norms * cm) / jnp.maximum(cm.sum(), 1.0)
+
+
+def measure_mean_correlation(values, row_idx=None, col_mask=None):
+    """Mean absolute pairwise Pearson correlation among selected columns."""
+    if row_idx is None:
+        sub = values
+        cm = jnp.ones((values.shape[1],), jnp.float32) if col_mask is None else col_mask.astype(jnp.float32)
+    else:
+        sub, cm = _subset_values(values, row_idx, col_mask)
+    mu = sub.mean(axis=0, keepdims=True)
+    sd = sub.std(axis=0, keepdims=True) + 1e-9
+    z = (sub - mu) / sd
+    corr = (z.T @ z) / sub.shape[0]  # (M, M)
+    w = cm[:, None] * cm[None, :]
+    w = w * (1.0 - jnp.eye(values.shape[1]))
+    return jnp.sum(jnp.abs(corr) * w) / jnp.maximum(w.sum(), 1.0)
+
+
+def measure_coeff_variation(values, row_idx=None, col_mask=None):
+    """Mean per-column coefficient of variation sigma/|mu|."""
+    if row_idx is None:
+        sub = values
+        cm = jnp.ones((values.shape[1],), jnp.float32) if col_mask is None else col_mask.astype(jnp.float32)
+    else:
+        sub, cm = _subset_values(values, row_idx, col_mask)
+    mu = sub.mean(axis=0)
+    sd = sub.std(axis=0)
+    cv = sd / (jnp.abs(mu) + 1e-9)
+    return jnp.sum(cv * cm) / jnp.maximum(cm.sum(), 1.0)
+
+
+MEASURES = {
+    "entropy": None,  # handled natively by Gen-DST's histogram fast path
+    "pnorm": measure_pnorm,
+    "mean_correlation": measure_mean_correlation,
+    "coeff_variation": measure_coeff_variation,
+}

@@ -1,0 +1,135 @@
+"""SubStrat — the paper's 3-step subset-based AutoML strategy (§1.1, Fig. 1).
+
+  1. Find a small measure-preserving data subset d (Gen-DST, or any of the
+     baseline DST generators — pluggable via ``dst_fn``).
+  2. Run the AutoML tool on d:  A(d, y) -> M'.
+  3. Fine-tune: run a *restricted, much shorter* AutoML pass on the full D,
+     only considering pipelines with M''s model family:  -> M_sub.
+
+``fine_tune=False`` gives the paper's SubStrat-NF ablation (category F).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from ..automl.engine import AutoMLConfig, AutoMLResult, automl_fit
+from .gen_dst import GenDSTConfig, gen_dst, default_dst_size
+from .measures import CodedDataset, factorize
+
+__all__ = ["SubStratResult", "substrat", "SubStratConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SubStratConfig:
+    gen: GenDSTConfig = GenDSTConfig()
+    n: Optional[int] = None           # DST rows (default sqrt(N))
+    m: Optional[int] = None           # DST cols (default 0.25*M)
+    fine_tune: bool = True
+    sub_automl: AutoMLConfig = AutoMLConfig()
+    # "restricted, much shorter" pass on the full data:
+    ft_automl: AutoMLConfig = AutoMLConfig(n_trials=6, rungs=(60,))
+
+
+@dataclasses.dataclass
+class SubStratResult:
+    final: AutoMLResult               # M_sub (or M' if fine_tune=False)
+    intermediate: AutoMLResult        # M'
+    row_idx: np.ndarray
+    col_idx: np.ndarray               # selected feature columns (no target)
+    dst_fitness: float
+    times: dict                       # per-phase seconds
+    total_time_s: float
+
+
+def substrat(
+    X: np.ndarray,
+    y: np.ndarray,
+    *,
+    key: Optional[jax.Array] = None,
+    config: SubStratConfig = SubStratConfig(),
+    dst_fn: Optional[Callable] = None,
+    coded: Optional[CodedDataset] = None,
+    X_test: Optional[np.ndarray] = None,
+    y_test: Optional[np.ndarray] = None,
+) -> SubStratResult:
+    key = jax.random.key(0) if key is None else key
+    times = {}
+
+    # --- step 0: factorize (once; reusable across runs) ----------------------
+    t0 = time.perf_counter()
+    if coded is None:
+        coded = factorize(X, y)
+    times["factorize_s"] = time.perf_counter() - t0
+
+    # --- step 1: find the measure-preserving DST ------------------------------
+    t0 = time.perf_counter()
+    if dst_fn is None:
+        dst = gen_dst(key, coded, config.n, config.m, config.gen)
+    else:
+        dst = dst_fn(key, coded, config.n, config.m)
+    row_idx = np.asarray(jax.device_get(dst.row_idx))
+    col_mask = np.asarray(jax.device_get(dst.col_mask))
+    times["gen_dst_s"] = time.perf_counter() - t0
+
+    # feature columns of the DST (target column participates in the measure
+    # but is the label, not a feature)
+    col_idx = np.flatnonzero(col_mask)
+    col_idx = col_idx[col_idx != coded.target_col]
+    if len(col_idx) == 0:
+        # degenerate DST (some baselines can select only the target on
+        # tiny m) — fall back to the first feature column
+        col_idx = np.array([0 if coded.target_col != 0 else 1])
+
+    # --- step 2: AutoML on the subset -----------------------------------------
+    t0 = time.perf_counter()
+    X_sub = np.asarray(X)[row_idx][:, col_idx]
+    y_sub = np.asarray(y)[row_idx]
+    if len(np.unique(y_sub)) < 2:
+        # degenerate label draw — patch with a few random extra rows
+        extra = np.random.default_rng(0).permutation(len(y))[:64]
+        X_sub = np.concatenate([X_sub, np.asarray(X)[extra][:, col_idx]])
+        y_sub = np.concatenate([y_sub, np.asarray(y)[extra]])
+    intermediate = automl_fit(X_sub, y_sub, config=config.sub_automl)
+    times["automl_sub_s"] = time.perf_counter() - t0
+
+    # --- step 3: restricted fine-tune on the full data -------------------------
+    if config.fine_tune:
+        t0 = time.perf_counter()
+        final = automl_fit(
+            X, y,
+            config=config.ft_automl,
+            restrict_family=intermediate.spec.family,
+            X_test=X_test, y_test=y_test,
+        )
+        times["fine_tune_s"] = time.perf_counter() - t0
+    else:
+        final = intermediate
+        if X_test is not None:
+            # evaluate M' on the full-width test data restricted to DST columns
+            from ..automl.engine import apply_pipeline
+            Xt = apply_pipeline(
+                intermediate.spec, intermediate.pre_stats, intermediate.feat_idx,
+                np.asarray(X_test, np.float32)[:, col_idx],
+            )
+            from ..automl.models import accuracy
+            import jax.numpy as jnp
+            classes = np.unique(y_sub)
+            yt = jnp.asarray(np.searchsorted(classes, np.asarray(y_test)))
+            final = dataclasses.replace(
+                intermediate, test_acc=accuracy(intermediate.params, Xt, yt, intermediate.spec.family)
+            )
+
+    return SubStratResult(
+        final=final,
+        intermediate=intermediate,
+        row_idx=row_idx,
+        col_idx=col_idx,
+        dst_fitness=float(dst.fitness),
+        times=times,
+        total_time_s=sum(times.values()),
+    )

@@ -1,0 +1,99 @@
+"""Fault tolerance + straggler mitigation primitives.
+
+* ``assign_shards``: deterministic data-shard -> host assignment that
+  rebalances when hosts die or straggle (consistent re-hash: surviving
+  hosts keep their shards; orphaned shards spread round-robin).  Every host
+  computes the same assignment from the same (step, alive-set) — no
+  coordinator needed.
+* ``FaultTolerantLoop``: wraps a train loop with periodic checkpointing and
+  restart-from-latest semantics; ``simulate_failure_at`` is the test hook.
+* ``Heartbeat``: tracks per-host progress timestamps; hosts falling behind
+  the p50 by ``straggler_factor`` are marked stragglers (their shards get
+  re-assigned next step).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .checkpoint import restore_latest, save_checkpoint
+
+__all__ = ["assign_shards", "Heartbeat", "FaultTolerantLoop"]
+
+
+def assign_shards(n_shards: int, alive_hosts: Sequence[int], all_hosts: int):
+    """shard -> host map; stable for surviving hosts, orphans round-robin."""
+    alive = sorted(set(alive_hosts))
+    if not alive:
+        raise ValueError("no alive hosts")
+    assignment = {}
+    orphans = []
+    for s in range(n_shards):
+        home = s % all_hosts
+        if home in alive:
+            assignment[s] = home
+        else:
+            orphans.append(s)
+    for i, s in enumerate(orphans):
+        assignment[s] = alive[i % len(alive)]
+    return assignment
+
+
+@dataclasses.dataclass
+class Heartbeat:
+    n_hosts: int
+    straggler_factor: float = 3.0
+    last_seen: Dict[int, float] = dataclasses.field(default_factory=dict)
+    step_time: Dict[int, float] = dataclasses.field(default_factory=dict)
+
+    def beat(self, host: int, step_duration: float):
+        self.last_seen[host] = time.monotonic()
+        self.step_time[host] = step_duration
+
+    def stragglers(self) -> List[int]:
+        if len(self.step_time) < 2:
+            return []
+        med = float(np.median(list(self.step_time.values())))
+        return [h for h, t in self.step_time.items()
+                if t > self.straggler_factor * max(med, 1e-9)]
+
+    def dead(self, timeout_s: float = 60.0) -> List[int]:
+        now = time.monotonic()
+        return [h for h, t in self.last_seen.items() if now - t > timeout_s]
+
+
+class FaultTolerantLoop:
+    """Checkpointed train loop with restart-from-latest semantics.
+
+    ``step_fn(state, batch) -> (state, metrics)`` must be deterministic given
+    (state, batch) — restart then reproduces the uninterrupted run bit-for-
+    bit (verified in tests/test_fault.py)."""
+
+    def __init__(self, step_fn: Callable, batch_fn: Callable, ckpt_dir,
+                 ckpt_every: int = 10, keep: int = 3):
+        self.step_fn = step_fn
+        self.batch_fn = batch_fn            # step -> batch (deterministic)
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.keep = keep
+
+    def run(self, init_state, n_steps: int,
+            simulate_failure_at: Optional[int] = None):
+        restored = restore_latest(self.ckpt_dir, init_state)
+        if restored is not None:
+            state, start = restored
+            start += 1
+        else:
+            state, start = init_state, 0
+        metrics = None
+        for step in range(start, n_steps):
+            if simulate_failure_at is not None and step == simulate_failure_at:
+                raise RuntimeError(f"simulated node failure at step {step}")
+            batch = self.batch_fn(step)
+            state, metrics = self.step_fn(state, batch)
+            if (step + 1) % self.ckpt_every == 0 or step == n_steps - 1:
+                save_checkpoint(self.ckpt_dir, step, state, keep=self.keep)
+        return state, metrics

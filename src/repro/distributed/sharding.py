@@ -1,0 +1,274 @@
+"""Logical-axis sharding rules (MaxText-style) for params, batches, caches.
+
+Every parameter leaf name maps to a tuple of logical axis names
+(``LOGICAL_AXES``); stacked layer/group dims contribute a leading ``layers``
+axis.  A *rule set* maps logical axes to mesh axes.  Spec resolution
+sanitizes against the actual mesh and leaf shape:
+
+  * an axis is only applied if the dim size is divisible by the mesh axes'
+    total size;
+  * a mesh axis never appears twice in one PartitionSpec (first wins).
+
+Rule sets are chosen per (arch, mode): train uses FSDP over ``data`` for
+big models + TP over ``model``; serve uses 2D weight sharding for the
+>=100B archs so parameters fit without a data-axis replica (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+
+__all__ = [
+    "LOGICAL_AXES", "RuleSet", "rules_for", "param_specs", "batch_specs",
+    "cache_specs", "tree_shardings", "data_axes",
+]
+
+# leaf name -> logical axes (excluding any leading stacked 'layers' dims)
+LOGICAL_AXES: Dict[str, Tuple[Optional[str], ...]] = {
+    # embeddings / heads
+    "embed": ("vocab", "embed"),
+    "lm_head": ("embed", "vocab"),
+    # attention
+    "q": ("embed", "heads", "head_dim"),
+    "k": ("embed", "kv_heads", "head_dim"),
+    "v": ("embed", "kv_heads", "head_dim"),
+    "out": ("heads", "head_dim", "embed"),
+    "q_norm": ("head_dim",),
+    "k_norm": ("head_dim",),
+    # dense mlp
+    "gate": ("embed", "mlp"),
+    "up": ("embed", "mlp"),
+    "down": ("mlp", "embed"),
+    # moe
+    "router": ("embed", "experts"),
+    "e_gate": ("experts", "embed", "mlp"),
+    "e_up": ("experts", "embed", "mlp"),
+    "e_down": ("experts", "mlp", "embed"),
+    "shared_gate": ("embed", None),
+    # ssm
+    "in_proj": ("embed", "ssm_inner"),
+    "out_proj": ("ssm_inner", "embed"),
+    "conv_w": (None, "ssm_conv"),
+    "conv_b": ("ssm_conv",),
+    "A_log": ("ssm_heads",),
+    "D_skip": ("ssm_heads",),
+    "dt_bias": ("ssm_heads",),
+    "gated_norm": ("ssm_inner",),
+    # norms
+    "ln1": ("embed",), "ln2": ("embed",), "ln_x": ("embed",),
+    "norm": ("embed",), "final_norm": ("embed",), "enc_norm": ("embed",),
+}
+
+
+class RuleSet(dict):
+    """logical axis -> mesh axis name | tuple of names | None."""
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def rules_for(cfg: ModelConfig, mesh: Mesh, mode: str) -> RuleSet:
+    """Resolve the rule set for an (arch, mode).  mode: train|prefill|decode."""
+    dax = data_axes(mesh)
+    big = param_count_estimate(cfg) >= 2e9       # FSDP / 2D-sharding threshold
+
+    rules = RuleSet({
+        "batch": dax,
+        "seq": None,
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "experts": "model",
+        "ssm_inner": "model",
+        "ssm_heads": "model",
+        "ssm_conv": "model",
+        "kv_seq": None,
+        "embed": None,
+        "layers": None,
+    })
+    if mode == "train":
+        # FSDP: shard the embed axis of weights over data for big models
+        if big:
+            rules["embed"] = dax if len(dax) == 1 else "data"
+    else:
+        # serving: 2D weight sharding once a TP-only replica stops being
+        # cheap (params/bf16 over the model axis > ~a quarter of HBM)
+        if big:
+            rules["embed"] = "data"
+    return rules
+
+
+def param_count_estimate(cfg: ModelConfig) -> float:
+    """Rough parameter count from the config (for rule thresholds)."""
+    D, L, V = cfg.d_model, cfg.n_layers, cfg.vocab_size
+    emb = V * D * (1 if cfg.tie_embeddings else 2)
+    if cfg.family in ("dense", "vlm"):
+        attn = D * (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.head_dim * 2
+        mlp = D * cfg.d_ff * (3 if cfg.glu else 2)
+        return emb + L * (attn + mlp)
+    if cfg.family == "moe":
+        attn = D * (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.head_dim * 2
+        moe = cfg.n_experts * D * cfg.d_ff * 3 + cfg.n_shared_experts * D * cfg.d_ff * 3
+        return emb + L * (attn + moe)
+    if cfg.family == "ssm":
+        blk = D * (2 * cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state + cfg.ssm_heads)
+        return emb + L * (blk + cfg.d_inner * D)
+    if cfg.family == "hybrid":
+        blk = D * (2 * cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state + cfg.ssm_heads)
+        attn = D * (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.head_dim * 2 + D * cfg.d_ff * 3
+        return emb + L * (blk + cfg.d_inner * D) + attn
+    if cfg.family == "encdec":
+        attn = D * (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.head_dim * 2
+        mlp = D * cfg.d_ff * (3 if cfg.glu else 2)
+        return emb + (cfg.n_enc_layers + L) * (attn + mlp) + L * attn
+    return emb
+
+
+# ---------------------------------------------------------------------------
+# spec resolution
+# ---------------------------------------------------------------------------
+
+
+def _axes_sizes(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, str):
+        return mesh.shape[entry]
+    return int(np.prod([mesh.shape[a] for a in entry]))
+
+
+def _sanitize(spec_axes, shape, mesh: Mesh):
+    """Apply divisibility + no-duplicate-mesh-axis constraints.
+
+    Tuple entries fall back to the longest prefix whose total size divides
+    the dim (e.g. batch=128 over ('data','model')=(16,16) shards over data)."""
+    used = set()
+    out = []
+    for dim, entry in zip(shape, spec_axes):
+        if entry is None:
+            out.append(None)
+            continue
+        names = (entry,) if isinstance(entry, str) else tuple(entry)
+        names = tuple(a for a in names if a in mesh.axis_names and a not in used)
+        while names:
+            size = int(np.prod([mesh.shape[a] for a in names]))
+            if size > 1 and dim % size == 0:
+                break
+            names = names[:-1]
+        if not names:
+            out.append(None)
+            continue
+        used.update(names)
+        out.append(names[0] if len(names) == 1 else names)
+    return P(*out)
+
+
+def _logical_for_leaf(path: Tuple, leaf) -> Tuple[Optional[str], ...]:
+    """Map a pytree path to logical axes, padding leading stacked dims."""
+    name = None
+    for entry in reversed(path):
+        key = getattr(entry, "key", None) or getattr(entry, "name", None)
+        if isinstance(key, str):
+            name = key
+            break
+    if name is None or name not in LOGICAL_AXES:
+        # KVCache NamedTuple fields: k/v handled above; fallback replicate
+        return (None,) * leaf.ndim
+    axes = LOGICAL_AXES[name]
+    pad = leaf.ndim - len(axes)
+    if pad < 0:
+        return (None,) * leaf.ndim
+    return ("layers",) * pad + axes
+
+
+def param_specs(params: Any, cfg: ModelConfig, mesh: Mesh, rules: RuleSet):
+    """PartitionSpec tree for a parameter pytree (works on ShapeDtypeStructs)."""
+    def spec_for(path, leaf):
+        logical = _logical_for_leaf(path, leaf)
+        entries = [rules.get(ax) if ax else None for ax in logical]
+        return _sanitize(entries, leaf.shape, mesh)
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def opt_state_specs(opt_state: Any, params_specs: Any, params: Any, mesh: Mesh):
+    """Optimizer state: flat per-leaf lists aligned with params leaves.
+
+    Adam m/v mirror the param spec; adafactor factored stats drop the
+    reduced dim's sharding."""
+    pspecs = jax.tree.leaves(params_specs, is_leaf=lambda x: isinstance(x, P))
+    pshapes = [p.shape for p in jax.tree.leaves(params)]
+
+    def match(st_tree_list):
+        out = []
+        for st, spec, shape in zip(st_tree_list, pspecs, pshapes):
+            if isinstance(st, dict):   # adafactor leaf state
+                d = {}
+                for k, v in st.items():
+                    if k == "vr":
+                        d[k] = P(*spec[:-1]) if len(spec) > 0 else P()
+                    elif k == "vc":
+                        d[k] = P(*(spec[:-2] + spec[-1:])) if len(spec) >= 2 else P()
+                    else:
+                        d[k] = spec
+                out.append(d)
+            else:
+                out.append(spec)
+        return out
+
+    return {k: match(v) for k, v in opt_state.items()}
+
+
+def batch_specs(batch: Any, mesh: Mesh, rules: RuleSet):
+    """Shard batch dict: leading dim = batch, rest replicated (seq etc.)."""
+    def spec_for(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        entries = [rules.get("batch")] + [None] * (leaf.ndim - 1)
+        return _sanitize(entries, leaf.shape, mesh)
+    return jax.tree_util.tree_map_with_path(spec_for, batch)
+
+
+def cache_specs(cache: Any, cfg: ModelConfig, mesh: Mesh, rules: RuleSet):
+    """KV caches: (L, B, S, K, hd); SSM states: conv (L,B,K-1,Cd), h (L,B,H,P,N)."""
+    def spec_for(path, leaf):
+        if leaf.ndim == 5:    # stacked KV cache or ssm h-state
+            # disambiguate by trailing dim: kv head_dim vs ssm state
+            if cfg.ssm_state and leaf.shape[-1] == cfg.ssm_state and \
+                    leaf.shape[-2] == cfg.ssm_head_dim:
+                entries = [None, rules.get("batch"), rules.get("ssm_heads"), None, None]
+                return _sanitize(entries, leaf.shape, mesh)
+            # KV cache (L, B, S, K, hd): prefer head sharding; if the kv
+            # heads don't divide the model axis, shard the SEQUENCE instead
+            # (flash-decoding style — XLA partial-softmax via psum).
+            kv_ax = rules.get("kv_heads")
+            ax_size = _axes_sizes(mesh, kv_ax)
+            if kv_ax is not None and leaf.shape[3] % max(ax_size, 1) == 0 and ax_size > 1:
+                entries = [None, rules.get("batch"), rules.get("kv_seq"), kv_ax, None]
+            else:
+                entries = [None, rules.get("batch"), "model", None, None]
+            return _sanitize(entries, leaf.shape, mesh)
+        if leaf.ndim == 4:    # ssm conv state (L, B, K-1, Cd)
+            entries = [None, rules.get("batch"), None, rules.get("ssm_conv")]
+            return _sanitize(entries, leaf.shape, mesh)
+        if leaf.ndim == 0:
+            return P()
+        entries = [None, rules.get("batch")] + [None] * (leaf.ndim - 2)
+        return _sanitize(entries, leaf.shape, mesh)
+    return jax.tree_util.tree_map_with_path(spec_for, cache)
+
+
+def tree_shardings(spec_tree: Any, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,41 @@
+"""Public ops for the entropy kernel: jit'd wrappers with a backend switch.
+
+``column_entropy_masked(codes, weights, bins)`` is the Gen-DST fitness
+primitive: per-column entropy of the weighted (membership-masked) rows.
+On TPU set ``use_pallas=True, interpret=False``; CPU tests run the kernel
+body in interpret mode against the ref oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import masked_histogram_pallas
+from .ref import masked_histogram_ref, entropy_from_hist
+
+__all__ = ["masked_histogram", "column_entropy_masked"]
+
+
+def masked_histogram(
+    codes: jax.Array,
+    weights: jax.Array,
+    bins: int,
+    *,
+    use_pallas: bool = False,
+    interpret: bool = True,
+) -> jax.Array:
+    if use_pallas:
+        return masked_histogram_pallas(codes, weights, bins, interpret=interpret)
+    return masked_histogram_ref(codes, weights, bins)
+
+
+def column_entropy_masked(
+    codes: jax.Array,
+    weights: jax.Array,
+    bins: int,
+    **kw,
+) -> jax.Array:
+    """(M,) per-column entropy of the masked rows."""
+    return entropy_from_hist(masked_histogram(codes, weights, bins, **kw))

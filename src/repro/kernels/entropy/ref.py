@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the masked histogram kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["masked_histogram_ref", "entropy_from_hist"]
+
+
+@functools.partial(jax.jit, static_argnames=("bins",))
+def masked_histogram_ref(codes: jax.Array, weights: jax.Array, bins: int) -> jax.Array:
+    """hist[m, b] = sum_n w[n] * [codes[n, m] == b], via flat scatter-add."""
+    N, M = codes.shape
+    flat = (codes + jnp.arange(M, dtype=codes.dtype)[None, :] * bins).ravel()
+    w = jnp.broadcast_to(weights.astype(jnp.float32)[:, None], (N, M)).ravel()
+    return jnp.zeros((M * bins,), jnp.float32).at[flat].add(w).reshape(M, bins)
+
+
+def entropy_from_hist(hist: jax.Array) -> jax.Array:
+    total = jnp.maximum(hist.sum(-1, keepdims=True), 1e-12)
+    p = hist / total
+    return -jnp.sum(jnp.where(p > 0, p * jnp.log2(jnp.maximum(p, 1e-30)), 0.0), -1)

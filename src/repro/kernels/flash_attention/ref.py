@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for flash attention (GQA, optional causal)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def attention_ref(q, k, v, *, causal: bool = True):
+    B, Sq, H, hd = q.shape
+    Kh = k.shape[2]
+    G = H // Kh
+    qg = q.reshape(B, Sq, Kh, G, hd).astype(jnp.float32)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg, k.astype(jnp.float32))
+    logits *= hd ** -0.5
+    if causal:
+        Skv = k.shape[1]
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Skv)[None, :]
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", w, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the SSD scan: the naive per-timestep recurrence."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ssd_scan_ref"]
+
+
+@jax.jit
+def ssd_scan_ref(x, dt, a, bm, cm):
+    """x (BH,S,P), dt (BH,S), a (BH,), bm/cm (BH,S,N) -> y (BH,S,P).
+
+    h_t = exp(dt_t a) h_{t-1} + dt_t x_t B_t^T ;  y_t = h_t C_t."""
+    BH, S, P = x.shape
+    N = bm.shape[-1]
+
+    def per_head(xh, dth, ah, bh, ch):
+        def step(h, inp):
+            xt, dtt, bt, ct = inp
+            h = h * jnp.exp(dtt * ah) + (dtt * xt)[:, None] * bt[None, :]
+            return h, h @ ct
+        _, ys = jax.lax.scan(
+            step, jnp.zeros((P, N), jnp.float32),
+            (xh.astype(jnp.float32), dth.astype(jnp.float32),
+             bh.astype(jnp.float32), ch.astype(jnp.float32)),
+        )
+        return ys
+
+    return jax.vmap(per_head)(x, dt, a, bm, cm).astype(x.dtype)

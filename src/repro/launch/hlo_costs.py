@@ -1,0 +1,257 @@
+"""HLO cost engine: FLOPs / HBM bytes / collective bytes from the compiled,
+partitioned HLO text — with while-loop bodies scaled by their trip counts.
+
+Why not ``compiled.cost_analysis()``: XLA's HloCostAnalysis visits each
+computation once, so ``lax.scan``-over-layers (and gradient-accumulation
+loops) are counted at 1/L of their true cost — verified empirically (a
+126-layer scanned model reported ~1/700 of its analytic FLOPs).  This
+module rebuilds the cost walk over the parsed module:
+
+  * ``while`` ops multiply their body/condition cost by the trip count
+    (extracted from the loop condition's comparison constant);
+  * ``fusion`` ops: operand/result bytes are the real HBM surface (post-
+    fusion traffic — XLA's own convention); FLOPs recurse into the fused
+    computation (dots inside fusions still execute);
+  * collectives get per-class byte accounting with ring (k-1)/k factors,
+    all-reduce counted twice (reduce + broadcast phases).
+
+All numbers are per-device (the partitioned module's shapes are local).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+__all__ = ["analyze_hlo", "HloCost"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+_SHAPE_RE = re.compile(
+    r"\b(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred|c64|c128)"
+    r"\[([0-9,]*)\]"
+)
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_NO_TRAFFIC = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "reshape",
+}
+
+_INSTR_RE = re.compile(
+    r"^(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$"
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[0-9, ]*\})")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    result_type: str
+    opcode: str
+    operands: List[str]
+    line: str
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_stats: Dict[str, Dict[str, float]] = dataclasses.field(default_factory=dict)
+    n_while: int = 0
+    trip_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _type_bytes(type_str: str) -> int:
+    return sum(
+        _shape_elems(dims) * _DTYPE_BYTES[dt]
+        for dt, dims in _SHAPE_RE.findall(type_str)
+    )
+
+
+def _parse(hlo: str):
+    comps: Dict[str, List[Instr]] = {}
+    types: Dict[str, str] = {}
+    entry: Optional[str] = None
+    cur: Optional[str] = None
+    header = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(")
+    for raw in hlo.splitlines():
+        s = raw.strip()
+        if not s:
+            continue
+        if cur is None:
+            if s.endswith("{"):
+                m = header.match(s)
+                if m:
+                    cur = m.group(2)
+                    comps[cur] = []
+                    if m.group(1):
+                        entry = cur
+            continue
+        if s.startswith("}"):
+            cur = None
+            continue
+        m = _INSTR_RE.match(s)
+        if not m:
+            continue
+        name, rtype, opcode, rest = m.groups()
+        # operands: %names before the closing paren of the operand list
+        depth = 1
+        end = len(rest)
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands = re.findall(r"%([\w.\-]+)", rest[:end])
+        instr = Instr(name, rtype, opcode, operands, s)
+        comps[cur].append(instr)
+        types[name] = rtype
+    return comps, types, entry
+
+
+def _trip_count(cond_instrs: List[Instr]) -> int:
+    best = 1
+    for ins in cond_instrs:
+        for m in re.finditer(r"constant\((\d+)\)", ins.line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(ins: Instr, types: Dict[str, str]) -> float:
+    result_elems = sum(_shape_elems(d) for _, d in _SHAPE_RE.findall(ins.result_type))
+    if not ins.operands:
+        return 0.0
+    lhs_type = types.get(ins.operands[0], "")
+    lhs_shapes = _SHAPE_RE.findall(lhs_type)
+    if not lhs_shapes:
+        return 0.0
+    lhs_dims = [int(x) for x in lhs_shapes[0][1].split(",") if x]
+    cm = _CONTRACT_RE.search(ins.line)
+    if cm is None:
+        k = lhs_dims[-1] if lhs_dims else 1
+    else:
+        k = 1
+        for i in (int(x) for x in cm.group(1).split(",") if x):
+            if i < len(lhs_dims):
+                k *= lhs_dims[i]
+    return 2.0 * result_elems * k
+
+
+def _conv_flops(ins: Instr, types: Dict[str, str]) -> float:
+    result_elems = sum(_shape_elems(d) for _, d in _SHAPE_RE.findall(ins.result_type))
+    if len(ins.operands) < 2:
+        return 0.0
+    kshapes = _SHAPE_RE.findall(types.get(ins.operands[1], ""))
+    kelems = _shape_elems(kshapes[0][1]) if kshapes else 1
+    # rough: per output element, one MAC per kernel element / out-features
+    kdims = [int(x) for x in kshapes[0][1].split(",") if x] if kshapes else [1]
+    out_feat = max(kdims) if kdims else 1
+    return 2.0 * result_elems * max(1, kelems // max(out_feat, 1))
+
+
+def _op_bytes(ins: Instr, types: Dict[str, str]) -> float:
+    b = _type_bytes(ins.result_type)
+    for o in ins.operands:
+        b += _type_bytes(types.get(o, ""))
+    return float(b)
+
+
+def analyze_hlo(hlo: str) -> HloCost:
+    comps, types, entry = _parse(hlo)
+    if entry is None:
+        entry = next(iter(comps))
+    cost = HloCost(
+        collective_stats={c: {"count": 0.0, "bytes": 0.0} for c in COLLECTIVES}
+    )
+    visiting: set = set()
+
+    def walk(comp: str, factor: float, surface: bool):
+        if comp not in comps or comp in visiting:
+            return
+        visiting.add(comp)
+        for ins in comps[comp]:
+            op = ins.opcode
+            if op == "while":
+                cost.n_while += 1
+                bm = re.search(r"body=%?([\w.\-]+)", ins.line)
+                cm = re.search(r"condition=%?([\w.\-]+)", ins.line)
+                trips = _trip_count(comps.get(cm.group(1), [])) if cm else 1
+                if bm:
+                    cost.trip_counts[bm.group(1)] = trips
+                    walk(bm.group(1), factor * trips, surface)
+                if cm:
+                    walk(cm.group(1), factor * trips, False)
+                continue
+            if op == "fusion":
+                if surface:
+                    cost.bytes += factor * _op_bytes(ins, types)
+                fm = re.search(r"calls=%?([\w.\-]+)", ins.line)
+                if fm:
+                    walk(fm.group(1), factor, False)
+                continue
+            if op in ("call", "conditional"):
+                for cc in re.findall(r"(?:to_apply|branch_computations|calls)="
+                                     r"%?([\w.\-]+)", ins.line):
+                    walk(cc, factor, surface)
+                continue
+            if op == "dot":
+                cost.flops += factor * _dot_flops(ins, types)
+                if surface:
+                    cost.bytes += factor * _op_bytes(ins, types)
+                continue
+            if op == "convolution":
+                cost.flops += factor * _conv_flops(ins, types)
+                if surface:
+                    cost.bytes += factor * _op_bytes(ins, types)
+                continue
+            base = op.replace("-start", "")
+            if base in COLLECTIVES:
+                if op.endswith("-done"):
+                    continue
+                nbytes = _type_bytes(ins.result_type)
+                k = 1
+                g2 = _GROUPS_V2_RE.search(ins.line)
+                if g2:
+                    k = int(g2.group(2))
+                else:
+                    g = _GROUPS_RE.search(ins.line)
+                    if g:
+                        k = max(1, g.group(1).count(",") + 1)
+                if base == "all-reduce":
+                    eff = 2.0 * nbytes * (k - 1) / max(k, 1)
+                elif base == "collective-permute":
+                    eff = float(nbytes)
+                else:
+                    eff = nbytes * (k - 1) / max(k, 1)
+                cost.collective_stats[base]["count"] += factor
+                cost.collective_stats[base]["bytes"] += factor * eff
+                cost.collective_bytes += factor * eff
+                if surface:
+                    cost.bytes += factor * nbytes
+                continue
+            if surface and op not in _NO_TRAFFIC:
+                cost.bytes += factor * _op_bytes(ins, types)
+        visiting.discard(comp)
+
+    walk(entry, 1.0, True)
+    return cost

@@ -1,0 +1,96 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [options]``.
+
+Wires together the whole stack: arch registry -> data pipeline (with
+optional SubStrat corpus-subset selection) -> sharded train step ->
+fault-tolerant loop with async checkpoints.
+
+On this CPU container use ``--preset cpu-small`` (reduced config); the full
+configs are exercised by the dry-run (``repro.launch.dryrun``).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.data.pipeline import ShardedLoader, SyntheticCorpus, select_corpus_subset
+from repro.distributed.checkpoint import CheckpointManager, restore_latest
+from repro.train.optimizer import make_optimizer, warmup_cosine
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--preset", choices=["cpu-small", "full"], default="cpu-small")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=None)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--corpus-seqs", type=int, default=2048)
+    ap.add_argument("--substrat-subset", type=int, default=0,
+                    help="if >0, train on an entropy-preserving corpus subset "
+                         "of this many sequences (SubStrat step 1)")
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    arch = ARCHS[args.arch]
+    cfg = arch.smoke if args.preset == "cpu-small" else arch.config
+    if cfg.family in ("encdec", "vlm"):
+        raise SystemExit(f"{args.arch}: use examples/ drivers for multimodal "
+                         "input plumbing; train.py covers token-LM archs")
+
+    corpus = SyntheticCorpus(args.corpus_seqs, args.seq + 1, cfg.vocab_size, seed=0)
+    subset = None
+    if args.substrat_subset:
+        t0 = time.time()
+        subset = select_corpus_subset(corpus, args.substrat_subset,
+                                      sample_rows=min(args.corpus_seqs, 4096))
+        print(f"[substrat] selected {len(subset)} / {len(corpus)} sequences "
+              f"in {time.time()-t0:.1f}s")
+    loader = ShardedLoader(corpus, args.batch, seed=0, subset=subset)
+
+    opt = make_optimizer(
+        arch.optimizer,
+        warmup_cosine(args.lr or arch.peak_lr, warmup=20, total=args.steps),
+    )
+    state = init_train_state(jax.random.key(0), cfg, opt)
+    step_fn = jax.jit(make_train_step(cfg, opt, accum_steps=args.accum),
+                      donate_argnums=(0,))
+
+    ckpt = CheckpointManager(Path(args.ckpt_dir) / args.arch)
+    restored = restore_latest(ckpt.dir, state)
+    start = 0
+    if restored is not None:
+        state, start = restored
+        start += 1
+        loader.restore(type(loader.state())(start))
+        print(f"[ckpt] resumed from step {start - 1}")
+
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in loader.next().items()}
+        state, metrics = step_fn(state, batch)
+        if (step + 1) % args.log_every == 0 or step == start:
+            dt = (time.time() - t0) / max(step - start + 1, 1)
+            print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} {dt*1e3:.0f} ms/step",
+                  flush=True)
+        if (step + 1) % args.ckpt_every == 0:
+            ckpt.save_async(step, state)
+    ckpt.wait()
+    print(f"done: {args.steps - start} steps in {time.time()-t0:.1f}s")
+    return state
+
+
+if __name__ == "__main__":
+    main()

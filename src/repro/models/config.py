@@ -1,0 +1,106 @@
+"""Unified model configuration covering all assigned architecture families."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["ModelConfig", "ShapeSpec", "SHAPES"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense | encdec | ssm | hybrid | moe | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    vocab_size: int = 32000
+    act: str = "silu"               # silu (SwiGLU) | gelu (GeGLU / plain)
+    glu: bool = True
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    # ssm (mamba2 / hybrid)
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    ssm_groups: int = 1
+    # hybrid (zamba2): shared attention block applied every k ssm blocks
+    shared_attn_every: int = 0
+    # moe
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    moe_top_k: int = 0
+    capacity_factor: float = 1.25
+    # encdec (whisper)
+    n_enc_layers: int = 0
+    dec_ratio: int = 8              # decoder_len = enc_len // dec_ratio
+    max_dec_len: int = 4096
+    # vlm
+    n_img_tokens: int = 0
+    # numerics / execution
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    remat: bool = True
+    scan_layers: bool = True
+    attn_impl: str = "xla"          # xla | pallas | pallas_interpret
+    ssm_impl: str = "xla"           # xla | pallas | pallas_interpret
+    logit_dtype: str = "float32"
+    # optional residual-activation sharding constraint (tuple form of a
+    # PartitionSpec, e.g. (('data',), 'model', None) = sequence-sharded
+    # residuals between layers).  () = off.  Set by the launcher per mesh.
+    act_shard_spec: tuple = ()
+    # pin the MoE dispatch buffers (E, C, D) to expert-parallel sharding over
+    # the 'model' axis (set by the launcher when n_experts % model == 0).
+    moe_ep_shard: bool = False
+    # route the big projections through the custom-VJP matmul that computes
+    # weight grads in param dtype directly into their (FSDP x TP) layout
+    # (reduce-scatter instead of full-shape f32 all-reduce) — launcher-set.
+    grad_shard: bool = False
+    mesh_data_size: int = 0        # launcher-set with grad_shard (for
+    mesh_model_size: int = 0       # per-dim divisibility checks)
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def params_dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def q_per_kv(self) -> int:
+        return max(1, self.n_heads // max(self.n_kv_heads, 1))
+
+    @property
+    def d_inner(self) -> int:       # ssm inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                       # train | prefill | decode
+    # decode: seq_len = existing KV/state context length, 1 new token.
+
+
+SHAPES: Tuple[ShapeSpec, ...] = (
+    ShapeSpec("train_4k", 4096, 256, "train"),
+    ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    ShapeSpec("decode_32k", 32768, 128, "decode"),
+    ShapeSpec("long_500k", 524288, 1, "decode"),
+)

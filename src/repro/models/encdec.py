@@ -1,0 +1,178 @@
+"""Whisper-style encoder-decoder backbone.
+
+The audio conv frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed frame embeddings (B, S_enc, D).  The encoder applies
+bidirectional attention over frames (+ sinusoidal positions); the decoder is
+a causal LM with cross-attention into the encoder states.
+
+Convention for the mechanical shape grid (DESIGN.md §4): for a cell with
+sequence length S, encoder length = S and decoder length = S // dec_ratio
+(train / prefill).  Decode = 1 new decoder token attending to a cached
+decoder prefix and S cached encoder states.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (
+    KVCache, attention, init_attn, init_mlp, mlp, rms_norm, sinusoidal_pos,
+)
+
+__all__ = ["init_params", "forward", "prefill", "decode", "EncDecCache"]
+
+
+class EncDecCache(NamedTuple):
+    self_kv: KVCache     # (L, B, S_dec_max, K, hd)
+    cross_kv: KVCache    # (L, B, S_enc, K, hd) — precomputed at prefill
+
+
+def _init_enc_layer(key, cfg: ModelConfig):
+    ka, km = jax.random.split(key)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), cfg.params_dtype),
+        "attn": init_attn(ka, cfg),
+        "ln2": jnp.zeros((cfg.d_model,), cfg.params_dtype),
+        "mlp": init_mlp(km, cfg),
+    }
+
+
+def _init_dec_layer(key, cfg: ModelConfig):
+    ka, kc, km = jax.random.split(key, 3)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), cfg.params_dtype),
+        "self_attn": init_attn(ka, cfg),
+        "ln_x": jnp.zeros((cfg.d_model,), cfg.params_dtype),
+        "cross_attn": init_attn(kc, cfg),
+        "ln2": jnp.zeros((cfg.d_model,), cfg.params_dtype),
+        "mlp": init_mlp(km, cfg),
+    }
+
+
+def init_params(key, cfg: ModelConfig):
+    ke, kenc, kdec, kh = jax.random.split(key, 4)
+    D, V = cfg.d_model, cfg.vocab_size
+    enc_keys = jax.random.split(kenc, cfg.n_enc_layers)
+    dec_keys = jax.random.split(kdec, cfg.n_layers)
+    return {
+        "embed": jax.random.normal(ke, (V, D), cfg.params_dtype) * D ** -0.5,
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+        "enc_norm": jnp.zeros((D,), cfg.params_dtype),
+        "final_norm": jnp.zeros((D,), cfg.params_dtype),
+        "lm_head": jax.random.normal(kh, (D, V), cfg.params_dtype) * D ** -0.5,
+    }
+
+
+def _encode(params, frames, cfg: ModelConfig):
+    """frames: (B, S_enc, D) stub embeddings -> encoder states."""
+    from jax.sharding import PartitionSpec as _P
+    B, S, D = frames.shape
+    x = frames.astype(cfg.compute_dtype)
+    x = x + sinusoidal_pos(S, D, x.dtype)[None]
+
+    def body(x, lp):
+        if cfg.act_shard_spec:
+            x = jax.lax.with_sharding_constraint(x, _P(*cfg.act_shard_spec))
+        h, _ = attention(
+            lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps), cfg,
+            causal=False, use_rope=False,
+        )
+        x = x + h
+        x = x + mlp(lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps), cfg)
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_kv(params, enc, cfg: ModelConfig):
+    """Precompute per-layer cross-attention K/V from encoder states."""
+    def body(_, lp):
+        k = jnp.einsum("bsd,dhk->bshk", enc, lp["cross_attn"]["k"].astype(enc.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", enc, lp["cross_attn"]["v"].astype(enc.dtype))
+        return None, KVCache(k, v)
+    _, kv = jax.lax.scan(body, None, params["dec_layers"])
+    return kv
+
+
+def _dec_stack(params, x, cfg, enc=None, cross=None, self_caches=None, pos=None,
+               collect_kv=False):
+    """Decoder stack; either fresh encoder states (train) or cached cross K/V."""
+
+    from jax.sharding import PartitionSpec as _P
+
+    def body(x, xs):
+        lp, cross_l, self_c = xs
+        if cfg.act_shard_spec:
+            x = jax.lax.with_sharding_constraint(x, _P(*cfg.act_shard_spec))
+        h, new_self = attention(
+            lp["self_attn"], rms_norm(x, lp["ln1"], cfg.norm_eps), cfg,
+            causal=True, cache=self_c, pos=pos, use_rope=True,
+            collect_kv=collect_kv,
+        )
+        x = x + h
+        if cross_l is not None:
+            h, _ = attention(
+                lp["cross_attn"], rms_norm(x, lp["ln_x"], cfg.norm_eps), cfg,
+                causal=False, precomputed_kv=cross_l,
+            )
+        else:
+            h, _ = attention(
+                lp["cross_attn"], rms_norm(x, lp["ln_x"], cfg.norm_eps), cfg,
+                causal=False, kv_x=enc, use_rope=False,
+            )
+        x = x + h
+        x = x + mlp(lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps), cfg)
+        return x, new_self
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    return jax.lax.scan(body, x, (params["dec_layers"], cross, self_caches))
+
+
+def forward(params, batch: Dict[str, jax.Array], cfg: ModelConfig):
+    """Training forward: frames + decoder tokens -> decoder logits."""
+    enc = _encode(params, batch["frames"], cfg)
+    x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(cfg.compute_dtype)
+    x, _ = _dec_stack(params, x, cfg, enc=enc)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return jnp.einsum(
+        "bsd,dv->bsv", x, params["lm_head"].astype(x.dtype)
+    ).astype(cfg.logit_dtype)
+
+
+def prefill(params, batch, cfg: ModelConfig, max_dec_len: Optional[int] = None):
+    """Encode frames, prefill the decoder prompt.  Returns (logits, cache)."""
+    enc = _encode(params, batch["frames"], cfg)
+    cross = _cross_kv(params, enc, cfg)
+    tokens = batch["tokens"]
+    B, S_dec = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    x, self_kv = _dec_stack(params, x, cfg, cross=cross, collect_kv=True)
+    max_dec_len = max_dec_len or cfg.max_dec_len
+    if max_dec_len > S_dec:
+        pad = ((0, 0), (0, 0), (0, max_dec_len - S_dec), (0, 0), (0, 0))
+        self_kv = KVCache(jnp.pad(self_kv.k, pad), jnp.pad(self_kv.v, pad))
+    x = rms_norm(x[:, -1:, :], params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x, params["lm_head"].astype(x.dtype)
+    ).astype(cfg.logit_dtype)
+    return logits, EncDecCache(self_kv, cross)
+
+
+def decode(params, cache: EncDecCache, token, pos, cfg: ModelConfig):
+    x = jnp.take(params["embed"], token, axis=0).astype(cfg.compute_dtype)
+    x, self_kv = _dec_stack(
+        params, x, cfg, cross=cache.cross_kv, self_caches=cache.self_kv, pos=pos
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x, params["lm_head"].astype(x.dtype)
+    ).astype(cfg.logit_dtype)
+    return logits, EncDecCache(self_kv, cache.cross_kv)

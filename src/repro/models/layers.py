@@ -1,0 +1,319 @@
+"""Shared neural building blocks: norms, rotary embeddings, attention, MLP.
+
+Conventions
+-----------
+* All weights carry explicit semantic axis names via the ``LOGICAL_AXES``
+  table in ``repro/distributed/sharding.py`` (keyed by parameter leaf name).
+* Attention weights use unflattened head layout: wq (D, H, hd), wo (H, hd, D)
+  — this keeps the TP axis (heads) explicit for the SPMD partitioner.
+* KV caches are (B, S_max, K, hd) per layer, time-indexed by ``pos``.
+* Compute runs in cfg.dtype (bf16), accumulation and softmax in f32.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .pmm import matmul as _pmm
+
+
+def _sanitize_dw_spec(cfg: ModelConfig, w, dw_spec):
+    """Drop spec axes whose mesh size doesn't divide the weight dim."""
+    sizes = {"data": cfg.mesh_data_size, "model": cfg.mesh_model_size}
+    out = []
+    for dim, ax in zip(w.shape, dw_spec):
+        sz = sizes.get(ax, 1) if isinstance(ax, str) else 1
+        out.append(ax if (ax is not None and sz > 1 and dim % sz == 0) else None)
+    return tuple(out)
+
+
+def _proj(x, w, subscripts: str, cfg: ModelConfig, dw_spec):
+    """Weight projection: custom-VJP matmul with grad sharding when enabled."""
+    if cfg.grad_shard:
+        meta = (_sanitize_dw_spec(cfg, w, dw_spec),
+                cfg.mesh_data_size, cfg.mesh_model_size,
+                cfg.act_shard_spec or None)
+        return _pmm(x, w.astype(x.dtype), subscripts, meta)
+    return jnp.einsum(subscripts, x, w.astype(x.dtype))
+
+__all__ = [
+    "rms_norm", "layer_norm", "rotary", "apply_rope", "init_attn", "attention",
+    "init_mlp", "mlp", "init_dense_layer", "dense_layer",
+    "KVCache", "sinusoidal_pos",
+]
+
+
+def rms_norm(x, scale, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(axis=-1, keepdims=True)
+    var = x32.var(axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(x.dtype)
+
+
+def sinusoidal_pos(S: int, D: int, dtype=jnp.float32):
+    pos = jnp.arange(S)[:, None].astype(jnp.float32)
+    dim = jnp.arange(D // 2)[None, :].astype(jnp.float32)
+    angle = pos / jnp.power(10000.0, 2 * dim / D)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1).astype(dtype)
+
+
+def rotary(positions, head_dim: int, theta: float):
+    """cos/sin tables for given integer positions: (..., head_dim//2)."""
+    dim = jnp.arange(head_dim // 2, dtype=jnp.float32)
+    inv_freq = 1.0 / (theta ** (2 * dim / head_dim))
+    angles = positions[..., None].astype(jnp.float32) * inv_freq
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, hd); cos/sin: (B, S, hd//2) or (S, hd//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    else:
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1
+    ).astype(x.dtype)
+
+
+class KVCache(NamedTuple):
+    k: jax.Array   # (B, S_max, K, hd)
+    v: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def init_attn(key, cfg: ModelConfig, d_model: Optional[int] = None):
+    D = d_model or cfg.d_model
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = D ** -0.5
+    p = {
+        "q": jax.random.normal(kq, (D, H, hd), cfg.params_dtype) * s,
+        "k": jax.random.normal(kk, (D, K, hd), cfg.params_dtype) * s,
+        "v": jax.random.normal(kv, (D, K, hd), cfg.params_dtype) * s,
+        "out": jax.random.normal(ko, (H, hd, D), cfg.params_dtype) * ((H * hd) ** -0.5),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), cfg.params_dtype)
+        p["k_norm"] = jnp.zeros((hd,), cfg.params_dtype)
+    return p
+
+
+def _sdpa_q_chunked(q, k, v, *, causal, q_offset, kv_len, chunk: int):
+    """Exact attention with the query axis processed in chunks (lax.map):
+    bounds live score memory to (B, H, chunk, Skv) — the XLA-level analogue
+    of the Pallas flash kernel, used for long prefill (no grad needed)."""
+    B, Sq, H, hd = q.shape
+    nc = Sq // chunk
+    qc = jnp.moveaxis(q.reshape(B, nc, chunk, H, hd), 1, 0)
+
+    def one(args):
+        i, qq = args
+        return _sdpa(qq, k, v, causal=causal, q_offset=q_offset + i * chunk,
+                     kv_len=kv_len, q_chunk=None)
+
+    outs = jax.lax.map(one, (jnp.arange(nc), qc))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H, hd)
+
+
+def _sdpa(q, k, v, *, causal: bool, q_offset=0, kv_len: Optional[jax.Array] = None,
+          q_chunk: Optional[int] = None):
+    """Grouped-query scaled dot-product attention, f32 softmax.
+
+    q: (B, Sq, H, hd);  k, v: (B, Skv, K, hd).  H = G*K.
+    ``q_offset``: absolute position of q[0] (for causal masking vs a cache).
+    ``kv_len``: optional valid prefix length of k/v (cache may be padded).
+    """
+    B, Sq, H, hd = q.shape
+    if q_chunk and Sq > q_chunk and Sq % q_chunk == 0:
+        return _sdpa_q_chunked(
+            q, k, v, causal=causal, q_offset=q_offset, kv_len=kv_len, chunk=q_chunk
+        )
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, Sq, K, G, hd)
+    # pet=f32 keeps the operands bf16 in HLO (no hoisted full-cache upcast)
+    # while accumulating the scores in f32
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32)
+    logits *= hd ** -0.5
+    Skv = k.shape[1]
+    if causal:
+        qpos = jnp.arange(Sq) + q_offset
+        kpos = jnp.arange(Skv)
+        mask = qpos[:, None] >= kpos[None, :]
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    if kv_len is not None:
+        valid = jnp.arange(Skv)[None, :] < kv_len[:, None]      # (B, Skv)
+        logits = jnp.where(valid[:, None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", w, v)
+    return o.reshape(B, Sq, H, hd)
+
+
+def attention(
+    p,
+    x,
+    cfg: ModelConfig,
+    *,
+    causal: bool = True,
+    cache: Optional[KVCache] = None,
+    pos: Optional[jax.Array] = None,        # scalar: write offset into cache
+    kv_x: Optional[jax.Array] = None,       # cross-attention source
+    use_rope: bool = True,
+    precomputed_kv: Optional[KVCache] = None,
+    collect_kv: bool = False,               # prefill: return fresh K/V as cache
+):
+    """Multi-purpose attention: self/cross, train/prefill/decode.
+
+    Returns (out, new_cache_or_None).
+    """
+    B, S, D = x.shape
+    q = _proj(x, p["q"], "bsd,dhk->bshk", cfg, ("data", "model", None))
+    if precomputed_kv is not None:          # cross-attn with cached enc K/V
+        k, v = precomputed_kv.k, precomputed_kv.v
+        new_cache = None
+    else:
+        src = x if kv_x is None else kv_x
+        kv_spec = ("data", None, None)
+        k = _proj(src, p["k"], "bsd,dhk->bshk", cfg, kv_spec)
+        v = _proj(src, p["v"], "bsd,dhk->bshk", cfg, kv_spec)
+        new_cache = None
+
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        if precomputed_kv is None:
+            k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+
+    if use_rope and precomputed_kv is None and kv_x is None:
+        offset = 0 if pos is None else pos
+        qpos = jnp.arange(S) + offset
+        cos, sin = rotary(qpos, cfg.head_dim, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    # Pallas flash-attention backend (TPU target; interpret mode on CPU):
+    # the no-cache causal self-attention path (training fwd)
+    if (
+        cfg.attn_impl.startswith("pallas") and cache is None
+        and precomputed_kv is None and kv_x is None and causal
+        and S % 128 == 0 and k.shape[1] % 128 == 0
+    ):
+        from ..kernels.flash_attention.kernel import flash_attention_pallas
+        o = flash_attention_pallas(
+            q, k, v, causal=True,
+            interpret=(cfg.attn_impl == "pallas_interpret"),
+        )
+        out = _proj(o, p["out"], "bshk,hkd->bsd", cfg, ("model", None, "data"))
+        return out, new_cache
+
+    kv_len = None
+    q_offset = 0
+    if cache is not None and precomputed_kv is None:
+        # write the new K/V into the cache at ``pos`` and attend to the prefix
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), pos, axis=1)
+        new_cache = KVCache(k_cache, v_cache)
+        k, v = k_cache, v_cache
+        kv_len = jnp.broadcast_to(pos + S, (B,))
+        q_offset = pos
+
+    if collect_kv and cache is None and precomputed_kv is None:
+        # prefill: the freshly-computed (post-rope) K/V *are* the cache —
+        # no zero-init buffers, no dynamic-update-slice copies.  Cache dtype
+        # follows the compute dtype (bf16 in production, f32 in exact tests).
+        cache_dtype = jnp.bfloat16 if x.dtype == jnp.bfloat16 else x.dtype
+        new_cache = KVCache(k.astype(cache_dtype), v.astype(cache_dtype))
+
+    # long-prefill / encoder paths (no grad): bound score memory by chunking
+    # the query axis — the XLA analogue of the flash kernel's tiling.
+    q_chunk = None
+    skv = k.shape[1]
+    if S * skv >= 2 ** 26 and (collect_kv or cache is not None or not causal
+                               or precomputed_kv is not None):
+        target = max(128, 2 ** 23 // skv)
+        for cand in (target, 2048, 1024, 512, 256, 128):
+            if cand <= target and S % cand == 0 and S > cand:
+                q_chunk = cand
+                break
+
+    o = _sdpa(q, k, v, causal=causal, q_offset=q_offset, kv_len=kv_len,
+              q_chunk=q_chunk)
+    out = _proj(o, p["out"], "bshk,hkd->bsd", cfg, ("model", None, "data"))
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ModelConfig, d_model: Optional[int] = None, d_ff: Optional[int] = None):
+    D = d_model or cfg.d_model
+    F = d_ff or cfg.d_ff
+    kg, ku, kd = jax.random.split(key, 3)
+    s_in, s_out = D ** -0.5, F ** -0.5
+    p = {
+        "up": jax.random.normal(ku, (D, F), cfg.params_dtype) * s_in,
+        "down": jax.random.normal(kd, (F, D), cfg.params_dtype) * s_out,
+    }
+    if cfg.glu:
+        p["gate"] = jax.random.normal(kg, (D, F), cfg.params_dtype) * s_in
+    return p
+
+
+def _act(x, name: str):
+    return jax.nn.silu(x) if name == "silu" else jax.nn.gelu(x)
+
+
+def mlp(p, x, cfg: ModelConfig):
+    up = _proj(x, p["up"], "bsd,df->bsf", cfg, ("data", "model"))
+    if cfg.glu:
+        gate = _proj(x, p["gate"], "bsd,df->bsf", cfg, ("data", "model"))
+        h = _act(gate, cfg.act) * up
+    else:
+        h = _act(up, cfg.act)
+    return _proj(h, p["down"], "bsf,fd->bsd", cfg, ("model", "data"))
+
+
+# ---------------------------------------------------------------------------
+# a full pre-norm dense transformer layer
+# ---------------------------------------------------------------------------
+
+
+def init_dense_layer(key, cfg: ModelConfig):
+    ka, km = jax.random.split(key)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), cfg.params_dtype),
+        "attn": init_attn(ka, cfg),
+        "ln2": jnp.zeros((cfg.d_model,), cfg.params_dtype),
+        "mlp": init_mlp(km, cfg),
+    }
+
+
+def dense_layer(p, x, cfg: ModelConfig, *, causal=True, cache=None, pos=None):
+    h, new_cache = attention(
+        p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg,
+        causal=causal, cache=cache, pos=pos,
+    )
+    x = x + h
+    x = x + mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+    return x, new_cache

@@ -1,0 +1,376 @@
+"""Unified decoder language model covering the dense / moe / ssm / hybrid /
+vlm families.  One init + three entry points (forward / prefill / decode),
+all built on ``lax.scan`` over stacked per-layer parameters (compile time is
+depth-independent) with optional remat.
+
+Caches:
+  dense/moe : KVCache stacked (L, B, S_max, K, hd)
+  ssm       : SSMState stacked (L, ...)
+  hybrid    : ssm states (L, ...) + shared-attention KVCache stacked over
+              invocations (L/k, B, S_max, K, hd)
+  vlm       : dense cache; prompt = [patch_embeds ; text]
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (
+    KVCache, attention, dense_layer, init_attn, init_dense_layer, init_mlp,
+    mlp, rms_norm,
+)
+from .moe import init_moe, moe_block
+from .ssm import SSMState, init_ssm_block, init_ssm_state, ssm_block, ssm_block_decode
+
+__all__ = ["init_params", "forward", "prefill", "decode", "init_cache", "unembed"]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _stack_init(layer_init, key, n: int):
+    keys = jax.random.split(key, n)
+    return jax.vmap(layer_init)(keys)
+
+
+def init_params(key, cfg: ModelConfig):
+    ke, kl, kh, ks = jax.random.split(key, 4)
+    D, V = cfg.d_model, cfg.vocab_size
+    params: Dict[str, Any] = {
+        "embed": jax.random.normal(ke, (V, D), cfg.params_dtype) * D ** -0.5,
+        "final_norm": jnp.zeros((D,), cfg.params_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(kh, (D, V), cfg.params_dtype) * D ** -0.5
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        params["layers"] = _stack_init(
+            lambda k: init_dense_layer(k, cfg), kl, cfg.n_layers
+        )
+    elif fam == "moe":
+        def moe_layer_init(k):
+            ka, km = jax.random.split(k)
+            return {
+                "ln1": jnp.zeros((D,), cfg.params_dtype),
+                "attn": init_attn(ka, cfg),
+                "ln2": jnp.zeros((D,), cfg.params_dtype),
+                "moe": init_moe(km, cfg),
+            }
+        params["layers"] = _stack_init(moe_layer_init, kl, cfg.n_layers)
+    elif fam == "ssm":
+        params["layers"] = _stack_init(lambda k: init_ssm_block(k, cfg), kl, cfg.n_layers)
+    elif fam == "hybrid":
+        params["layers"] = _stack_init(lambda k: init_ssm_block(k, cfg), kl, cfg.n_layers)
+        params["shared_attn"] = init_dense_layer(ks, cfg)
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return params
+
+
+def unembed(params, h, cfg: ModelConfig):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("bsd,dv->bsv", h, w.astype(h.dtype)).astype(cfg.logit_dtype)
+
+
+def _embed(params, tokens, cfg: ModelConfig):
+    return jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+
+
+def _hybrid_period(cfg: ModelConfig) -> int:
+    return cfg.shared_attn_every or cfg.n_layers
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill share the full-sequence path)
+# ---------------------------------------------------------------------------
+
+
+def _dense_stack(params, x, cfg: ModelConfig, caches=None, pos=None,
+                 is_moe=False, collect_kv=False):
+    """Scan over stacked dense/moe layers; optionally updating KV caches.
+
+    With act_shard_spec set (big-model launch path), the residual stream is
+    sequence-sharded over the model axis; each sublayer gathers it ONCE in
+    bf16 (Megatron-SP style — recomputed under remat, never saved) and the
+    sublayer output reduce-scatters back at the residual add."""
+    from jax.sharding import PartitionSpec as _P
+
+    def body(x, xs):
+        lp, cache = xs
+        if cfg.act_shard_spec:
+            x = jax.lax.with_sharding_constraint(x, _P(*cfg.act_shard_spec))
+        h, new_cache = attention(
+            lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps), cfg,
+            causal=True, cache=cache, pos=pos, collect_kv=collect_kv,
+        )
+        x = x + h
+        hin = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if is_moe:
+            x = x + moe_block(lp["moe"], hin, cfg)
+        else:
+            x = x + mlp(lp["mlp"], hin, cfg)
+        return x, new_cache
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, new_caches = jax.lax.scan(body, x, (params["layers"], caches))
+    return x, new_caches
+
+
+def _ssm_stack(params, x, cfg: ModelConfig, states=None):
+    from jax.sharding import PartitionSpec as _P
+
+    def body(x, xs):
+        lp, st = xs
+        if cfg.act_shard_spec:
+            x = jax.lax.with_sharding_constraint(x, _P(*cfg.act_shard_spec))
+        h, new_st = ssm_block(lp, x, cfg, state=st)
+        return x + h, new_st
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, new_states = jax.lax.scan(body, x, (params["layers"], states))
+    return x, new_states
+
+
+def _hybrid_stack(params, x, cfg: ModelConfig, states=None, kv_caches=None,
+                  pos=None, collect_kv=False):
+    """Groups of ``shared_attn_every`` ssm blocks + one shared attn layer."""
+    k = _hybrid_period(cfg)
+    G = cfg.n_layers // k
+    grouped = jax.tree.map(
+        lambda a: a.reshape((G, k) + a.shape[1:]), params["layers"]
+    )
+    grouped_states = (
+        None if states is None
+        else jax.tree.map(lambda a: a.reshape((G, k) + a.shape[1:]), states)
+    )
+    shared = params["shared_attn"]
+
+    from jax.sharding import PartitionSpec as _P
+
+    def group_body(x, xs):
+        gp, gst, gkv = xs
+
+        def inner(x, ys):
+            lp, st = ys
+            if cfg.act_shard_spec:
+                x = jax.lax.with_sharding_constraint(x, _P(*cfg.act_shard_spec))
+            h, new_st = ssm_block(lp, x, cfg, state=st)
+            return x + h, new_st
+
+        x, new_gst = jax.lax.scan(inner, x, (gp, gst))
+        if cfg.act_shard_spec:
+            x = jax.lax.with_sharding_constraint(x, _P(*cfg.act_shard_spec))
+        h, new_kv = attention(
+            shared["attn"], rms_norm(x, shared["ln1"], cfg.norm_eps), cfg,
+            causal=True, cache=gkv, pos=pos, collect_kv=collect_kv,
+        )
+        x = x + h
+        x = x + mlp(shared["mlp"], rms_norm(x, shared["ln2"], cfg.norm_eps), cfg)
+        return x, (new_gst, new_kv)
+
+    if cfg.remat:
+        group_body = jax.checkpoint(group_body, prevent_cse=False)
+    x, (new_states, new_kvs) = jax.lax.scan(
+        group_body, x, (grouped, grouped_states, kv_caches)
+    )
+    if new_states is not None:
+        new_states = jax.tree.map(
+            lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), new_states
+        )
+    return x, (new_states, new_kvs)
+
+
+def forward(
+    params,
+    batch: Dict[str, jax.Array],
+    cfg: ModelConfig,
+) -> jax.Array:
+    """Full-sequence forward -> logits (B, S_out, V)."""
+    tokens = batch["tokens"]
+    x = _embed(params, tokens, cfg)
+    if cfg.family == "vlm":
+        pe = batch["patch_embeds"].astype(x.dtype)   # (B, n_img, D)
+        x = jnp.concatenate([pe, x], axis=1)
+
+    if cfg.family in ("dense", "vlm"):
+        x, _ = _dense_stack(params, x, cfg)
+    elif cfg.family == "moe":
+        x, _ = _dense_stack(params, x, cfg, is_moe=True)
+    elif cfg.family == "ssm":
+        x, _ = _ssm_stack(params, x, cfg)
+    elif cfg.family == "hybrid":
+        x, _ = _hybrid_stack(params, x, cfg)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.family == "vlm":
+        x = x[:, batch["patch_embeds"].shape[1]:, :]   # only text positions
+    return unembed(params, x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    if cfg.family in ("dense", "vlm", "moe"):
+        shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+        return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+    if cfg.family == "ssm":
+        st = init_ssm_state(cfg, batch)
+        return jax.tree.map(
+            lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), st
+        )
+    if cfg.family == "hybrid":
+        st = init_ssm_state(cfg, batch)
+        states = jax.tree.map(
+            lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), st
+        )
+        G = cfg.n_layers // _hybrid_period(cfg)
+        shape = (G, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+        return (states, KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)))
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, batch, cfg: ModelConfig, max_len: Optional[int] = None):
+    """Process the prompt, fill caches.  Returns (last-token logits, cache).
+
+    KV caches are the scan-collected (post-rope) K/V of the prompt itself —
+    no zero-init max_len buffers or update-slice copies.  If ``max_len`` >
+    prompt length, the cache is padded once at the end (decode continues by
+    writing at pos = prompt_len)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    n_img = batch["patch_embeds"].shape[1] if cfg.family == "vlm" else 0
+    total = S + n_img
+
+    x = _embed(params, tokens, cfg)
+    if cfg.family == "vlm":
+        x = jnp.concatenate([batch["patch_embeds"].astype(x.dtype), x], axis=1)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        x, cache = _dense_stack(
+            params, x, cfg, collect_kv=True, is_moe=(cfg.family == "moe")
+        )
+    elif cfg.family == "ssm":
+        states = init_cache(cfg, B, total)
+        x, cache = _ssm_stack(params, x, cfg, states=states)
+    elif cfg.family == "hybrid":
+        states, _ = init_cache(cfg, B, total)
+        x, cache = _hybrid_stack(
+            params, x, cfg, states=states, kv_caches=None, collect_kv=True
+        )
+        states_out, kvs = cache
+        cache = (states_out, kvs)
+
+    if max_len is not None and max_len > total and cfg.family != "ssm":
+        def pad(kv):
+            return KVCache(
+                jnp.pad(kv.k, ((0, 0),) * 2 + ((0, max_len - total),) + ((0, 0),) * 2),
+                jnp.pad(kv.v, ((0, 0),) * 2 + ((0, max_len - total),) + ((0, 0),) * 2),
+            )
+        if cfg.family == "hybrid":
+            cache = (cache[0], pad(cache[1]))
+        else:
+            cache = pad(cache)
+
+    x = rms_norm(x[:, -1:, :], params["final_norm"], cfg.norm_eps)
+    return unembed(params, x, cfg), cache
+
+
+def _dense_decode_stack(params, x, cfg: ModelConfig, caches, pos, is_moe=False):
+    """Decode path: the stacked KV cache is threaded as a scan CARRY with
+    per-layer dynamic index updates — XLA aliases the buffer in place
+    (xs->ys cache threading doubles the cache in HBM)."""
+
+    def body(carry, xs):
+        x, kc, vc = carry
+        lp, i = xs
+        cache_l = KVCache(
+            jax.lax.dynamic_index_in_dim(kc, i, 0, keepdims=False),
+            jax.lax.dynamic_index_in_dim(vc, i, 0, keepdims=False),
+        )
+        h, new_cache = attention(
+            lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps), cfg,
+            causal=True, cache=cache_l, pos=pos,
+        )
+        x = x + h
+        hin = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if is_moe:
+            x = x + moe_block(lp["moe"], hin, cfg)
+        else:
+            x = x + mlp(lp["mlp"], hin, cfg)
+        kc = jax.lax.dynamic_update_index_in_dim(kc, new_cache.k, i, 0)
+        vc = jax.lax.dynamic_update_index_in_dim(vc, new_cache.v, i, 0)
+        return (x, kc, vc), None
+
+    (x, kc, vc), _ = jax.lax.scan(
+        body, (x, caches.k, caches.v),
+        (params["layers"], jnp.arange(cfg.n_layers)),
+    )
+    return x, KVCache(kc, vc)
+
+
+def decode(params, cache, token, pos, cfg: ModelConfig):
+    """One decode step.  token: (B,1); pos: scalar int32 (write offset).
+
+    Returns (logits (B,1,V), new cache)."""
+    x = _embed(params, token, cfg)
+    if cfg.family in ("dense", "vlm", "moe"):
+        x, cache = _dense_decode_stack(
+            params, x, cfg, caches=cache, pos=pos,
+            is_moe=(cfg.family == "moe"),
+        )
+    elif cfg.family == "ssm":
+        def body(x, xs):
+            lp, st = xs
+            h, new_st = ssm_block_decode(lp, x, cfg, st)
+            return x + h, new_st
+        x, cache = jax.lax.scan(body, x, (params["layers"], cache))
+    elif cfg.family == "hybrid":
+        states, kvs = cache
+        k = _hybrid_period(cfg)
+        G = cfg.n_layers // k
+        grouped = jax.tree.map(
+            lambda a: a.reshape((G, k) + a.shape[1:]), params["layers"]
+        )
+        gstates = jax.tree.map(lambda a: a.reshape((G, k) + a.shape[1:]), states)
+        shared = params["shared_attn"]
+
+        def group_body(x, xs):
+            gp, gst, gkv = xs
+            def inner(x, ys):
+                lp, st = ys
+                h, new_st = ssm_block_decode(lp, x, cfg, st)
+                return x + h, new_st
+            x, new_gst = jax.lax.scan(inner, x, (gp, gst))
+            h, new_kv = attention(
+                shared["attn"], rms_norm(x, shared["ln1"], cfg.norm_eps), cfg,
+                causal=True, cache=gkv, pos=pos,
+            )
+            x = x + h
+            x = x + mlp(shared["mlp"], rms_norm(x, shared["ln2"], cfg.norm_eps), cfg)
+            return x, (new_gst, new_kv)
+
+        x, (new_states, new_kvs) = jax.lax.scan(group_body, x, (grouped, gstates, kvs))
+        new_states = jax.tree.map(
+            lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), new_states
+        )
+        cache = (new_states, new_kvs)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(params, x, cfg), cache

@@ -1,0 +1,134 @@
+"""Sharding-aware matmul with a custom VJP (Megatron-SP semantics).
+
+Observed in the llama3-405b dry-run HLO before this wrapper existed: with
+sequence-sharded residuals, GSPMD kept *activations* seq-sharded through
+every projection and instead all-gathered the full (f32-normalized) weight
+per matmul per layer per microbatch — ~14 TB of ICI traffic per step — and
+produced weight grads as full-shape f32 partials that were all-reduced
+before sharding.
+
+``matmul`` pins the production layout explicitly:
+
+  forward   x --(gather seq)--> dot with TP-sharded W --> out TP-sharded
+            (pure 'bsd' outputs are constrained back to the seq-sharded
+            residual layout => partial sums lower as reduce-scatter);
+  backward  dx follows the same rule; dW contracts TP-sharded operands so
+            the local tile is already TP-sharded, is cast to the weight
+            dtype (bf16 wire), and lands in the parameter's (FSDP x TP)
+            layout via reduce-scatter over the data axis;
+  weights   are explicitly un-sharded only over 'data' (FSDP gather) in
+            their storage dtype — never in the CPU backend's f32
+            normalization dtype.
+
+``meta`` = (dw_spec, data_size, model_size, act_spec) — the weight's
+PartitionSpec-tuple, mesh axis sizes for divisibility checks, and the
+residual-activation spec (or None).  ``meta=None`` => plain einsum autodiff.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["matmul"]
+
+
+def _split_subs(subscripts: str):
+    ins, out = subscripts.split("->")
+    a, b = ins.split(",")
+    return a, b, out
+
+
+def _letter_ax(bsub: str, dw_spec) -> dict:
+    return {letter: ax for letter, ax in zip(bsub, dw_spec) if ax == "model"}
+
+
+def _tp_spec(sub: str, shape, letter_ax, data_size: int):
+    """'model' on dims mapped to a TP-sharded dW dim; 'data' on the leading
+    batch dim (divisibility-checked); None elsewhere."""
+    entries = []
+    for i, letter in enumerate(sub):
+        if letter_ax.get(letter) == "model":
+            entries.append("model")
+        elif i == 0 and data_size > 1 and shape[0] % data_size == 0:
+            entries.append("data")
+        else:
+            entries.append(None)
+    return P(*entries)
+
+
+def _constrain_act(t, sub: str, letter_ax, meta):
+    """TP spec if the tensor carries a TP letter; residual act spec if not."""
+    dw_spec, data_size, model_size, act_spec = meta
+    if any(letter_ax.get(c) == "model" for c in sub):
+        return jax.lax.with_sharding_constraint(
+            t, _tp_spec(sub, t.shape, letter_ax, data_size)
+        )
+    if act_spec is not None and len(act_spec) == t.ndim:
+        return jax.lax.with_sharding_constraint(t, P(*act_spec))
+    return t
+
+
+def _unshard_data(w, meta):
+    """FSDP weight gather in the storage dtype (TP sharding kept)."""
+    if meta is None:
+        return w
+    gspec = tuple(ax if ax == "model" else None for ax in meta[0])
+    return jax.lax.with_sharding_constraint(w, P(*gspec))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def matmul(x, w, subscripts: str, meta: Optional[Tuple] = None):
+    """einsum(subscripts, x, w) with production sharding semantics.
+
+    With meta set, dots emit ``preferred_element_type = compute dtype`` so
+    GSPMD's partial-sum collectives move bf16 (the MXU still accumulates in
+    f32 internally on TPU); activations are explicitly gathered in bf16
+    before the dot rather than post-float-normalization in f32."""
+    if meta is None:
+        return jnp.einsum(subscripts, x, w)
+    a, b, o = _split_subs(subscripts)
+    la = _letter_ax(b, meta[0])
+    if la:
+        # gather the (small) activation over seq/model for the TP matmul
+        x = jax.lax.with_sharding_constraint(
+            x, _tp_spec(a, x.shape, la, meta[1])
+        )
+    out = jnp.einsum(subscripts, x, _unshard_data(w, meta),
+                     preferred_element_type=x.dtype)
+    return _constrain_act(out, o, la, meta)
+
+
+def _fwd(x, w, subscripts, meta):
+    return matmul(x, w, subscripts, meta), (x, w)
+
+
+def _bwd(subscripts, meta, res, g):
+    x, w = res
+    a, b, out = _split_subs(subscripts)
+    g = g.astype(x.dtype)
+    pet = {} if meta is None else {"preferred_element_type": x.dtype}
+    # dx: contract g with the (storage-dtype, FSDP-gathered) weight
+    dx = jnp.einsum(f"{out},{b}->{a}", g,
+                    _unshard_data(w, meta).astype(g.dtype), **pet)
+
+    if meta is not None:
+        la = _letter_ax(b, meta[0])
+        dx = _constrain_act(dx, a, la, meta)
+        if la:
+            g = _constrain_act(g, out, la, meta)
+            # x fully gathered on non-TP dims for the dW contraction
+            x = jax.lax.with_sharding_constraint(
+                x, _tp_spec(a, x.shape, la, meta[1])
+            )
+    # dW: local tile already TP-sharded; bf16 wire; data-axis reduce-scatter
+    dw = jnp.einsum(f"{a},{out}->{b}", x, g, **pet).astype(w.dtype)
+    if meta is not None and any(ax for ax in meta[0]):
+        dw = jax.lax.with_sharding_constraint(dw, P(*meta[0]))
+    return dx, dw
+
+
+matmul.defvjp(_fwd, _bwd)

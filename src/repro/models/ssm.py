@@ -1,0 +1,234 @@
+"""Mamba-2 (SSD — state-space duality) block, chunked TPU-friendly form.
+
+Training/prefill uses the blocked SSD algorithm: the sequence is split into
+chunks of length Q; within a chunk the output is a masked (decay-weighted)
+quadratic contraction (MXU-friendly matmuls), across chunks a cheap linear
+recurrence carries the (H, P, N) state.  Decode is the O(1) recurrence.
+
+State layout:
+  conv state : (B, K-1, conv_dim)   — last K-1 pre-conv inputs
+  ssm state  : (B, H, P, N)         — per-head outer-product state
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import rms_norm
+
+__all__ = ["SSMState", "init_ssm_block", "ssm_block", "ssm_block_decode", "init_ssm_state"]
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array   # (B, K-1, conv_dim)
+    h: jax.Array      # (B, H, P, N)
+
+
+def _conv_dim(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+
+
+def init_ssm_block(key, cfg: ModelConfig):
+    D = cfg.d_model
+    d_inner, H = cfg.d_inner, cfg.ssm_heads
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    d_in_proj = 2 * d_inner + 2 * G * N + H
+    cd = _conv_dim(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "norm": jnp.zeros((D,), cfg.params_dtype),
+        "in_proj": jax.random.normal(k1, (D, d_in_proj), cfg.params_dtype) * D ** -0.5,
+        "conv_w": jax.random.normal(k2, (cfg.ssm_conv, cd), cfg.params_dtype) * 0.2,
+        "conv_b": jnp.zeros((cd,), cfg.params_dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(cfg.params_dtype),
+        "D_skip": jnp.ones((H,), cfg.params_dtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 0.01))).astype(cfg.params_dtype),
+        "gated_norm": jnp.zeros((d_inner,), cfg.params_dtype),
+        "out_proj": jax.random.normal(k4, (d_inner, D), cfg.params_dtype) * d_inner ** -0.5,
+    }
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> SSMState:
+    return SSMState(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, _conv_dim(cfg)), dtype),
+        h=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), dtype),
+    )
+
+
+def _split_proj(zxbcdt, cfg: ModelConfig):
+    d_inner, H = cfg.d_inner, cfg.ssm_heads
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner : 2 * d_inner + 2 * G * N]
+    dt = zxbcdt[..., 2 * d_inner + 2 * G * N :]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv over time.  xBC: (B,S,Cd); w: (K,Cd)."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xBC)
+    for i in range(K):  # K is tiny (4) — unrolled taps stay fused
+        out = out + pad[:, i : i + xBC.shape[1], :] * w[i][None, None, :]
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def _ssd_chunked(x, dt, A, Bm, Cm, cfg: ModelConfig, h0=None):
+    """Blocked SSD scan.
+
+    x: (B,S,H,P); dt: (B,S,H); A: (H,) negative; Bm/Cm: (B,S,G,N).
+    Returns y: (B,S,H,P), final state (B,H,P,N).
+    """
+    B_, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Q = min(cfg.ssm_chunk, S)
+    nc = S // Q
+    rep = H // G
+
+    xq = x.reshape(B_, nc, Q, H, P)
+    dtq = dt.reshape(B_, nc, Q, H)
+    Bq = Bm.reshape(B_, nc, Q, G, N)
+    Cq = Cm.reshape(B_, nc, Q, G, N)
+
+    la = jnp.cumsum(dtq * A[None, None, None, :], axis=2)      # (B,nc,Q,H) log-decay
+    u = xq * dtq[..., None]                                    # discretized input
+
+    # ---- intra-chunk (quadratic, masked decay) ---------------------------
+    # the Q×Q tensors are the memory hot spot: keep them in the compute
+    # dtype (bf16); the log-decay math itself stays in f32.
+    Bh = jnp.repeat(Bq, rep, axis=3)                           # (B,nc,Q,H,N)
+    Ch = jnp.repeat(Cq, rep, axis=3)
+    cb = jnp.einsum("bnqhs,bnkhs->bnhqk", Ch, Bh)              # (B,nc,H,Q,Q)
+    decay = jnp.exp(
+        la[..., :, None, :] - la[..., None, :, :]
+    ).astype(x.dtype)                                          # (B,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    att = cb * jnp.transpose(decay, (0, 1, 4, 2, 3))           # (B,nc,H,Q,Q)
+    att = jnp.where(mask[None, None, None], att, jnp.zeros((), att.dtype))
+    y_intra = jnp.einsum("bnhqk,bnkhp->bnqhp", att.astype(x.dtype), u.astype(x.dtype))
+
+    # ---- chunk summary states + inter-chunk recurrence --------------------
+    seg = jnp.exp(la[:, :, -1:, :] - la)                       # decay to chunk end
+    chunk_state = jnp.einsum(
+        "bnqhs,bnqhp->bnhps", (Bh * seg[..., None]).astype(jnp.float32),
+        u.astype(jnp.float32),
+    )                                                          # (B,nc,H,P,N)
+    chunk_decay = jnp.exp(la[:, :, -1, :])                     # (B,nc,H)
+
+    h_init = (
+        jnp.zeros((B_, H, P, N), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    )
+
+    def scan_fn(h, xs):
+        cs, cd = xs                                            # (B,H,P,N), (B,H)
+        h_out = h                                              # state entering chunk
+        h_next = h * cd[..., None, None] + cs
+        return h_next, h_out
+
+    cs_t = jnp.moveaxis(chunk_state, 1, 0)                     # (nc,B,H,P,N)
+    cd_t = jnp.moveaxis(chunk_decay, 1, 0)                     # (nc,B,H)
+    h_final, h_enter = jax.lax.scan(scan_fn, h_init, (cs_t, cd_t))
+    h_enter = jnp.moveaxis(h_enter, 0, 1)                      # (B,nc,H,P,N)
+
+    # ---- inter-chunk contribution -----------------------------------------
+    indecay = jnp.exp(la)                                      # decay from chunk start
+    y_inter = jnp.einsum(
+        "bnqhs,bnhps->bnqhp", (Ch * indecay[..., None]).astype(jnp.float32), h_enter
+    ).astype(x.dtype)
+
+    y = (y_intra.astype(jnp.float32) + y_inter.astype(jnp.float32))
+    return y.reshape(B_, S, H, P).astype(x.dtype), h_final
+
+
+def ssm_block(p, x, cfg: ModelConfig, state: Optional[SSMState] = None):
+    """Full Mamba-2 block (pre-norm, residual outside).  x: (B,S,D).
+
+    Returns (y, final_state)."""
+    B_, S, D = x.shape
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("bsd,de->bse", h, p["in_proj"].astype(h.dtype))
+    z, xBC, dt = _split_proj(zxbcdt, cfg)
+    conv_in = xBC
+    xBC = _causal_conv(xBC, p["conv_w"].astype(xBC.dtype), p["conv_b"].astype(xBC.dtype))
+
+    d_inner, H, P = cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    xs = xBC[..., :d_inner].reshape(B_, S, H, P)
+    Bm = xBC[..., d_inner : d_inner + G * N].reshape(B_, S, G, N)
+    Cm = xBC[..., d_inner + G * N :].reshape(B_, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    h0 = None if state is None else state.h
+    if cfg.ssm_impl.startswith("pallas") and h0 is None and \
+            S % min(cfg.ssm_chunk, S) == 0:
+        # Pallas SSD kernel (TPU target; interpret mode on CPU).  Final
+        # state isn't returned by the kernel — training path only.
+        from ..kernels.ssd_scan.ops import ssd_scan
+        y = ssd_scan(
+            xs, dt, A, Bm, Cm, use_pallas=True,
+            interpret=(cfg.ssm_impl == "pallas_interpret"),
+            block_q=min(cfg.ssm_chunk, S),
+        ).astype(x.dtype)
+        h_final = None
+    else:
+        y, h_final = _ssd_chunked(xs, dt, A, Bm, Cm, cfg, h0=h0)
+    y = y + xs * p["D_skip"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(B_, S, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["gated_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(y.dtype))
+
+    new_state = None
+    if state is not None:
+        K = cfg.ssm_conv
+        conv_tail = conv_in[:, -(K - 1):, :] if S >= K - 1 else jnp.concatenate(
+            [state.conv[:, S:, :], conv_in], axis=1
+        )
+        new_state = SSMState(conv=conv_tail.astype(state.conv.dtype), h=h_final)
+    return out, new_state
+
+
+def ssm_block_decode(p, x, cfg: ModelConfig, state: SSMState):
+    """Single-token decode.  x: (B,1,D) -> (B,1,D), updated state."""
+    B_, S, D = x.shape
+    assert S == 1
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("bsd,de->bse", h, p["in_proj"].astype(h.dtype))
+    z, xBC, dt = _split_proj(zxbcdt, cfg)
+
+    # conv over (cached K-1 inputs ++ current)
+    K = cfg.ssm_conv
+    window = jnp.concatenate([state.conv, xBC.astype(state.conv.dtype)], axis=1)  # (B,K,Cd)
+    w = p["conv_w"].astype(window.dtype)
+    conv_out = jnp.einsum("bkc,kc->bc", window, w) + p["conv_b"].astype(window.dtype)
+    xBC_t = jax.nn.silu(conv_out)[:, None, :].astype(x.dtype)   # (B,1,Cd)
+    new_conv = window[:, 1:, :]
+
+    d_inner, H, P = cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    xs = xBC_t[..., :d_inner].reshape(B_, H, P)
+    Bm = xBC_t[..., d_inner : d_inner + G * N].reshape(B_, G, N)
+    Cm = xBC_t[..., d_inner + G * N :].reshape(B_, G, N)
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1)                            # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1)
+    dt1 = jax.nn.softplus(
+        dt[:, 0, :].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )                                                           # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt1 * A[None, :])                               # (B,H)
+
+    u = xs.astype(jnp.float32) * dt1[..., None]                 # (B,H,P)
+    h_new = state.h * a[..., None, None] + jnp.einsum(
+        "bhp,bhn->bhpn", u, Bh.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", h_new, Ch.astype(jnp.float32)).astype(x.dtype)
+    y = y + xs * p["D_skip"].astype(y.dtype)[None, :, None]
+    y = y.reshape(B_, 1, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["gated_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(y.dtype))
+    return out, SSMState(conv=new_conv, h=h_new)

@@ -1,0 +1,183 @@
+"""Optimizers (AdamW, Adafactor) and LR schedules — self-contained, pytree
+native.  Adafactor's factored second moment keeps optimizer state ~O(rows +
+cols) for matrices, which is what lets the 405B/1T archs fit HBM (DESIGN §6).
+
+State layout: per-leaf state lists aligned with ``jax.tree.leaves(params)``
+(lists are pytrees, so states shard/checkpoint like any other tree).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "adamw", "adafactor", "warmup_cosine", "make_optimizer"]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    # (grads, state, params, step) -> (new_params, new_state)
+    update: Callable[[Any, Any, Any, jax.Array], tuple]
+
+
+def warmup_cosine(peak_lr: float, warmup: int = 200, total: int = 10000, floor: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * (step + 1) / warmup
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def _chain_barrier(prev, *xs):
+    """Serialize per-leaf optimizer updates: leaf i's inputs are barriered
+    against leaf i-1's output, so XLA can't inflate peak memory by running
+    every leaf's f32 temporaries concurrently."""
+    if prev is None:
+        return xs
+    out = jax.lax.optimization_barrier(tuple(xs) + (prev,))
+    return out[:-1]
+
+
+def adamw(lr_fn, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.0):
+    def init(params):
+        leaves = jax.tree.leaves(params)
+        return {
+            "m": [jnp.zeros(p.shape, jnp.float32) for p in leaves],
+            "v": [jnp.zeros(p.shape, jnp.float32) for p in leaves],
+        }
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+        p_leaves, treedef = jax.tree.flatten(params)
+        g_leaves = jax.tree.leaves(grads)
+        new_p, new_m, new_v = [], [], []
+        prev = None
+        for p, g, m, v in zip(p_leaves, g_leaves, state["m"], state["v"]):
+            g, = _chain_barrier(prev, g)
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * g32 * g32
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay and p.ndim >= 2:
+                u = u + weight_decay * p.astype(jnp.float32)
+            new_p.append((p.astype(jnp.float32) - lr * u).astype(p.dtype))
+            new_m.append(m)
+            new_v.append(v)
+            prev = new_p[-1]
+        return jax.tree.unflatten(treedef, new_p), {"m": new_m, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment over the trailing two dims)
+# ---------------------------------------------------------------------------
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2 and p.shape[-1] >= 2 and p.shape[-2] >= 2
+
+
+def adafactor(
+    lr_fn,
+    decay: float = 0.99,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    beta1: Optional[float] = None,   # None => no first moment (memory-lean)
+    weight_decay: float = 0.0,
+    # optionally lax.map the update over dim 0 of huge stacked leaves
+    # (bounds f32 temps to one layer; measured neutral-to-negative on the
+    # CPU cost model, so off by default — kept for real-TPU experiments)
+    scan_update_threshold: Optional[int] = None,
+):
+    def init(params):
+        leaves = jax.tree.leaves(params)
+        v = []
+        for p in leaves:
+            if _factored(p):
+                v.append({
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                })
+            else:
+                v.append({"v": jnp.zeros(p.shape, jnp.float32)})
+        st = {"v": v}
+        if beta1 is not None:
+            st["m"] = [jnp.zeros(p.shape, jnp.float32) for p in leaves]
+        return st
+
+    def _leaf_update(p, g, vs, m, lr):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + eps
+        if _factored(p):
+            vr = decay * vs["vr"] + (1 - decay) * g2.mean(axis=-1)
+            vc = decay * vs["vc"] + (1 - decay) * g2.mean(axis=-2)
+            denom = jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)
+            vhat = (vr / denom)[..., None] * vc[..., None, :]
+            new_vs = {"vr": vr, "vc": vc}
+        else:
+            vhat = decay * vs["v"] + (1 - decay) * g2
+            new_vs = {"v": vhat}
+        u = g32 * jax.lax.rsqrt(vhat + eps)
+        rms = jnp.sqrt(jnp.mean(u * u) + eps)
+        u = u / jnp.maximum(1.0, rms / clip_threshold)
+        new_m = None
+        if beta1 is not None:
+            new_m = beta1 * m + (1 - beta1) * u
+            u = new_m
+        if weight_decay and p.ndim >= 2:
+            u = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_vs, new_m
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+        p_leaves, treedef = jax.tree.flatten(params)
+        g_leaves = jax.tree.leaves(grads)
+        m_list = state.get("m", [None] * len(p_leaves))
+        new_p, new_v, new_m = [], [], []
+        prev = None
+        for p, g, vs, m in zip(p_leaves, g_leaves, state["v"], m_list):
+            g, = _chain_barrier(prev, g)
+            if scan_update_threshold is not None and p.ndim >= 3 \
+                    and p.shape[0] > 1 and p.size > scan_update_threshold \
+                    and beta1 is None:
+                # stacked-layer leaf: scan the update over dim 0 so the f32
+                # temporaries are one layer's worth, not the whole stack's
+                npv, nvs = jax.lax.map(
+                    lambda xs: _leaf_update(xs[0], xs[1], xs[2], None, lr)[:2],
+                    (p, g, vs),
+                )
+                new_p.append(npv)
+                new_v.append(nvs)
+            else:
+                npv, nvs, nm = _leaf_update(p, g, vs, m, lr)
+                new_p.append(npv)
+                new_v.append(nvs)
+                if beta1 is not None:
+                    new_m.append(nm)
+            prev = new_p[-1]
+        new_state = {"v": new_v}
+        if beta1 is not None:
+            new_state["m"] = new_m
+        return jax.tree.unflatten(treedef, new_p), new_state
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, lr_fn, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr_fn, **kw)
+    if name == "adafactor":
+        return adafactor(lr_fn, **kw)
+    raise ValueError(name)

@@ -1,0 +1,159 @@
+"""Train / serve step builders.
+
+``make_train_step`` produces a jit-able ``(state, batch) -> (state, metrics)``
+with microbatched gradient accumulation (``lax.scan``) — live activation
+memory scales with the microbatch, which is what makes the 405B/1T train
+cells fit (DESIGN.md §6).  Loss is masked token cross-entropy in f32 with
+optional z-loss.  Gradient accumulation dtype follows the parameter dtype.
+
+``make_serve_step`` wraps prefill/decode for the serving shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import encdec, lm
+from ..models.config import ModelConfig
+from .optimizer import Optimizer
+
+__all__ = ["TrainState", "make_train_step", "make_serve_step", "init_train_state", "xent_loss"]
+
+
+class TrainState(NamedTuple):
+    step: jax.Array          # scalar int32
+    params: Any
+    opt_state: Any
+
+
+def xent_loss(logits, labels, z_loss: float = 1e-4):
+    """Masked softmax cross-entropy (f32).  labels < 0 are ignored."""
+    logits = logits.astype(jnp.float32)
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    loss = nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    if z_loss:
+        loss = loss + z_loss * ((lse * mask) ** 2).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss
+
+
+def _model_forward(cfg: ModelConfig):
+    return encdec.forward if cfg.family == "encdec" else lm.forward
+
+
+def init_train_state(key, cfg: ModelConfig, optimizer: Optimizer) -> TrainState:
+    init_fn = encdec.init_params if cfg.family == "encdec" else lm.init_params
+    params = init_fn(key, cfg)
+    return TrainState(jnp.zeros((), jnp.int32), params, optimizer.init(params))
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    optimizer: Optimizer,
+    accum_steps: int = 1,
+    label_key: str = "labels",
+    batch_axes: Optional[tuple] = None,   # mesh axes sharding the batch dim
+):
+    forward = _model_forward(cfg)
+
+    def loss_fn(params, mb):
+        logits = forward(params, mb, cfg)
+        return xent_loss(logits, mb[label_key])
+
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def _pin_batch(mb):
+        """The (accum, mb, ...) reshape can defeat GSPMD's batch-sharding
+        propagation (observed: accum < axis size => microbatch replicated).
+        Re-pin each microbatch leaf's leading dim explicitly.
+
+        ``batch_axes``: tuple of (mesh_axis_name, size) pairs; the longest
+        prefix whose product divides the microbatch size is used."""
+        if not batch_axes:
+            return mb
+        from jax.sharding import PartitionSpec as P
+
+        def pin_leaf(a):
+            names = []
+            prod = 1
+            for name, size in batch_axes:
+                if a.shape[0] % (prod * size) == 0:
+                    names.append(name)
+                    prod *= size
+                else:
+                    break
+            if not names:
+                return a
+            entry = names[0] if len(names) == 1 else tuple(names)
+            return jax.lax.with_sharding_constraint(
+                a, P(entry, *([None] * (a.ndim - 1)))
+            )
+        return jax.tree.map(pin_leaf, mb)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        params = state.params
+
+        if accum_steps == 1:
+            loss, grads = grad_fn(params, _pin_batch(batch))
+        else:
+            # (GB, ...) -> (accum, mb, ...)
+            mb_batch = jax.tree.map(
+                lambda a: a.reshape((accum_steps, a.shape[0] // accum_steps) + a.shape[1:]),
+                batch,
+            )
+
+            def mb_step(acc, mb):
+                gsum, lsum = acc
+                mb = _pin_batch(mb)
+                l, g = grad_fn(params, mb)
+                gsum = jax.tree.map(lambda a, b: a + b.astype(a.dtype), gsum, g)
+                return (gsum, lsum + l), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, p.dtype), params
+            )
+            (gsum, lsum), _ = jax.lax.scan(mb_step, (g0, jnp.float32(0)), mb_batch)
+            scale = 1.0 / accum_steps
+            grads = jax.tree.map(lambda g: g * jnp.asarray(scale, g.dtype), gsum)
+            loss = lsum * scale
+
+        new_params, new_opt = optimizer.update(grads, state.opt_state, params, state.step)
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads))
+        )
+        metrics = {"loss": loss, "grad_norm": gnorm, "step": state.step}
+        return TrainState(state.step + 1, new_params, new_opt), metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig, kind: str, max_len: Optional[int] = None):
+    """kind = 'prefill' | 'decode'.
+
+    prefill: (params, batch) -> (logits, cache)
+    decode : (params, cache, token, pos) -> (logits, cache)
+    """
+    mod = encdec if cfg.family == "encdec" else lm
+
+    if kind == "prefill":
+        if cfg.family == "encdec":
+            def prefill_step(params, batch):
+                return encdec.prefill(params, batch, cfg)
+        else:
+            def prefill_step(params, batch):
+                return lm.prefill(params, batch, cfg, max_len=max_len)
+        return prefill_step
+
+    if kind == "decode":
+        def decode_step(params, cache, token, pos):
+            return mod.decode(params, cache, token, pos, cfg)
+        return decode_step
+
+    raise ValueError(kind)

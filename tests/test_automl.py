@@ -1,0 +1,68 @@
+"""JAX-native AutoML engine: learns, restricts, budgets."""
+import numpy as np
+import pytest
+
+from repro.automl.engine import AutoMLConfig, automl_fit
+from repro.automl.models import FAMILIES, accuracy, train_model, predict_model
+import jax
+import jax.numpy as jnp
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(0)
+    N = 600
+    y = rng.integers(0, 2, N)
+    X = np.column_stack([
+        y * 2.0 + rng.normal(0, 0.5, N),
+        -y * 1.5 + rng.normal(0, 0.5, N),
+        rng.normal(0, 1, N),
+    ]).astype(np.float32)
+    return X[:500], y[:500], X[500:], y[500:]
+
+
+def test_each_family_trains(data):
+    X, y, Xt, yt = data
+    for fam in FAMILIES:
+        hp = {k: v[0] for k, v in FAMILIES[fam].hp_grid.items()}
+        params = train_model(jax.random.key(0), jnp.asarray(X), jnp.asarray(y),
+                             fam, 2, hp, epochs=40)
+        acc = accuracy(params, jnp.asarray(Xt), jnp.asarray(yt), fam)
+        assert acc > 0.7, f"{fam} acc {acc}"
+
+
+def test_automl_finds_good_pipeline(data):
+    X, y, Xt, yt = data
+    res = automl_fit(X, y, config=AutoMLConfig(n_trials=8, rungs=(20, 60)),
+                     X_test=Xt, y_test=yt)
+    assert res.val_acc > 0.85
+    assert res.test_acc > 0.85
+    assert res.n_trials >= 8
+    assert res.time_s > 0
+
+
+def test_automl_restrict_family(data):
+    X, y, _, _ = data
+    res = automl_fit(X, y, config=AutoMLConfig(n_trials=6, rungs=(20,)),
+                     restrict_family="logreg")
+    assert res.spec.family == "logreg"
+    assert all(s.family == "logreg" for s, _ in res.trials)
+
+
+def test_automl_time_budget(data):
+    X, y, _, _ = data
+    res = automl_fit(X, y, config=AutoMLConfig(
+        n_trials=64, rungs=(20, 60, 120), time_budget_s=3.0))
+    # budget cuts the search well short of 64 * 3 rungs
+    assert res.n_trials < 150
+    assert res.val_acc > 0.5
+
+
+def test_automl_multiclass():
+    rng = np.random.default_rng(1)
+    N = 400
+    y = rng.integers(0, 3, N)
+    X = np.column_stack([(y == k) * 2.0 + rng.normal(0, 0.4, N) for k in range(3)])
+    res = automl_fit(X.astype(np.float32), y,
+                     config=AutoMLConfig(n_trials=6, rungs=(30,)))
+    assert res.val_acc > 0.8

@@ -1,0 +1,69 @@
+"""The 10 baseline DST generators (paper §4.2): validity + sanity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.baselines import (
+    mc_dst, mab_dst, greedy_seq_dst, greedy_mult_dst, km_dst,
+    ig_rand_dst, ig_km_dst, information_gain, kmeans,
+)
+from repro.core.measures import factorize
+
+
+@pytest.fixture(scope="module")
+def coded():
+    rng = np.random.default_rng(3)
+    y = rng.integers(0, 2, 800)
+    informative = y * 3 + rng.integers(0, 3, 800)      # strongly y-dependent
+    noise = [rng.integers(0, 8, 800) for _ in range(4)]
+    X = np.column_stack([informative] + noise).astype(float)
+    return factorize(X, y.astype(float))
+
+
+ALL_BASELINES = [
+    ("mc", lambda k, c: mc_dst(k, c, 20, 3, budget=60, batch=20)),
+    ("mab", lambda k, c: mab_dst(k, c, 20, 3, rounds=30)),
+    ("greedy_seq", lambda k, c: greedy_seq_dst(k, c, 20, 3, pool=16)),
+    ("greedy_mult", lambda k, c: greedy_mult_dst(k, c, 20, 3, pool=16)),
+    ("km", lambda k, c: km_dst(k, c, 20, 3)),
+    ("ig_rand", lambda k, c: ig_rand_dst(k, c, 20, 3)),
+    ("ig_km", lambda k, c: ig_km_dst(k, c, 20, 3)),
+]
+
+
+@pytest.mark.parametrize("name,fn", ALL_BASELINES, ids=[n for n, _ in ALL_BASELINES])
+def test_baseline_valid_dst(name, fn, coded):
+    res = fn(jax.random.key(0), coded)
+    assert res.row_idx.shape == (20,)
+    assert (np.asarray(res.row_idx) >= 0).all()
+    assert (np.asarray(res.row_idx) < coded.num_rows).all()
+    assert bool(res.col_mask[coded.target_col])
+    assert 2 <= int(res.col_mask.sum()) <= 3
+    assert np.isfinite(float(res.fitness))
+
+
+def test_mc_budget_improves(coded):
+    small = mc_dst(jax.random.key(1), coded, 20, 3, budget=10, batch=10)
+    big = mc_dst(jax.random.key(1), coded, 20, 3, budget=400, batch=50)
+    assert float(big.fitness) >= float(small.fitness) - 1e-6
+
+
+def test_information_gain_finds_informative_column(coded):
+    ig = np.asarray(information_gain(coded.codes, coded.max_bins, coded.target_col))
+    assert ig.argmax() == 0, f"IG should pick the y-correlated column, got {ig}"
+
+
+def test_ig_dsts_select_informative(coded):
+    res = ig_rand_dst(jax.random.key(2), coded, 20, 3)
+    assert bool(res.col_mask[0]), "IG column selection must include informative col"
+
+
+def test_kmeans_basics():
+    rng = np.random.default_rng(0)
+    pts = np.concatenate([rng.normal(-5, 0.3, (50, 2)), rng.normal(5, 0.3, (50, 2))])
+    cent, nearest = kmeans(jax.random.key(0), jnp.asarray(pts, jnp.float32), 2, iters=10)
+    assert cent.shape == (2, 2)
+    assert nearest.shape == (2,)
+    # the two representatives come from different clusters
+    assert (pts[np.asarray(nearest)][:, 0] < 0).sum() == 1

@@ -1,0 +1,103 @@
+"""Fault tolerance: restart-equivalence, shard reassignment, stragglers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.distributed.fault import FaultTolerantLoop, Heartbeat, assign_shards
+
+
+# ---------------------------------------------------------------------------
+# assign_shards
+# ---------------------------------------------------------------------------
+
+
+def test_assign_all_alive():
+    a = assign_shards(8, list(range(4)), 4)
+    assert a == {s: s % 4 for s in range(8)}
+
+
+def test_assign_dead_host_rebalanced():
+    a = assign_shards(8, [0, 2, 3], 4)
+    assert all(h in (0, 2, 3) for h in a.values())
+    # surviving hosts keep their home shards
+    for s in range(8):
+        if s % 4 != 1:
+            assert a[s] == s % 4
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 32), st.integers(1, 8), st.integers(0, 2 ** 8 - 1))
+def test_assign_shards_properties(n_shards, n_hosts, alive_bits):
+    alive = [h for h in range(n_hosts) if alive_bits & (1 << h)]
+    if not alive:
+        alive = [0]
+    a = assign_shards(n_shards, alive, n_hosts)
+    assert set(a.keys()) == set(range(n_shards))       # every shard assigned
+    assert all(h in alive for h in a.values())          # only to alive hosts
+    # balance: no alive host holds more than ceil(n/alive)+floor share slack
+    from collections import Counter
+    counts = Counter(a.values())
+    assert max(counts.values()) <= int(np.ceil(n_shards / len(alive))) + \
+        n_shards // max(len(alive), 1)
+
+
+# ---------------------------------------------------------------------------
+# heartbeat / stragglers
+# ---------------------------------------------------------------------------
+
+
+def test_heartbeat_stragglers():
+    hb = Heartbeat(n_hosts=4, straggler_factor=3.0)
+    for h in range(3):
+        hb.beat(h, 1.0)
+    hb.beat(3, 10.0)
+    assert hb.stragglers() == [3]
+
+
+# ---------------------------------------------------------------------------
+# restart equivalence
+# ---------------------------------------------------------------------------
+
+
+def _make_loop(tmp_path):
+    def step_fn(state, batch):
+        new = {"x": state["x"] * 0.9 + batch.sum(), "n": state["n"] + 1}
+        return new, {"x": new["x"]}
+
+    def batch_fn(step):
+        rng = np.random.default_rng(step)
+        return jnp.asarray(rng.normal(0, 1, (4,)), jnp.float32)
+
+    return FaultTolerantLoop(step_fn, batch_fn, tmp_path, ckpt_every=3)
+
+
+def test_restart_reproduces_uninterrupted_run(tmp_path):
+    init = {"x": jnp.float32(1.0), "n": jnp.int32(0)}
+    golden, _ = _make_loop(tmp_path / "golden").run(init, 10)
+
+    loop = _make_loop(tmp_path / "crashy")
+    with pytest.raises(RuntimeError, match="simulated node failure"):
+        loop.run(init, 10, simulate_failure_at=7)
+    resumed, _ = _make_loop(tmp_path / "crashy").run(init, 10)
+
+    assert int(resumed["n"]) == int(golden["n"]) == 10
+    np.testing.assert_allclose(float(resumed["x"]), float(golden["x"]), rtol=1e-6)
+
+
+def test_restart_skips_completed_steps(tmp_path):
+    init = {"x": jnp.float32(1.0), "n": jnp.int32(0)}
+    loop = _make_loop(tmp_path)
+    loop.run(init, 6)
+    calls = []
+    loop2 = _make_loop(tmp_path)
+    orig = loop2.step_fn
+
+    def counting(state, batch):
+        calls.append(1)
+        return orig(state, batch)
+
+    loop2.step_fn = counting
+    loop2.run(init, 10)
+    assert len(calls) == 4, "only steps 6..9 re-run after restore"

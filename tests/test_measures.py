@@ -1,0 +1,117 @@
+"""Dataset-entropy measure: paper worked-example values + invariances."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.measures import (
+    factorize, dataset_entropy, subset_entropy, full_column_entropy,
+    column_counts, column_entropy_from_counts,
+    measure_pnorm, measure_mean_correlation, measure_coeff_variation,
+)
+
+# Table 1 of the paper (flight service review sample)
+X_PAPER = np.array([
+    [25, 1, 460, 18], [62, 1, 460, 0], [25, 0, 460, 40], [41, 0, 460, 0],
+    [27, 1, 460, 0], [41, 1, 1061, 0], [20, 0, 1061, 0], [25, 0, 1061, 51],
+    [13, 0, 1061, 0], [52, 1, 1061, 0]], dtype=float)
+Y_PAPER = np.array([1, 0, 1, 1, 1, 0, 0, 0, 1, 1], dtype=float)
+
+
+@pytest.fixture(scope="module")
+def coded_paper():
+    return factorize(X_PAPER, Y_PAPER)
+
+
+def test_paper_example_full_entropy(coded_paper):
+    """Example 3.5: H(D) = 1.395."""
+    h = float(dataset_entropy(coded_paper.codes, coded_paper.max_bins))
+    assert abs(h - 1.395) < 5e-3
+
+
+def test_paper_example_column_entropies(coded_paper):
+    hcols = np.asarray(full_column_entropy(coded_paper.codes, coded_paper.max_bins))
+    # paper: 2.65, 1, 1, 1.4(≈1.36 exact), 0.97
+    np.testing.assert_allclose(hcols[0], 2.646, atol=5e-3)
+    np.testing.assert_allclose(hcols[1], 1.0, atol=5e-3)
+    np.testing.assert_allclose(hcols[2], 1.0, atol=5e-3)
+    np.testing.assert_allclose(hcols[4], 0.971, atol=5e-3)
+
+
+def test_paper_example_green_red_dsts(coded_paper):
+    """Example 3.5: H(d_green)=1.42 (measure-preserving), H(d_red)=0.89."""
+    green_rows = jnp.array([0, 1, 2, 5, 7])
+    green_cols = jnp.zeros(5, bool).at[jnp.array([0, 3, 4])].set(True)
+    red_rows = jnp.array([3, 4, 6, 8, 9])
+    red_cols = jnp.zeros(5, bool).at[jnp.array([1, 2, 4])].set(True)
+    hg = float(subset_entropy(coded_paper.codes, green_rows, green_cols, coded_paper.max_bins))
+    hr = float(subset_entropy(coded_paper.codes, red_rows, red_cols, coded_paper.max_bins))
+    assert abs(hg - 1.42) < 0.01
+    assert abs(hr - 0.89) < 0.01
+    h_full = float(dataset_entropy(coded_paper.codes, coded_paper.max_bins))
+    assert abs(hg - h_full) < abs(hr - h_full)  # green preserves, red doesn't
+
+
+def test_full_entropy_chunking_consistent(coded_paper):
+    h1 = full_column_entropy(coded_paper.codes, coded_paper.max_bins, chunk=4)
+    h2 = full_column_entropy(coded_paper.codes, coded_paper.max_bins, chunk=1024)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 40), st.integers(2, 6), st.integers(0, 1000))
+def test_entropy_row_permutation_invariant(n, m, seed):
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(0, 5, (n, m)), jnp.int32)
+    perm = jnp.asarray(rng.permutation(n))
+    h1 = dataset_entropy(codes, 8)
+    h2 = dataset_entropy(codes[perm], 8)
+    assert abs(float(h1) - float(h2)) < 1e-5
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 30), st.integers(2, 5), st.integers(0, 1000))
+def test_entropy_bounds(n, m, seed):
+    """0 <= H_j <= log2(n): entropy of n samples is at most log2 n."""
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(0, 7, (n, m)), jnp.int32)
+    h = float(dataset_entropy(codes, 8))
+    assert -1e-6 <= h <= np.log2(n) + 1e-6
+
+
+def test_constant_column_zero_entropy():
+    codes = jnp.zeros((16, 3), jnp.int32)
+    assert float(dataset_entropy(codes, 4)) == pytest.approx(0.0, abs=1e-6)
+
+
+def test_factorize_quantile_binning():
+    rng = np.random.default_rng(0)
+    X = rng.normal(0, 1, (5000, 2))
+    coded = factorize(X, rng.integers(0, 2, 5000), max_bins=64)
+    assert int(coded.n_bins.max()) <= 64
+    assert coded.codes.shape == (5000, 3)
+    # codes preserve order: higher raw value => code >= (monotone binning)
+    col = np.asarray(coded.values[:, 0])
+    cds = np.asarray(coded.codes[:, 0])
+    order = np.argsort(col)
+    assert (np.diff(cds[order]) >= 0).all()
+
+
+def test_alternative_measures_run(coded_paper):
+    rows = jnp.array([0, 1, 2, 5, 7])
+    cols = jnp.zeros(5, bool).at[jnp.array([0, 3, 4])].set(True)
+    for fn in (measure_pnorm, measure_mean_correlation, measure_coeff_variation):
+        full = float(fn(coded_paper.values))
+        sub = float(fn(coded_paper.values, rows, cols))
+        assert np.isfinite(full) and np.isfinite(sub)
+
+
+def test_weighted_counts_match_subset():
+    rng = np.random.default_rng(1)
+    codes = jnp.asarray(rng.integers(0, 6, (50, 4)), jnp.int32)
+    rows = jnp.asarray(rng.choice(50, 12, replace=False))
+    mask = jnp.zeros((50,)).at[rows].set(1.0)
+    c_mask = column_counts(codes, 8, weights=mask)
+    c_gather = column_counts(jnp.take(codes, rows, axis=0), 8)
+    np.testing.assert_allclose(np.asarray(c_mask), np.asarray(c_gather))

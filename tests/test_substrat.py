@@ -1,0 +1,82 @@
+"""End-to-end SubStrat strategy (paper §1.1 / §3.4): the three steps wire
+together, fine-tune restricts to M''s family, and relative accuracy on a
+learnable dataset stays high."""
+import jax
+import numpy as np
+import pytest
+
+from repro.automl.engine import AutoMLConfig, automl_fit
+from repro.core.gen_dst import GenDSTConfig
+from repro.core.substrat import SubStratConfig, substrat
+from repro.core.baselines import ig_km_dst, mc_dst
+from repro.data.tabular import DatasetSpec, make_dataset, train_test_split
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    spec = DatasetSpec("t", "test", 3000, 10, 2, frac_informative=0.6, seed=5)
+    X, y = make_dataset(spec)
+    return train_test_split(X, y, 0.25, seed=1)
+
+
+SUB_CFG = SubStratConfig(
+    gen=GenDSTConfig(psi=6, phi=12),
+    sub_automl=AutoMLConfig(n_trials=8, rungs=(20, 60)),
+    ft_automl=AutoMLConfig(n_trials=4, rungs=(60,)),
+)
+
+
+@pytest.fixture(scope="module")
+def full_result(dataset):
+    Xtr, ytr, Xte, yte = dataset
+    return automl_fit(Xtr, ytr, config=AutoMLConfig(n_trials=8, rungs=(20, 60)),
+                      X_test=Xte, y_test=yte)
+
+
+@pytest.fixture(scope="module")
+def sub_result(dataset):
+    Xtr, ytr, Xte, yte = dataset
+    return substrat(Xtr, ytr, key=jax.random.key(0), config=SUB_CFG,
+                    X_test=Xte, y_test=yte)
+
+
+def test_substrat_runs_all_phases(sub_result):
+    for k in ("factorize_s", "gen_dst_s", "automl_sub_s", "fine_tune_s"):
+        assert k in sub_result.times
+    assert sub_result.total_time_s > 0
+
+
+def test_substrat_restricts_family(sub_result):
+    assert sub_result.final.spec.family == sub_result.intermediate.spec.family
+
+
+def test_substrat_dst_size(sub_result, dataset):
+    Xtr, *_ = dataset
+    n_expected = int(round(len(Xtr) ** 0.5))
+    assert sub_result.row_idx.shape == (n_expected,)
+    assert len(sub_result.col_idx) >= 1
+
+
+def test_substrat_relative_accuracy(sub_result, full_result):
+    rel = sub_result.final.test_acc / max(full_result.test_acc, 1e-9)
+    assert rel >= 0.90, f"relative accuracy {rel:.3f} too low"
+
+
+def test_substrat_nf_variant(dataset):
+    Xtr, ytr, Xte, yte = dataset
+    import dataclasses
+    cfg = dataclasses.replace(SUB_CFG, fine_tune=False)
+    res = substrat(Xtr, ytr, key=jax.random.key(1), config=cfg,
+                   X_test=Xte, y_test=yte)
+    assert "fine_tune_s" not in res.times
+    assert res.final.test_acc is not None
+
+
+def test_substrat_with_baseline_dst(dataset):
+    """Any baseline DST generator plugs into the same 3-step wrapper."""
+    Xtr, ytr, Xte, yte = dataset
+    for fn in (lambda k, c, n, m: mc_dst(k, c, n, m, budget=40, batch=20),
+               ig_km_dst):
+        res = substrat(Xtr, ytr, key=jax.random.key(2), config=SUB_CFG,
+                       dst_fn=fn, X_test=Xte, y_test=yte)
+        assert res.final.test_acc is not None
