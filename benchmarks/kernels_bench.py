@@ -78,6 +78,47 @@ def main():
     return rows
 
 
+def gen_dst_rows(N=100_000, psi=24, phi=100, cross_every=4, quick_tag="100k"):
+    """Generation-step timing: incremental fitness vs full recompute, islands.
+
+    The incremental-vs-full pair shares the GA trajectory bit-for-bit (same
+    key, same cadence), so the speedup isolates exactly the fitness-path
+    change (DESIGN.md §5.5).  Acceptance target: >=2x at N>=100k.
+    """
+    rng = np.random.default_rng(0)
+    X = np.column_stack([rng.integers(0, k, N)
+                         for k in (3, 5, 17, 2, 40, 7, 200, 11)]).astype(float)
+    y = rng.integers(0, 2, N).astype(float)
+    coded = factorize(X, y)
+
+    def run(cfg, key=1):
+        res = gen_dst(jax.random.key(0), coded, cfg=cfg)   # warmup/compile
+        jax.block_until_ready(res.fitness)
+        t0 = time.perf_counter()
+        res = gen_dst(jax.random.key(key), coded, cfg=cfg)
+        jax.block_until_ready(res.fitness)
+        return (time.perf_counter() - t0) / cfg.psi * 1e6, res  # us/generation
+
+    rows = []
+    cfg = GenDSTConfig(psi=psi, phi=phi, cross_every=cross_every)
+    us_full, r_full = run(cfg._replace(incremental=False))
+    us_inc, r_inc = run(cfg)
+    assert float(r_full.fitness) == float(r_inc.fitness), "parity broken"
+    rows.append((f"gen_dst_step_full_{quick_tag}", us_full,
+                 f"loss={-float(r_full.fitness):.5f}"))
+    rows.append((f"gen_dst_step_incremental_{quick_tag}", us_inc,
+                 f"speedup={us_full / us_inc:.2f}x"))
+
+    isl = GenDSTConfig(psi=psi, phi=max(2, phi // 4) // 2 * 2, num_islands=4,
+                       migrate_every=5, cross_every=cross_every)
+    us_isl, r_isl = run(isl)
+    rows.append((f"gen_dst_step_islands4_{quick_tag}", us_isl,
+                 f"loss={-float(r_isl.fitness):.5f}"))
+    return rows
+
+
 if __name__ == "__main__":
     for name, us, derived in main():
+        print(f"{name},{us:.1f},{derived}")
+    for name, us, derived in gen_dst_rows(N=20_000, psi=12, quick_tag="20k"):
         print(f"{name},{us:.1f},{derived}")

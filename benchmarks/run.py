@@ -24,7 +24,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--skip", nargs="*", default=[],
                     help="section names to skip (table4 fig2 fig3 fig4 fig5 "
-                         "kernels roofline)")
+                         "kernels gen_dst roofline)")
     args = ap.parse_args()
 
     quick = not args.full
@@ -34,6 +34,8 @@ def main() -> None:
 
     if "kernels" not in args.skip:
         sections.append(("kernels", _run_kernels))
+    if "gen_dst" not in args.skip:
+        sections.append(("gen_dst", lambda: _run_gen_dst(quick)))
     if "table4" not in args.skip:
         sections.append(("table4", lambda: _run_table4(quick)))
     if "fig2" not in args.skip:
@@ -67,6 +69,18 @@ def _run_kernels():
     _section("kernel micro-benchmarks (name,us_per_call,derived)")
     from .kernels_bench import main as kmain
     for name, us, derived in kmain():
+        print(f"{name},{us:.1f},{derived}")
+
+
+def _run_gen_dst(quick):
+    _section("Gen-DST search loop: incremental fitness + islands "
+             "(name,us_per_generation,derived)")
+    from .kernels_bench import gen_dst_rows
+    if quick:
+        rows = gen_dst_rows(N=20_000, psi=12, quick_tag="20k")
+    else:
+        rows = gen_dst_rows(N=100_000, psi=24, quick_tag="100k")
+    for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
 
 

@@ -11,6 +11,21 @@ runs on device under one ``lax.scan`` over generations: no host round trips.
 Fitness is the paper's ``f(G) = -|F(D[r,c]) - F(D)|`` with F = dataset
 entropy evaluated via masked histograms (see measures.py / kernels/entropy).
 
+Search-loop architecture (DESIGN.md §5.5):
+  * Incremental fitness: each candidate's (M, B) count tensor rides in the
+    scan carry.  A row mutation replaces exactly one row, so its histogram
+    delta is one subtract + one add of a single row's codes — O(M) scatter
+    work instead of an O(n*M) re-gather.  Column mutation/crossover never
+    touches counts at all: counts cover all M columns, the column mask only
+    reweights the entropy average.  Full recomputes happen only on
+    row-crossover generations (``cross_every`` cadence) and route through
+    ``kernels/entropy`` under the ``backend=`` switch ("jnp" scatter-add
+    reference, or the Pallas MXU kernel).
+  * Islands: ``num_islands`` independent sub-populations evolved under one
+    vmap, with ring elite migration every ``migrate_every`` generations
+    (each island's worst ``migrate_frac * phi`` candidates are replaced by
+    its neighbour's best).  Multi-start search at no extra wall-clock depth.
+
 Fixed-shape set operations:
   * "choose k random members of a mask" and "refill a mask to size m" use
     rank-of-random-scores tricks (double argsort) — O(M log M), fixed shape.
@@ -33,17 +48,25 @@ from .measures import (
     subset_counts,
     MEASURES,
 )
+from ..kernels.entropy.ops import population_histogram, resolve_interpret
 
 __all__ = ["GenDSTConfig", "DSTResult", "gen_dst", "default_dst_size", "random_dst"]
 
 
 class GenDSTConfig(NamedTuple):
     psi: int = 30          # generations
-    phi: int = 100         # population size (must be even)
+    phi: int = 100         # population size PER ISLAND (must be even)
     xi: float = 0.025      # mutation probability per candidate
     alpha: float = 0.05    # royalty (elite) fraction
     p_rc: float = 0.9      # P(mutate/cross rows) vs columns
     measure: str = "entropy"
+    # --- search-loop extensions (DESIGN.md §5.5) ---------------------------
+    backend: str = "jnp"   # full-recompute histogram backend: "jnp"|"pallas"
+    incremental: bool = True   # delta-update counts on mutation-only gens
+    cross_every: int = 1   # crossover every k-th generation (1 = seed-faithful)
+    num_islands: int = 1   # independent sub-populations (vmapped)
+    migrate_every: int = 5     # generations between elite migrations
+    migrate_frac: float = 0.1  # fraction of phi migrated per event
 
 
 class DSTResult(NamedTuple):
@@ -122,7 +145,7 @@ def _init_population(key, N: int, M: int, n: int, m: int, phi: int, target: int)
 
 
 def _entropy_fitness(codes, B, f_ref, rows, cols):
-    """Vectorized fitness over the population (entropy fast path)."""
+    """Vectorized fitness over the population (gather-recompute path)."""
     def one(r, cm):
         h = column_entropy_from_counts(subset_counts(codes, r, B))
         cmf = cm.astype(jnp.float32)
@@ -131,10 +154,46 @@ def _entropy_fitness(codes, B, f_ref, rows, cols):
     return jax.vmap(one)(rows, cols)
 
 
+def _counts_fitness(counts, cols, f_ref):
+    """Fitness from carried per-candidate counts: (..., M, B) + (..., M)."""
+    h = column_entropy_from_counts(counts)            # (..., M)
+    cmf = cols.astype(jnp.float32)
+    f_d = jnp.sum(h * cmf, axis=-1) / jnp.maximum(cmf.sum(axis=-1), 1.0)
+    return -jnp.abs(f_d - f_ref)
+
+
 def _generic_fitness(values, measure_fn, f_ref, rows, cols):
     def one(r, cm):
         return -jnp.abs(measure_fn(values, r, cm) - f_ref)
     return jax.vmap(one)(rows, cols)
+
+
+def _population_counts(codes, rows, B, *, backend, interpret):
+    """(..., phi, n) row indices -> (..., phi, M, B) per-candidate counts."""
+    lead = rows.shape[:-1]
+    n = rows.shape[-1]
+    M = codes.shape[1]
+    sub = jnp.take(codes, rows.reshape(-1, n), axis=0)        # (P, n, M)
+    hist = population_histogram(sub, B, backend=backend, interpret=interpret)
+    return hist.reshape(*lead, M, B)
+
+
+def _row_delta(codes, counts, old_rows, new_rows, applied):
+    """Delta-update per-candidate counts after a one-row mutation.
+
+    counts: (phi, M, B); old_rows/new_rows: (phi,) row indices; applied:
+    (phi,) bool — candidates whose mutation actually fired.  Subtracts the
+    evicted row's one-hot contribution and adds the fresh row's.
+    """
+    oc = jnp.take(codes, old_rows, axis=0)        # (phi, M)
+    nc = jnp.take(codes, new_rows, axis=0)
+    w = applied.astype(jnp.float32)[:, None]      # (phi, 1)
+    phi, M = oc.shape
+    ai = jnp.arange(phi)[:, None]
+    aj = jnp.arange(M)[None, :]
+    counts = counts.at[ai, aj, oc].add(-w)
+    counts = counts.at[ai, aj, nc].add(w)
+    return counts
 
 
 # ---------------------------------------------------------------------------
@@ -142,7 +201,13 @@ def _generic_fitness(values, measure_fn, f_ref, rows, cols):
 # ---------------------------------------------------------------------------
 
 
-def _mutate(key, rows, cols, *, N, M, n, m, xi, p_rc, target):
+def _mutate_core(key, rows, cols, *, N, M, n, m, xi, p_rc, target):
+    """Mutation + the bookkeeping incremental fitness needs.
+
+    Returns (new_rows, new_cols, applied, old_vals, fresh): ``applied`` marks
+    candidates whose ROW mutation fired; ``old_vals``/``fresh`` are the
+    evicted/inserted row indices (ignored where not applied).
+    """
     phi = rows.shape[0]
     k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
     do_mut = jax.random.uniform(k1, (phi,)) < xi
@@ -154,8 +219,9 @@ def _mutate(key, rows, cols, *, N, M, n, m, xi, p_rc, target):
     # skip if fresh already a member (keeps |r ∩ r'| = n-1 semantics cheaply)
     already = (rows == fresh[:, None]).any(axis=1)
     apply_row = do_mut & mut_rows & (~already)
+    old_vals = rows[jnp.arange(phi), slot]
     new_rows = rows.at[jnp.arange(phi), slot].set(
-        jnp.where(apply_row, fresh, rows[jnp.arange(phi), slot])
+        jnp.where(apply_row, fresh, old_vals)
     )
 
     # --- column mutation: swap one ON (non-target) for one OFF column -------
@@ -169,6 +235,13 @@ def _mutate(key, rows, cols, *, N, M, n, m, xi, p_rc, target):
     mutated_cols = jax.vmap(col_mut)(jax.random.split(k5, phi), cols)
     apply_col = (do_mut & (~mut_rows))[:, None]
     new_cols = jnp.where(apply_col, mutated_cols, cols)
+    return new_rows, new_cols, apply_row, old_vals, fresh
+
+
+def _mutate(key, rows, cols, *, N, M, n, m, xi, p_rc, target):
+    new_rows, new_cols, _, _, _ = _mutate_core(
+        key, rows, cols, N=N, M=M, n=n, m=m, xi=xi, p_rc=p_rc, target=target
+    )
     return new_rows, new_cols
 
 
@@ -230,7 +303,7 @@ def _crossover(key, rows, cols, *, N, M, n, m, p_rc, target):
     return new_rows, new_cols
 
 
-def _select(key, rows, cols, fitness, *, alpha):
+def _select_idx(key, fitness, *, alpha):
     """Royalty tournament: keep top alpha*phi, sample the rest ∝ fitness."""
     phi = fitness.shape[0]
     n_elite = max(1, int(round(alpha * phi)))
@@ -239,8 +312,41 @@ def _select(key, rows, cols, fitness, *, alpha):
     # fitness-proportional sampling on shifted fitness (fitness <= 0)
     w = fitness - fitness.min() + 1e-9
     drawn = jax.random.choice(key, phi, (phi - n_elite,), replace=True, p=w / w.sum())
-    keep = jnp.concatenate([elite, drawn])
+    return jnp.concatenate([elite, drawn])
+
+
+def _select(key, rows, cols, fitness, *, alpha):
+    keep = _select_idx(key, fitness, alpha=alpha)
     return rows[keep], cols[keep]
+
+
+# ---------------------------------------------------------------------------
+# island migration
+# ---------------------------------------------------------------------------
+
+
+def _ring_migrate(rows, cols, counts, fit, *, k):
+    """Replace each island's worst k candidates with its neighbour's best k.
+
+    All arrays carry an (num_islands, phi, ...) leading pair; the ring is a
+    roll over the island axis, so migration is one gather + one scatter.
+    """
+    I, phi = fit.shape
+
+    def gather(x, idx):
+        return jnp.take_along_axis(
+            x, idx.reshape(idx.shape + (1,) * (x.ndim - 2)), axis=1
+        )
+
+    order = jnp.argsort(-fit, axis=1)
+    best_i, worst_i = order[:, :k], order[:, phi - k:]
+    ai = jnp.arange(I)[:, None]
+
+    def swap(x):
+        incoming = jnp.roll(gather(x, best_i), 1, axis=0)
+        return x.at[ai, worst_i].set(incoming)
+
+    return swap(rows), swap(cols), swap(counts), swap(fit)
 
 
 # ---------------------------------------------------------------------------
@@ -254,41 +360,114 @@ def _select(key, rows, cols, fitness, *, alpha):
 )
 def _gen_dst_jit(key, codes, values, n, m, cfg: GenDSTConfig, B, target):
     N, M = codes.shape
-    if cfg.measure == "entropy":
+    I, phi = cfg.num_islands, cfg.phi
+    entropy = cfg.measure == "entropy"
+    interpret = resolve_interpret(None)
+
+    def pop_counts(rows):
+        return _population_counts(
+            codes, rows, B, backend=cfg.backend, interpret=interpret
+        )
+
+    if entropy:
         h_full = full_column_entropy(codes, B)
         f_ref = h_full.mean()
-        fitness_fn = lambda r, c: _entropy_fitness(codes, B, f_ref, r, c)
     else:
         measure_fn = MEASURES[cfg.measure]
         f_ref = measure_fn(values)
-        fitness_fn = lambda r, c: _generic_fitness(values, measure_fn, f_ref, r, c)
+
+    def fitness_of(rows, cols, counts):
+        if entropy:
+            return _counts_fitness(counts, cols, f_ref)
+        return jax.vmap(
+            lambda r, c: _generic_fitness(values, measure_fn, f_ref, r, c)
+        )(rows, cols)
+
+    mutate1 = functools.partial(
+        _mutate_core, N=N, M=M, n=n, m=m, xi=cfg.xi, p_rc=cfg.p_rc, target=target
+    )
+    cross1 = functools.partial(
+        _crossover, N=N, M=M, n=n, m=m, p_rc=cfg.p_rc, target=target
+    )
 
     k0, kloop = jax.random.split(key)
-    rows, cols = _init_population(k0, N, M, n, m, cfg.phi, target)
-    fit0 = fitness_fn(rows, cols)
-    best0 = jnp.argmax(fit0)
-    carry0 = (rows, cols, fit0[best0], rows[best0], cols[best0], kloop)
+    rows, cols = jax.vmap(
+        lambda kk: _init_population(kk, N, M, n, m, phi, target)
+    )(jax.random.split(k0, I))                                  # (I, phi, ...)
+    counts0 = pop_counts(rows) if entropy else jnp.zeros((I, phi, 1, 1), jnp.float32)
+    fit0 = fitness_of(rows, cols, counts0)
+    flat0 = fit0.reshape(-1)
+    b0 = jnp.argmax(flat0)
+    carry0 = (
+        rows, cols, counts0,
+        flat0[b0], rows.reshape(I * phi, n)[b0], cols.reshape(I * phi, M)[b0],
+        kloop,
+    )
 
-    def generation(carry, _):
-        rows, cols, best_f, best_r, best_c, key = carry
+    def generation(carry, gen_idx):
+        rows, cols, counts, best_f, best_r, best_c, key = carry
         key, km, kx, ksel = jax.random.split(key, 4)
-        rows2, cols2 = _mutate(
-            km, rows, cols, N=N, M=M, n=n, m=m, xi=cfg.xi, p_rc=cfg.p_rc, target=target
-        )
-        rows2, cols2 = _crossover(
-            kx, rows2, cols2, N=N, M=M, n=n, m=m, p_rc=cfg.p_rc, target=target
-        )
-        fit = fitness_fn(rows2, cols2)
-        gbest = jnp.argmax(fit)
-        better = fit[gbest] > best_f
-        best_f = jnp.where(better, fit[gbest], best_f)
-        best_r = jnp.where(better, rows2[gbest], best_r)
-        best_c = jnp.where(better, cols2[gbest], best_c)
-        rows3, cols3 = _select(ksel, rows2, cols2, fit, alpha=cfg.alpha)
-        return (rows3, cols3, best_f, best_r, best_c, key), best_f
 
-    carry, history = jax.lax.scan(generation, carry0, None, length=cfg.psi)
-    _, _, best_f, best_r, best_c, _ = carry
+        rows1, cols1, applied, old_vals, fresh = jax.vmap(mutate1)(
+            jax.random.split(km, I), rows, cols
+        )
+        xkeys = jax.random.split(kx, I)
+
+        def with_cross(_):
+            rows2, cols2 = jax.vmap(cross1)(xkeys, rows1, cols1)
+            counts2 = pop_counts(rows2) if entropy else counts
+            return rows2, cols2, counts2
+
+        def without_cross(_):
+            if not entropy:
+                return rows1, cols1, counts
+            if cfg.incremental:
+                counts2 = jax.vmap(
+                    lambda c, o, f_, a: _row_delta(codes, c, o, f_, a)
+                )(counts, old_vals, fresh, applied)
+            else:
+                counts2 = pop_counts(rows1)
+            return rows1, cols1, counts2
+
+        if cfg.cross_every == 1:
+            rows2, cols2, counts2 = with_cross(None)
+        else:
+            rows2, cols2, counts2 = jax.lax.cond(
+                gen_idx % cfg.cross_every == 0, with_cross, without_cross, None
+            )
+
+        fit = fitness_of(rows2, cols2, counts2)                 # (I, phi)
+        flat = fit.reshape(-1)
+        g = jnp.argmax(flat)
+        better = flat[g] > best_f
+        best_f = jnp.where(better, flat[g], best_f)
+        best_r = jnp.where(better, rows2.reshape(I * phi, n)[g], best_r)
+        best_c = jnp.where(better, cols2.reshape(I * phi, M)[g], best_c)
+
+        if I > 1:
+            k_mig = max(1, int(round(cfg.migrate_frac * phi)))
+            rows2, cols2, counts2, fit = jax.lax.cond(
+                (gen_idx + 1) % cfg.migrate_every == 0,
+                lambda op: _ring_migrate(*op, k=k_mig),
+                lambda op: op,
+                (rows2, cols2, counts2, fit),
+            )
+
+        keep = jax.vmap(lambda kk, f_: _select_idx(kk, f_, alpha=cfg.alpha))(
+            jax.random.split(ksel, I), fit
+        )                                                       # (I, phi)
+
+        def take(x):
+            return jnp.take_along_axis(
+                x, keep.reshape(keep.shape + (1,) * (x.ndim - 2)), axis=1
+            )
+
+        carry_out = (take(rows2), take(cols2), take(counts2),
+                     best_f, best_r, best_c, key)
+        return carry_out, best_f
+
+    carry, history = jax.lax.scan(generation, carry0, jnp.arange(cfg.psi))
+    _, _, _, best_f, best_r, best_c, _ = carry
     return best_r, best_c, best_f, history, f_ref
 
 
@@ -305,6 +484,7 @@ def gen_dst(
     n = dn if n is None else min(n, N)
     m = dm if m is None else min(m, M)
     assert cfg.phi % 2 == 0, "population size must be even (pairwise crossover)"
+    assert cfg.num_islands >= 1 and cfg.cross_every >= 1 and cfg.migrate_every >= 1
     best_r, best_c, best_f, history, f_ref = _gen_dst_jit(
         key, coded.codes, coded.values, n, m, cfg, coded.max_bins, coded.target_col
     )

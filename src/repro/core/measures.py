@@ -12,12 +12,20 @@ Categorical / discrete columns keep exact value identity (paper-faithful);
 continuous columns are quantile-binned to at most ``max_bins`` codes (see
 DESIGN.md §5.1 — Def. 3.4 is degenerate on unrepeated floats).
 
-Layout conventions
-------------------
-``codes``   : (N, M) int32 — per-cell code.
+Layout conventions (the ONE authoritative statement — every ``B``/histogram
+docstring in this repo defers here)
+---------------------------------------------------------------------------
+``codes``   : (N, M) int32 — per-cell code, column j's codes in
+              ``[0, n_bins[j])``.
 ``n_bins``  : (M,)  int32 — number of distinct codes per column.
-``B``       : static int — histogram width (>= max(n_bins)); padding bins
-              always have zero count, so they contribute 0 to the entropy.
+``B``       : static int — shared histogram width, ``B >= max(n_bins)``.
+              Histograms are (M, B) with one row per column.  Bins
+              ``b >= n_bins[j]`` are *padding*: no code ever lands there, so
+              their count is exactly zero, they carry zero probability mass,
+              and they contribute 0 to every entropy sum.  This is what lets
+              all M columns (and, in Gen-DST, all candidates) share one
+              fixed-shape histogram tensor regardless of per-column
+              cardinality.
 """
 from __future__ import annotations
 
@@ -56,7 +64,7 @@ class CodedDataset(NamedTuple):
     values: jax.Array         # (N, M) float32 (raw, un-normalized)
     n_bins: jax.Array         # (M,) int32
     target_col: int           # index of the target column (always in DSTs)
-    max_bins: int             # static histogram width B
+    max_bins: int             # histogram width B (see module docstring)
 
     @property
     def num_rows(self) -> int:
@@ -258,8 +266,19 @@ def measure_coeff_variation(values, row_idx=None, col_mask=None):
     return jnp.sum(cv * cm) / jnp.maximum(cm.sum(), 1.0)
 
 
+# Registry contract: ``MEASURES[name]`` is either
+#   * a callable ``fn(values, row_idx=None, col_mask=None) -> scalar`` that
+#     scores a (sub)dataset on raw float values — Gen-DST evaluates it per
+#     candidate with ``fn(values, rows, col_mask)`` and the reference value
+#     as ``fn(values)``; or
+#   * ``None`` for "entropy", which is NOT computed through this generic
+#     interface: entropy works on factorized codes, so Gen-DST routes it
+#     through the histogram fast path (carried per-candidate counts +
+#     kernels/entropy backends) instead of a values-based callable.  Code
+#     dispatching on a measure name must special-case ``"entropy"`` before
+#     indexing this dict.
 MEASURES = {
-    "entropy": None,  # handled natively by Gen-DST's histogram fast path
+    "entropy": None,
     "pnorm": measure_pnorm,
     "mean_correlation": measure_mean_correlation,
     "coeff_variation": measure_coeff_variation,

@@ -33,6 +33,20 @@ class SubStratConfig:
     sub_automl: AutoMLConfig = AutoMLConfig()
     # "restricted, much shorter" pass on the full data:
     ft_automl: AutoMLConfig = AutoMLConfig(n_trials=6, rungs=(60,))
+    # Gen-DST search-loop overrides (DESIGN.md §5.5).  When set, they win
+    # over the corresponding ``gen`` fields — convenience knobs so callers
+    # can turn on islands / the Pallas histogram backend without rebuilding
+    # the whole GenDSTConfig.
+    num_islands: Optional[int] = None
+    dst_backend: Optional[str] = None
+
+    def resolved_gen(self) -> GenDSTConfig:
+        gen = self.gen
+        if self.num_islands is not None:
+            gen = gen._replace(num_islands=self.num_islands)
+        if self.dst_backend is not None:
+            gen = gen._replace(backend=self.dst_backend)
+        return gen
 
 
 @dataclasses.dataclass
@@ -69,7 +83,7 @@ def substrat(
     # --- step 1: find the measure-preserving DST ------------------------------
     t0 = time.perf_counter()
     if dst_fn is None:
-        dst = gen_dst(key, coded, config.n, config.m, config.gen)
+        dst = gen_dst(key, coded, config.n, config.m, config.resolved_gen())
     else:
         dst = dst_fn(key, coded, config.n, config.m)
     row_idx = np.asarray(jax.device_get(dst.row_idx))

@@ -25,7 +25,13 @@ __all__ = ["assign_shards", "Heartbeat", "FaultTolerantLoop"]
 
 
 def assign_shards(n_shards: int, alive_hosts: Sequence[int], all_hosts: int):
-    """shard -> host map; stable for surviving hosts, orphans round-robin."""
+    """shard -> host map; stable for surviving hosts, orphans least-loaded.
+
+    Surviving hosts always keep their home shards (``s % all_hosts``); each
+    orphaned shard goes to the alive host with the fewest shards so far
+    (ties broken by host id — fully deterministic), which keeps the load
+    within one shard of balanced instead of piling orphans onto ``alive[0]``.
+    """
     alive = sorted(set(alive_hosts))
     if not alive:
         raise ValueError("no alive hosts")
@@ -37,8 +43,13 @@ def assign_shards(n_shards: int, alive_hosts: Sequence[int], all_hosts: int):
             assignment[s] = home
         else:
             orphans.append(s)
-    for i, s in enumerate(orphans):
-        assignment[s] = alive[i % len(alive)]
+    loads = {h: 0 for h in alive}
+    for h in assignment.values():
+        loads[h] += 1
+    for s in orphans:
+        h = min(alive, key=lambda x: (loads[x], x))
+        assignment[s] = h
+        loads[h] += 1
     return assignment
 
 

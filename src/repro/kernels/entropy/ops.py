@@ -1,9 +1,19 @@
 """Public ops for the entropy kernel: jit'd wrappers with a backend switch.
 
-``column_entropy_masked(codes, weights, bins)`` is the Gen-DST fitness
+``column_entropy_masked(codes, weights, bins)`` is the weighted-histogram
 primitive: per-column entropy of the weighted (membership-masked) rows.
-On TPU set ``use_pallas=True, interpret=False``; CPU tests run the kernel
-body in interpret mode against the ref oracle.
+``population_histogram`` is the Gen-DST batch primitive: per-candidate
+(M, B) histograms for a whole GA population in one call — on the Pallas
+path the population axis is folded into the column axis, so the entire
+population recompute is a single ``masked_histogram_pallas`` launch.
+
+Backend selection:
+  * ``backend="jnp"``     — XLA scatter-add reference (`ref.py`); the
+    production path on CPU and the correctness oracle everywhere.
+  * ``backend="pallas"``  — the MXU one-hot-contraction kernel
+    (`kernel.py`).  On TPU pass ``interpret=False``; CPU tests and the
+    default ``interpret=None`` (auto) run the kernel body in interpret
+    mode, which validates semantics but is slow — never the CPU prod path.
 """
 from __future__ import annotations
 
@@ -15,7 +25,19 @@ import jax.numpy as jnp
 from .kernel import masked_histogram_pallas
 from .ref import masked_histogram_ref, entropy_from_hist
 
-__all__ = ["masked_histogram", "column_entropy_masked"]
+__all__ = [
+    "masked_histogram",
+    "column_entropy_masked",
+    "population_histogram",
+    "resolve_interpret",
+]
+
+
+def resolve_interpret(interpret=None) -> bool:
+    """Pallas interpret-mode default: compiled on TPU, interpreted elsewhere."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
 
 
 def masked_histogram(
@@ -39,3 +61,30 @@ def column_entropy_masked(
 ) -> jax.Array:
     """(M,) per-column entropy of the masked rows."""
     return entropy_from_hist(masked_histogram(codes, weights, bins, **kw))
+
+
+@functools.partial(jax.jit, static_argnames=("bins", "backend", "interpret"))
+def population_histogram(
+    sub_codes: jax.Array,        # (P, n, M) int32 — gathered candidate subsets
+    bins: int,
+    *,
+    backend: str = "jnp",
+    interpret: bool | None = None,   # None = auto: compiled on TPU
+) -> jax.Array:
+    """Per-candidate histograms: out[p, m, b] = |{i : sub_codes[p, i, m] == b}|.
+
+    The Pallas route reshapes the population into the column axis —
+    (P, n, M) -> (n, P*M) — so one kernel launch covers every candidate
+    (each candidate's columns are independent; uniform weights).
+    """
+    P, n, M = sub_codes.shape
+    ones = jnp.ones((n,), jnp.float32)
+    if backend == "pallas":
+        flat = sub_codes.transpose(1, 0, 2).reshape(n, P * M)
+        hist = masked_histogram_pallas(
+            flat, ones, bins, interpret=resolve_interpret(interpret)
+        )
+        return hist.reshape(P, M, bins)
+    if backend != "jnp":
+        raise ValueError(f"unknown histogram backend: {backend!r}")
+    return jax.vmap(lambda c: masked_histogram_ref(c, ones, bins))(sub_codes)

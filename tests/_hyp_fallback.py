@@ -1,0 +1,71 @@
+"""Tiny stand-in for the parts of ``hypothesis`` this suite uses.
+
+When the real ``hypothesis`` package is installed it is always preferred
+(test modules try it first); this fallback only exists so the tier-1 suite
+collects and passes in minimal environments.  It implements deterministic
+pseudo-random example generation for ``@given`` over ``st.integers`` /
+``st.floats`` — no shrinking, no database, no deadlines.
+"""
+from __future__ import annotations
+
+import random
+
+__all__ = ["given", "settings", "strategies"]
+
+_DEFAULT_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, min_value, max_value, draw):
+        self.min_value = min_value
+        self.max_value = max_value
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class strategies:  # noqa: N801 — mimics the `hypothesis.strategies` module
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(min_value, max_value,
+                         lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(min_value, max_value,
+                         lambda rng: rng.uniform(min_value, max_value))
+
+
+def settings(max_examples=_DEFAULT_EXAMPLES, **_ignored):
+    """Decorator: records ``max_examples`` on a ``@given``-wrapped test."""
+    def deco(fn):
+        fn._hyp_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats):
+    """Decorator: runs the test once per generated example.
+
+    The two boundary tuples (all-min, all-max) always run first; the rest
+    are drawn from an RNG seeded by the test name, so failures reproduce.
+    """
+    def deco(fn):
+        # NB: no functools.wraps — pytest must see the wrapper's zero-arg
+        # signature, not fn's strategy parameters (it would hunt fixtures).
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_hyp_max_examples", _DEFAULT_EXAMPLES)
+            rng = random.Random(fn.__name__)
+            examples = [
+                tuple(s.min_value for s in strats),
+                tuple(s.max_value for s in strats),
+            ]
+            while len(examples) < n:
+                examples.append(tuple(s.example(rng) for s in strats))
+            for ex in examples[:n]:
+                fn(*args, *ex, **kwargs)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

@@ -84,8 +84,8 @@ def test_async_manager(tmp_path, state):
 def test_resharded_restore(tmp_path, state):
     """Elastic rescale: restore onto (trivially different) shardings."""
     save_checkpoint(tmp_path, 4, state)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1,), ("data",))
     from jax.sharding import NamedSharding, PartitionSpec as P
     sh = jax.tree.map(lambda a: NamedSharding(mesh, P()), state)
     restored, step = restore_resharded(tmp_path, state, sh)

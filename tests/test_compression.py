@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal env — deterministic fallback, same API subset
+    from _hyp_fallback import given, settings, strategies as st
 
 from repro.distributed.compression import (
     ErrorFeedback, dequantize_int8, ef_compress, quantize_int8,

@@ -1,0 +1,137 @@
+"""Incremental fitness, island parallelism, and the histogram backend switch.
+
+Parity contracts (DESIGN.md §5.5): the incremental count path, the full
+recompute path, and both histogram backends must produce *identical* DSTs
+for the same key — counts are small integers, so every path is exact in f32
+and the GA trajectories coincide bitwise.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.gen_dst import GenDSTConfig, gen_dst
+from repro.core.measures import factorize, subset_entropy
+from repro.core.substrat import SubStratConfig
+from repro.kernels.entropy.ops import population_histogram
+
+
+@pytest.fixture(scope="module")
+def coded():
+    rng = np.random.default_rng(3)
+    X = np.column_stack([rng.integers(0, k, 1200)
+                         for k in (3, 5, 17, 2, 40, 7, 200)]).astype(float)
+    y = rng.integers(0, 2, 1200).astype(float)
+    return factorize(X, y)
+
+
+def _same_dst(r1, r2):
+    np.testing.assert_array_equal(np.asarray(r1.row_idx), np.asarray(r2.row_idx))
+    np.testing.assert_array_equal(np.asarray(r1.col_mask), np.asarray(r2.col_mask))
+    assert float(r1.fitness) == float(r2.fitness)
+
+
+# ---------------------------------------------------------------------------
+# incremental fitness
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cross_every", [2, 3])
+def test_incremental_matches_full_recompute(coded, cross_every):
+    cfg = GenDSTConfig(psi=9, phi=16, cross_every=cross_every, incremental=True)
+    r_inc = gen_dst(jax.random.key(5), coded, 30, 3, cfg)
+    r_full = gen_dst(jax.random.key(5), coded, 30, 3,
+                     cfg._replace(incremental=False))
+    _same_dst(r_inc, r_full)
+
+
+def test_incremental_fitness_is_true_loss(coded):
+    """Carried counts must never drift from the gather-from-scratch truth."""
+    cfg = GenDSTConfig(psi=10, phi=16, cross_every=5)  # 8 delta-only gens
+    res = gen_dst(jax.random.key(2), coded, 25, 3, cfg)
+    f_d = float(subset_entropy(coded.codes, res.row_idx, res.col_mask,
+                               coded.max_bins))
+    assert abs(abs(f_d - float(res.f_ref)) - (-float(res.fitness))) < 1e-5
+
+
+def test_cross_every_default_matches_invariants(coded):
+    """cross_every=1 keeps the seed-faithful shape/pinning invariants."""
+    res = gen_dst(jax.random.key(0), coded, 20, 3,
+                  GenDSTConfig(psi=6, phi=12, cross_every=1))
+    assert int(res.col_mask.sum()) == 3
+    assert bool(res.col_mask[coded.target_col])
+    assert (np.diff(np.asarray(res.history)) >= -1e-6).all()
+
+
+# ---------------------------------------------------------------------------
+# islands
+# ---------------------------------------------------------------------------
+
+
+def test_island_gen_dst_deterministic(coded):
+    cfg = GenDSTConfig(psi=8, phi=8, num_islands=4, migrate_every=3,
+                       cross_every=2)
+    r1 = gen_dst(jax.random.key(7), coded, 30, 3, cfg)
+    r2 = gen_dst(jax.random.key(7), coded, 30, 3, cfg)
+    _same_dst(r1, r2)
+
+
+def test_island_gen_dst_invariants(coded):
+    n, m = 30, 3
+    cfg = GenDSTConfig(psi=8, phi=8, num_islands=3, migrate_every=2)
+    res = gen_dst(jax.random.key(4), coded, n, m, cfg)
+    assert res.row_idx.shape == (n,)
+    assert int(res.col_mask.sum()) == m
+    assert bool(res.col_mask[coded.target_col])
+    assert (np.asarray(res.row_idx) >= 0).all()
+    assert (np.asarray(res.row_idx) < coded.num_rows).all()
+    assert res.history.shape == (cfg.psi,)
+    assert (np.diff(np.asarray(res.history)) >= -1e-6).all()
+    # best-so-far fitness must still equal the true loss of the best DST
+    f_d = float(subset_entropy(coded.codes, res.row_idx, res.col_mask,
+                               coded.max_bins))
+    assert abs(abs(f_d - float(res.f_ref)) - (-float(res.fitness))) < 1e-5
+
+
+def test_islands_with_generic_measure(coded):
+    cfg = GenDSTConfig(psi=5, phi=8, num_islands=2, migrate_every=2,
+                       cross_every=2, measure="pnorm")
+    res = gen_dst(jax.random.key(1), coded, 20, 3, cfg)
+    assert int(res.col_mask.sum()) == 3
+    assert np.isfinite(float(res.fitness))
+
+
+def test_substrat_config_island_override():
+    cfg = SubStratConfig(num_islands=4, dst_backend="pallas")
+    gen = cfg.resolved_gen()
+    assert gen.num_islands == 4 and gen.backend == "pallas"
+    assert SubStratConfig().resolved_gen() == GenDSTConfig()
+
+
+# ---------------------------------------------------------------------------
+# histogram backend switch
+# ---------------------------------------------------------------------------
+
+
+def test_population_histogram_backends_agree():
+    rng = np.random.default_rng(0)
+    sub = jnp.asarray(rng.integers(0, 11, (13, 40, 5)), jnp.int32)
+    h_jnp = population_histogram(sub, 11, backend="jnp")
+    h_pal = population_histogram(sub, 11, backend="pallas", interpret=True)
+    np.testing.assert_allclose(np.asarray(h_jnp), np.asarray(h_pal), atol=1e-4)
+    # mass conservation: every candidate/column histogram sums to n rows
+    np.testing.assert_allclose(np.asarray(h_pal.sum(-1)), 40.0)
+
+
+def test_population_histogram_rejects_unknown_backend():
+    sub = jnp.zeros((2, 4, 3), jnp.int32)
+    with pytest.raises(ValueError, match="backend"):
+        population_histogram(sub, 4, backend="cuda")
+
+
+def test_gen_dst_pallas_backend_matches_jnp(coded):
+    cfg = GenDSTConfig(psi=6, phi=12, cross_every=2)
+    r_jnp = gen_dst(jax.random.key(5), coded, 25, 3, cfg)
+    r_pal = gen_dst(jax.random.key(5), coded, 25, 3,
+                    cfg._replace(backend="pallas"))
+    _same_dst(r_jnp, r_pal)

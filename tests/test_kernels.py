@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal env — deterministic fallback, same API subset
+    from _hyp_fallback import given, settings, strategies as st
 
 from repro.kernels.entropy.kernel import masked_histogram_pallas
 from repro.kernels.entropy.ref import masked_histogram_ref, entropy_from_hist

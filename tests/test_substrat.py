@@ -20,7 +20,9 @@ def dataset():
 
 
 SUB_CFG = SubStratConfig(
-    gen=GenDSTConfig(psi=6, phi=12),
+    # 2-island multi-start Gen-DST (DESIGN.md §5.5) — also covers the island
+    # path end-to-end through the full 3-step strategy
+    gen=GenDSTConfig(psi=6, phi=12, num_islands=2, migrate_every=3),
     sub_automl=AutoMLConfig(n_trials=8, rungs=(20, 60)),
     ft_automl=AutoMLConfig(n_trials=4, rungs=(60,)),
 )
