@@ -1,0 +1,67 @@
+"""AutoML engine benchmark: sequential loop vs batched cohort (DESIGN.md §10.3).
+
+Runs ``automl_fit`` at the default 24-trial / 3-rung successive-halving
+budget with both backends on the same synthetic dataset and reports
+steady-state (post-compile) per-rung and total times, the end-to-end
+speedup, and same-seed winner parity.  Compile costs are amortized by one
+untimed warmup run per backend, mirroring the ``gen_dst_100k_steady``
+convention in ``kernels_bench.py``.
+
+Acceptance target (ISSUE 2): batched >= 3x over loop at the default budget.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.automl.engine import AutoMLConfig, automl_fit
+
+
+def _make_data(N: int, d: int, n_classes: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, n_classes, N)
+    X = np.column_stack([
+        (y == k % n_classes) * 1.5 + rng.normal(0, 0.8, N) for k in range(d)
+    ]).astype(np.float32)
+    return X, y
+
+
+def automl_rows(N=100, d=12, n_classes=3, quick_tag="dst100", reps=7):
+    """Returns ``(name, us, derived)`` rows for the ``automl`` bench section.
+
+    The default ``N=100`` is the sub-AutoML regime SubStrat cares about —
+    the DST of the repo's canonical 10k-row dataset (quickstart's D3) has
+    ``sqrt(N) = 100`` rows — where the loop backend's per-trial
+    dispatch/sync overhead dominates.  Timings are best-of-``reps``
+    steady-state runs after one untimed warmup."""
+    X, y = _make_data(N, d, n_classes)
+    rows, results = [], {}
+    for backend in ("loop", "batched"):
+        cfg = AutoMLConfig(backend=backend)        # default 24-trial / 3-rung
+        automl_fit(X, y, config=cfg)               # warmup: pay jit compiles
+        best, res = None, None
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            r = automl_fit(X, y, config=cfg)
+            t = time.perf_counter() - t0
+            if best is None or t < best:
+                best, res = t, r
+        results[backend] = (best, res)
+        for r_i, t_rung in enumerate(res.rung_times):
+            rows.append((f"automl_rung{r_i}_{backend}_{quick_tag}", t_rung * 1e6,
+                         f"epochs={cfg.rungs[r_i]}"))
+        rows.append((f"automl_total_{backend}_{quick_tag}", best * 1e6,
+                     f"n_trials={res.n_trials}"))
+    t_loop, r_loop = results["loop"]
+    t_bat, r_bat = results["batched"]
+    rows.append((
+        f"automl_batched_speedup_{quick_tag}", t_bat * 1e6,
+        f"speedup={t_loop / t_bat:.2f}x winner_parity={r_loop.spec == r_bat.spec}",
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in automl_rows():
+        print(f"{name},{us:.1f},{derived}")

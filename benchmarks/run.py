@@ -24,7 +24,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--skip", nargs="*", default=[],
                     help="section names to skip (table4 fig2 fig3 fig4 fig5 "
-                         "kernels gen_dst roofline)")
+                         "kernels gen_dst automl roofline)")
     args = ap.parse_args()
 
     quick = not args.full
@@ -36,6 +36,8 @@ def main() -> None:
         sections.append(("kernels", _run_kernels))
     if "gen_dst" not in args.skip:
         sections.append(("gen_dst", lambda: _run_gen_dst(quick)))
+    if "automl" not in args.skip:
+        sections.append(("automl", lambda: _run_automl(quick)))
     if "table4" not in args.skip:
         sections.append(("table4", lambda: _run_table4(quick)))
     if "fig2" not in args.skip:
@@ -80,6 +82,19 @@ def _run_gen_dst(quick):
         rows = gen_dst_rows(N=20_000, psi=12, quick_tag="20k")
     else:
         rows = gen_dst_rows(N=100_000, psi=24, quick_tag="100k")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+def _run_automl(quick):
+    _section("AutoML engine: sequential loop vs batched cohort, default "
+             "24-trial/3-rung budget (name,us,derived)")
+    from .automl_bench import automl_rows
+    # dst100 = the sub-AutoML regime (DST of quickstart's 10k-row dataset);
+    # the larger dataset shows the compute-bound end of the scale
+    rows = automl_rows(N=100, d=12, quick_tag="dst100")
+    rows += automl_rows(N=2_000 if quick else 10_000, d=12,
+                        quick_tag="2k" if quick else "10k", reps=2)
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
 

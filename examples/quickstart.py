@@ -1,11 +1,15 @@
 """Quickstart: SubStrat vs Full-AutoML on a paper-shaped tabular dataset.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--scale 0.5] [--trials 10]
+                                                 [--backend batched|loop]
 
 Reproduces the paper's headline comparison on one dataset: run the AutoML
 engine on the full data, then run SubStrat (Gen-DST subset -> AutoML ->
 restricted fine-tune) and report time-reduction + relative accuracy.
+``--scale 0.1 --trials 4`` is the CI smoke configuration; ``--backend loop``
+pins the sequential AutoML reference engine (DESIGN.md §10.3).
 """
+import argparse
 import sys
 import time
 from pathlib import Path
@@ -21,15 +25,25 @@ from repro.data.tabular import PAPER_DATASETS, make_dataset, train_test_split  #
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.5,
+                    help="dataset row-count scale (0.1 = smoke size)")
+    ap.add_argument("--trials", type=int, default=10,
+                    help="AutoML trial budget for the full and sub passes")
+    ap.add_argument("--backend", default="batched", choices=("batched", "loop"),
+                    help="AutoML engine backend (DESIGN.md §10.3)")
+    args = ap.parse_args()
+
     spec = PAPER_DATASETS["D3"]           # car insurance, 10k x 18
-    X, y = make_dataset(spec, scale=0.5)
+    X, y = make_dataset(spec, scale=args.scale)
     Xtr, ytr, Xte, yte = train_test_split(X, y)
     print(f"dataset {spec.name} ({spec.domain}): {Xtr.shape[0]} train rows, "
-          f"{Xtr.shape[1]} columns")
+          f"{Xtr.shape[1]} columns, engine backend {args.backend}")
 
+    automl_cfg = AutoMLConfig(n_trials=args.trials, rungs=(60, 200),
+                              backend=args.backend)
     t0 = time.perf_counter()
-    full = automl_fit(Xtr, ytr, config=AutoMLConfig(n_trials=10, rungs=(60, 200)),
-                      X_test=Xte, y_test=yte)
+    full = automl_fit(Xtr, ytr, config=automl_cfg, X_test=Xte, y_test=yte)
     t_full = time.perf_counter() - t0
     print(f"\nFull-AutoML : {t_full:6.1f}s  test-acc {full.test_acc:.3f} "
           f"({full.spec.family}, {full.n_trials} trials)")
@@ -38,8 +52,8 @@ def main():
         Xtr, ytr, key=jax.random.key(0),
         config=SubStratConfig(
             gen=GenDSTConfig(psi=10, phi=24),
-            sub_automl=AutoMLConfig(n_trials=10, rungs=(60, 200)),
-            ft_automl=AutoMLConfig(n_trials=4, rungs=(120,)),
+            sub_automl=automl_cfg,
+            ft_automl=AutoMLConfig(n_trials=4, rungs=(120,), backend=args.backend),
         ),
         X_test=Xte, y_test=yte,
     )

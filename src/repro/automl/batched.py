@@ -1,0 +1,373 @@
+"""Batched population trainer for the AutoML engine (DESIGN.md §10.3).
+
+The sequential reference path (``engine._eval_rung_loop``) trains one trial
+at a time: every distinct ``(family, hp)`` combination compiles its own XLA
+program and pays a host round-trip per trial, and closed-form families are
+fit eagerly op-by-op.  This module instead advances a whole
+successive-halving rung cohort at once:
+
+- **Pipelines as gather/scale ops.**  Each distinct ``(preproc, frac)``
+  pair becomes one full-width data *variant*: the preprocessor's per-column
+  affine map applied to all ``d`` columns, with non-selected columns zeroed
+  in place (zero columns are inert for every family, so this matches the
+  loop backend's column slicing).  Variants are stacked once into a cached
+  ``(V, N, d)`` tensor; each trial carries a variant id and the jitted
+  kernels gather its rows on device — no per-trial Python slicing.
+- **Struct-of-arrays params.**  Trials are grouped by
+  ``(family,) + shape_hps`` (HPs that change param shapes, e.g. MLP
+  depth/width).  Width handling is regime-aware: small, dispatch-bound
+  cohorts (``N <= WIDTH_PAD_MAX_ROWS``) pad MLP widths to the sub-batch max
+  so all same-depth trials share one scan, while large, flop-bound cohorts
+  split per width (padding there would inflate compute up to 16x).  Within
+  a sub-batch, params stack leaf-wise into one pytree with a leading cohort
+  axis: zero-init families build their init inside the jitted program; MLP
+  inits at the loop backend's exact shapes with the loop backend's
+  per-(trial, rung) keys, feature rows scattered into the full-width layout.
+- **One dispatch per rung.**  Gradient families run one ``jax.vmap``-ed
+  Adam ``lax.scan`` per sub-batch (the trajectory is ``models.adam_train``,
+  shared with the loop backend; per-trial ``lr``/``l2`` as traced scalars);
+  closed-form families one vmapped fit; accuracy evals are fused in.  With
+  no wall-clock budget the whole rung is a single jitted program
+  (``_eval_rung_fused``) and one host sync; with a budget active each
+  sub-batch dispatches separately so the cutoff can land between them.
+
+Promotion stays in ``engine.sh_promote`` (an on-device top-k mask) shared
+with the loop backend; winner params are unpadded back to the sequential
+shapes so downstream consumers are backend-agnostic (parity: §10.4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, List, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .engine import _apply_preproc, _fit_preproc, _select_features, _trial_key
+from .models import FAMILIES, adam_train
+
+__all__ = ["eval_rung_batched"]
+
+
+# ---------------------------------------------------------------------------
+# pipeline variants: (preproc, feature_frac) -> full-width transformed data
+# ---------------------------------------------------------------------------
+
+
+def _variant(ctx, preproc: str, frac: float) -> int:
+    """Ensure the (preproc, frac) variant exists; return its stable index.
+
+    A variant keeps all ``d`` columns — non-selected ones zeroed — so every
+    trial shares one array shape and the cohort kernels can gather by index.
+    """
+    cache = ctx["variant_cache"]
+    vkey = (preproc, frac)
+    if vkey not in cache:
+        X_tr, y_tr, X_val = ctx["X_tr"], ctx["y_tr"], ctx["X_val"]
+        stats = _fit_preproc(preproc, X_tr)
+        fidx = _select_features(frac, X_tr, y_tr)
+        mask = np.zeros((X_tr.shape[1],), np.float32)
+        mask[fidx] = 1.0
+        cache[vkey] = {
+            "id": len(cache),
+            "stats": stats,
+            "fidx": fidx,
+            "Xtr": _apply_preproc(preproc, stats, X_tr) * mask,
+            "Xval": _apply_preproc(preproc, stats, X_val) * mask,
+        }
+        ctx.pop("variant_stack", None)   # invalidate the stacked tensor
+    return cache[vkey]["id"]
+
+
+def _variant_stack(ctx):
+    """(V, N, d) / (V, Nval, d) stacked variants, rebuilt only on growth."""
+    if "variant_stack" not in ctx:
+        vs = sorted(ctx["variant_cache"].values(), key=lambda v: v["id"])
+        ctx["variant_stack"] = (
+            jnp.asarray(np.stack([v["Xtr"] for v in vs]), jnp.float32),
+            jnp.asarray(np.stack([v["Xval"] for v in vs]), jnp.float32),
+        )
+    return ctx["variant_stack"]
+
+
+# ---------------------------------------------------------------------------
+# param padding / unpadding between loop-backend and full-width layouts
+# ---------------------------------------------------------------------------
+
+
+# Below this many training rows the cohort is dispatch-bound, so MLP widths
+# pad to the sub-batch max (zero padding is gradient-inert — DESIGN.md §10.4)
+# and all depths-equal trials share one scan.  Above it the cohort is
+# flop-bound and width padding would inflate compute up to 16x, so widths
+# split into separate sub-batches instead (DESIGN.md §10.3).
+WIDTH_PAD_MAX_ROWS = 2048
+
+
+def _unpad_linear(params, fidx, hp) -> dict:
+    return {"w": params["w"][np.asarray(fidx)], "b": params["b"]}
+
+
+def _unpad_mlp(params, fidx, hp) -> dict:
+    width = int(hp["width"])
+    layers, L = params["layers"], len(params["layers"])
+    out = []
+    for i, lyr in enumerate(layers):
+        w, b = lyr["w"], lyr["b"]
+        w = w[np.asarray(fidx)] if i == 0 else w[:width]
+        if i < L - 1:            # hidden outputs may be width-padded
+            w, b = w[:, :width], b[:width]
+        out.append({"w": w, "b": b})
+    return {"layers": out}
+
+
+def _unpad_gnb(params, fidx, hp) -> dict:
+    cols = np.asarray(fidx)
+    return {"mean": params["mean"][:, cols], "var": params["var"][:, cols],
+            "prior": params["prior"]}
+
+
+def _unpad_centroid(params, fidx, hp) -> dict:
+    return {"cent": params["cent"][:, np.asarray(fidx)]}
+
+
+_UNPAD: Dict[str, Callable] = {
+    "logreg": _unpad_linear, "linear_svm": _unpad_linear, "mlp": _unpad_mlp,
+    "gnb": _unpad_gnb, "centroid": _unpad_centroid,
+}
+
+
+def _unpad_trial(family: str, params_b, j: int, fidx, hp):
+    single = jax.tree.map(lambda x: x[j], params_b)
+    return _UNPAD[family](single, fidx, hp)
+
+
+# ---------------------------------------------------------------------------
+# jitted cohort kernels: vmapped train+eval / fit+eval per family sub-batch
+# ---------------------------------------------------------------------------
+
+
+def _val_acc(fam, params, X, y):
+    return (jnp.argmax(fam.predict(params, X), axis=1) == y).mean()
+
+
+def _train_eval_cohort(fam, params0, Xall, Xall_val, vids, y, y_val, hp, c, epochs):
+    """Trace-level core: vmapped Adam ``lax.scan`` fused with the
+    validation-accuracy eval.  The trajectory is ``models.adam_train`` — the
+    same definition the sequential backend runs — with the learning rate and
+    regularisation arriving as traced per-trial scalars; each trial gathers
+    its data variant from ``Xall`` on device."""
+
+    def one(p0, vid, hp1):
+        X = Xall[vid]
+        grad_fn = jax.grad(lambda p: fam.loss(p, X, y, c, hp1))
+        params = adam_train(grad_fn, p0, hp1["lr"], epochs)
+        return params, _val_acc(fam, params, Xall_val[vid], y_val)
+
+    return jax.vmap(one)(params0, vids, hp)
+
+
+def _keyless_cohort(family, T, Xall, Xall_val, vids, y, y_val, hp, c, epochs):
+    """Zero-init families: the init happens inside the traced program."""
+    fam = FAMILIES[family]
+    p0 = fam.init(None, Xall.shape[2], c, {})
+    params0 = jax.tree.map(lambda x: jnp.broadcast_to(x, (T,) + x.shape), p0)
+    return _train_eval_cohort(fam, params0, Xall, Xall_val, vids, y, y_val,
+                              hp, c, epochs)
+
+
+def _mlp_cohort(seed, tids, rung_i, fidxs, shapes, depth, wmax, d,
+                Xall, Xall_val, vids, y, y_val, hp, c, epochs):
+    """MLP sub-batch: loop-identical per-trial init (same
+    ``(seed, trial_id, rung)`` key, actual ``(k, width)`` shapes) scattered
+    to the full-feature / ``wmax``-wide layout, stacked, trained, and
+    evaluated.  ``shapes[i] = (k, width)`` per trial.
+
+    Padded rows/columns are zero and stay zero under Adam (zero input
+    columns, ``relu'(0) = 0``), so the active block trains exactly like the
+    sequential path (DESIGN.md §10.4)."""
+    fam = FAMILIES["mlp"]
+    plist = []
+    for i, (k, width) in enumerate(shapes):
+        key = _trial_key(seed, tids[i], rung_i)   # loop-identical derivation
+        p0 = fam.init(key, k, c, {"width": width, "depth": depth})
+        layers, L = p0["layers"], len(p0["layers"])
+        out = []
+        for li, lyr in enumerate(layers):
+            w, b = lyr["w"], lyr["b"]
+            if k == d and width == wmax:
+                out.append({"w": w, "b": b})
+                continue
+            in_dim = d if li == 0 else wmax
+            out_dim = w.shape[1] if li == L - 1 else wmax
+            buf = jnp.zeros((in_dim, out_dim), w.dtype)
+            if li == 0:
+                buf = buf.at[fidxs[i][:, None], jnp.arange(width)[None, :]].set(w)
+            else:
+                buf = buf.at[: w.shape[0], : w.shape[1]].set(w)
+            bbuf = jnp.zeros((out_dim,), b.dtype).at[: b.shape[0]].set(b)
+            out.append({"w": buf, "b": bbuf})
+        plist.append({"layers": out})
+    params0 = jax.tree.map(lambda *xs: jnp.stack(xs), *plist)
+    return _train_eval_cohort(fam, params0, Xall, Xall_val, vids, y, y_val,
+                              hp, c, epochs)
+
+
+def _closed_cohort(family, Xall, Xall_val, vids, y, y_val, hp, c):
+    fam = FAMILIES[family]
+
+    def one(vid, hp1):
+        params = fam.fit_closed(None, Xall[vid], y, c, hp1)
+        return params, _val_acc(fam, params, Xall_val[vid], y_val)
+
+    return jax.vmap(one)(vids, hp)
+
+
+class _GroupDesc(NamedTuple):
+    """Hashable static descriptor of one family sub-batch (jit cache key)."""
+    kind: str            # "closed" | "keyless" | "mlp"
+    family: str
+    T: int
+    depth: int = 0
+    wmax: int = 0
+    shapes: tuple = ()   # mlp: ((k, width), ...) per trial
+
+
+def _run_group(desc, gin, seed, rung_i, Xall, Xall_val, y, y_val, c, d, epochs):
+    """Trace-level dispatch of one sub-batch; shared by the fused-rung and
+    per-group (budget) paths, so both run identical math."""
+    if desc.kind == "closed":
+        return _closed_cohort(desc.family, Xall, Xall_val, gin["vids"],
+                              y, y_val, gin["hp"], c)
+    if desc.kind == "keyless":
+        return _keyless_cohort(desc.family, desc.T, Xall, Xall_val, gin["vids"],
+                               y, y_val, gin["hp"], c, epochs)
+    return _mlp_cohort(seed, gin["tids"], rung_i, gin["fidxs"], desc.shapes,
+                       desc.depth, desc.wmax, d, Xall, Xall_val, gin["vids"],
+                       y, y_val, gin["hp"], c, epochs)
+
+
+@functools.partial(jax.jit, static_argnames=("descs", "c", "d", "epochs"))
+def _eval_rung_fused(seed, rung_i, ginputs, Xall, Xall_val, y, y_val,
+                     *, descs, c: int, d: int, epochs: int):
+    """One dispatch for the whole rung: every family sub-batch trains and
+    evaluates inside a single jitted program (used when no wall-clock budget
+    needs mid-rung cutoffs)."""
+    return tuple(
+        _run_group(desc, gin, seed, rung_i, Xall, Xall_val, y, y_val, c, d, epochs)
+        for desc, gin in zip(descs, ginputs))
+
+
+@functools.partial(jax.jit, static_argnames=("desc", "c", "d", "epochs"))
+def _eval_group(seed, rung_i, gin, Xall, Xall_val, y, y_val,
+                *, desc, c: int, d: int, epochs: int):
+    """Single sub-batch dispatch — the budget path, so the engine can check
+    the wall clock between sub-batches."""
+    return _run_group(desc, gin, seed, rung_i, Xall, Xall_val, y, y_val, c, d, epochs)
+
+
+# ---------------------------------------------------------------------------
+# rung driver
+# ---------------------------------------------------------------------------
+
+
+def eval_rung_batched(cohort, tids, rung_i: int, epochs: int, ctx,
+                      out_of_budget, collect_params: bool = True) -> Tuple[list, list]:
+    """Evaluate one successive-halving rung as per-family sub-batches.
+
+    Returns ``(scored, positions)`` where ``scored[i]`` is the loop-backend
+    tuple ``(spec, val_acc, params, feat_idx, pre_stats)`` and
+    ``positions[i]`` is its index into ``cohort``.  ``collect_params=False``
+    (non-final rungs) skips the per-trial unpadding — promotion only needs
+    accuracies.  Accuracies stay on device until one rung-level sync; when a
+    wall-clock budget is active, each sub-batch blocks before the budget
+    check so the cutoff sees real execution time."""
+    d, c = ctx["X_tr"].shape[1], ctx["n_classes"]
+    # dispatch-bound small cohorts pad MLP widths into one sub-batch;
+    # flop-bound large ones split per width (see WIDTH_PAD_MAX_ROWS)
+    pad_widths = ctx["X_tr"].shape[0] <= WIDTH_PAD_MAX_ROWS
+
+    groups: Dict[tuple, List[int]] = {}
+    trial_vids = []
+    for pos, spec in enumerate(cohort):
+        hp = dict(spec.hp)
+        fam = FAMILIES[spec.family]
+        skip = ("width",) if pad_widths and spec.family == "mlp" else ()
+        gkey = (spec.family,) + tuple(hp[k] for k in fam.shape_hps if k not in skip)
+        groups.setdefault(gkey, []).append(pos)
+        trial_vids.append(_variant(ctx, spec.preproc, spec.feature_frac))
+    Xall_tr, Xall_val = _variant_stack(ctx)
+    variants = {v["id"]: v for v in ctx["variant_cache"].values()}
+    budget_active = ctx.get("budget_active", False)
+
+    # build one (static descriptor, numpy inputs) job per sub-batch; numpy
+    # args are converted during the jit call — no eager dispatches
+    jobs: List[tuple] = []   # (positions, desc, gin)
+    for gkey, positions in groups.items():
+        family = gkey[0]
+        fam = FAMILIES[family]
+        gin = {
+            "vids": np.asarray([trial_vids[p] for p in positions], np.int32),
+            "hp": {k: np.asarray([dict(cohort[p].hp)[k] for p in positions],
+                                 np.float32)
+                   for k in fam.hp_grid if k not in fam.shape_hps},
+        }
+        if fam.fit_closed is not None:
+            desc = _GroupDesc("closed", family, len(positions))
+        elif fam.init_keyless:
+            desc = _GroupDesc("keyless", family, len(positions))
+        else:   # mlp
+            hps = [dict(cohort[p].hp) for p in positions]
+            fidxs = tuple(np.asarray(variants[trial_vids[p]]["fidx"])
+                          for p in positions)
+            shapes = tuple((len(f), int(h["width"])) for f, h in zip(fidxs, hps))
+            gin["tids"] = np.asarray([tids[p] for p in positions], np.int32)
+            gin["fidxs"] = fidxs
+            desc = _GroupDesc("mlp", family, len(positions),
+                              depth=int(hps[0]["depth"]),
+                              wmax=max(w for (_k, w) in shapes), shapes=shapes)
+        jobs.append((positions, desc, gin))
+
+    common = (Xall_tr, Xall_val, ctx["y_tr_j"], ctx["y_val_j"])
+    evaluated: List[tuple] = []   # (positions, device vaccs, family, params_b)
+    if budget_active:
+        # one dispatch per sub-batch, blocking, so the wall-clock cutoff can
+        # land between sub-batches
+        for positions, desc, gin in jobs:
+            if out_of_budget() and evaluated:
+                break
+            params_b, vaccs = _eval_group(ctx["seed"], rung_i, gin, *common,
+                                          desc=desc, c=c, d=d, epochs=epochs)
+            jax.block_until_ready(vaccs)
+            evaluated.append((positions, vaccs, desc.family, params_b))
+    else:
+        # the whole rung is one jitted program
+        outs = _eval_rung_fused(ctx["seed"], rung_i,
+                                tuple(gin for (_p, _d, gin) in jobs), *common,
+                                descs=tuple(d_ for (_p, d_, _g) in jobs),
+                                c=c, d=d, epochs=epochs)
+        evaluated = [(positions, vaccs, desc.family, params_b)
+                     for (positions, desc, _g), (params_b, vaccs)
+                     in zip(jobs, outs)]
+
+    # one host sync for the whole rung
+    all_vaccs = np.asarray(jnp.concatenate([v for (_p, v, _f, _pb) in evaluated]))
+    results: Dict[int, tuple] = {}
+    i = 0
+    for positions, _vaccs, family, params_b in evaluated:
+        for j, p in enumerate(positions):
+            var = variants[trial_vids[p]]
+            if collect_params:
+                # lazy: only the winner's params ever get sliced + unpadded
+                # (the engine materializes callables on access)
+                params = functools.partial(
+                    _unpad_trial, family, params_b, j, var["fidx"],
+                    dict(cohort[p].hp))
+            else:
+                params = None
+            results[p] = (float(all_vaccs[i]), params, var["fidx"], var["stats"])
+            i += 1
+
+    eval_pos = sorted(results)
+    scored = [(cohort[p],) + results[p] for p in eval_pos]
+    return scored, eval_pos

@@ -1,9 +1,25 @@
 """A search-based AutoML engine ``A(D, y) -> M*`` in JAX.
 
-Pipeline configuration = (preprocessor, feature-selector, model family, HPs).
-The engine runs random sampling + successive halving on the ``epochs``
-resource, under a trial or wall-clock budget, and returns the best pipeline
-by validation accuracy — our stand-in for Auto-Sklearn/TPOT (DESIGN.md §5.4).
+Pipeline configuration = (preprocessor, feature-selector, model family, HPs);
+the full search-space tables live in DESIGN.md §10.1.  The engine runs random
+sampling + successive halving on the ``epochs`` resource (rung/keep_frac
+semantics: DESIGN.md §10.2), under a trial or wall-clock budget, and returns
+the best pipeline by validation accuracy — our stand-in for Auto-Sklearn/TPOT
+(DESIGN.md §5.4).
+
+Two execution backends share one rung loop (``AutoMLConfig.backend``):
+
+- ``"batched"`` (default): the whole rung cohort is padded/stacked into
+  struct-of-arrays params and advanced by per-family ``jax.vmap``-ed training
+  in ``automl/batched.py`` — one jitted ``lax.scan`` per family sub-batch
+  instead of one per trial (DESIGN.md §10.3).
+- ``"loop"``: the sequential reference path, one ``train_model`` call per
+  trial.  Kept for parity testing; same-seed runs produce the same winner
+  because both backends derive per-trial PRNG keys from
+  ``(seed, trial_id, rung)`` rather than evaluation order.
+
+Successive-halving promotion is an on-device top-k mask (``sh_promote``)
+applied identically by both backends.
 
 The paper's fine-tuning step (§3.4) maps to ``restrict_family=...``: a
 restricted, much shorter search that only considers pipelines using the same
@@ -12,7 +28,7 @@ model family as the intermediate configuration M'.
 from __future__ import annotations
 
 import dataclasses
-import itertools
+import functools
 import time
 from typing import Any, Dict, List, Optional, Sequence
 
@@ -22,18 +38,24 @@ import numpy as np
 
 from .models import FAMILIES, accuracy, train_model
 
-__all__ = ["AutoMLConfig", "AutoMLResult", "automl_fit", "PipelineSpec", "apply_pipeline"]
+__all__ = [
+    "AutoMLConfig", "AutoMLResult", "automl_fit", "PipelineSpec",
+    "apply_pipeline", "sh_promote",
+]
 
+# preprocessor and feature-fraction axes of the pipeline search space
+# (DESIGN.md §10.1)
 PREPROCS = ("none", "standardize", "minmax")
 FEATURE_FRACS = (1.0, 0.5)
 
 
 @dataclasses.dataclass(frozen=True)
 class PipelineSpec:
-    preproc: str
-    feature_frac: float
-    family: str
-    hp: tuple  # sorted (k, v) tuple
+    """One point of the pipeline search space (DESIGN.md §10.1)."""
+    preproc: str        # one of PREPROCS
+    feature_frac: float  # one of FEATURE_FRACS (variance-ranked top-k columns)
+    family: str         # key into models.FAMILIES
+    hp: tuple           # sorted (k, v) tuple from the family's hp_grid
 
 
 @dataclasses.dataclass
@@ -46,17 +68,25 @@ class AutoMLResult:
     n_trials: int
     feat_idx: np.ndarray
     pre_stats: Dict[str, np.ndarray]
-    trials: List[tuple]  # (spec, val_acc)
+    trials: List[tuple]        # (spec, val_acc), cohort order per rung
+    rung_times: List[float] = dataclasses.field(default_factory=list)
+    backend: str = "batched"
 
 
 @dataclasses.dataclass(frozen=True)
 class AutoMLConfig:
-    n_trials: int = 24
-    time_budget_s: Optional[float] = None
-    rungs: Sequence[int] = (20, 60, 180)     # successive-halving epoch rungs
-    keep_frac: float = 0.34
-    val_frac: float = 0.2
-    seed: int = 0
+    """Budget + schedule of one ``automl_fit`` search (DESIGN.md §10.2).
+
+    Every field is anchored in the docs; see DESIGN.md §10 for the full
+    execution model.
+    """
+    n_trials: int = 24                       # sampled population size (§10.2)
+    time_budget_s: Optional[float] = None    # wall-clock cutoff (paper §4.1 budgets)
+    rungs: Sequence[int] = (20, 60, 180)     # successive-halving epoch rungs (§10.2)
+    keep_frac: float = 0.34                  # survivor fraction per rung (§10.2)
+    val_frac: float = 0.2                    # holdout fraction scored by accuracy (§5.4)
+    seed: int = 0                            # PRNG seed; trial keys fold in (id, rung)
+    backend: str = "batched"                 # "batched" (§10.3) | "loop" (reference)
 
 
 def _fit_preproc(name: str, X: np.ndarray) -> Dict[str, np.ndarray]:
@@ -91,6 +121,32 @@ def apply_pipeline(spec: PipelineSpec, pre_stats, feat_idx, X: np.ndarray) -> jn
     return jnp.asarray(Xp[:, feat_idx], dtype=jnp.float32)
 
 
+def _trial_key(seed: int, trial_id: int, rung_i: int) -> jax.Array:
+    """Per-trial PRNG key, independent of evaluation order.
+
+    Both backends derive keys from ``(seed, trial_id, rung)`` so the batched
+    cohort and the sequential loop train bit-identical trajectories for the
+    same sampled population (DESIGN.md §10.4)."""
+    return jax.random.fold_in(jax.random.fold_in(jax.random.key(seed), trial_id), rung_i)
+
+
+@functools.partial(jax.jit, static_argnames=("keep",))
+def _promote_mask(val_acc, *, keep: int):
+    order = jnp.argsort(-val_acc, stable=True)
+    return jnp.zeros(val_acc.shape, bool).at[order[:keep]].set(True)
+
+
+def sh_promote(val_acc, keep_frac: float) -> jax.Array:
+    """Successive-halving promotion as an on-device top-k survivor mask.
+
+    Keeps ``max(1, ceil(n * keep_frac))`` trials; ties broken toward the
+    lower trial index (stable sort), matching the sequential reference
+    semantics (DESIGN.md §10.2)."""
+    val_acc = np.asarray(val_acc, np.float32)
+    keep = max(1, int(np.ceil(val_acc.shape[0] * keep_frac)))
+    return _promote_mask(val_acc, keep=keep)
+
+
 def _sample_specs(rng: np.random.Generator, n: int, families: Sequence[str]) -> List[PipelineSpec]:
     specs = []
     for _ in range(n):
@@ -115,6 +171,33 @@ def _sample_specs(rng: np.random.Generator, n: int, families: Sequence[str]) -> 
     return out
 
 
+def _eval_rung_loop(cohort, tids, rung_i, epochs, ctx, out_of_budget,
+                    collect_params=True):
+    """Sequential reference: one ``train_model`` call per trial.
+
+    Returns ``(scored, positions)`` like ``batched.eval_rung_batched``
+    (params come for free here, so ``collect_params`` is ignored)."""
+    scored = []
+    for spec, tid in zip(cohort, tids):
+        if out_of_budget() and scored:
+            break
+        ckey = (spec.preproc, spec.feature_frac)
+        if ckey not in ctx["pipe_cache"]:
+            stats = _fit_preproc(spec.preproc, ctx["X_tr"])
+            fidx = _select_features(spec.feature_frac, ctx["X_tr"], ctx["y_tr"])
+            Xtr_p = apply_pipeline(spec, stats, fidx, ctx["X_tr"])
+            Xval_p = apply_pipeline(spec, stats, fidx, ctx["X_val"])
+            ctx["pipe_cache"][ckey] = (stats, fidx, Xtr_p, Xval_p)
+        stats, fidx, Xtr_p, Xval_p = ctx["pipe_cache"][ckey]
+        params = train_model(
+            _trial_key(ctx["seed"], tid, rung_i),
+            Xtr_p, ctx["y_tr_j"], spec.family, ctx["n_classes"], dict(spec.hp), epochs,
+        )
+        vacc = accuracy(params, Xval_p, ctx["y_val_j"], spec.family)
+        scored.append((spec, vacc, params, fidx, stats))
+    return scored, list(range(len(scored)))
+
+
 def automl_fit(
     X: np.ndarray,
     y: np.ndarray,
@@ -127,6 +210,8 @@ def automl_fit(
     """Run the AutoML search.  Returns the best pipeline found.
 
     ``restrict_family`` implements the paper's restricted fine-tune pass."""
+    if config.backend not in ("batched", "loop"):
+        raise ValueError(f"unknown AutoML backend {config.backend!r}")
     t_start = time.perf_counter()
     X = np.asarray(X, dtype=np.float32)
     y = np.asarray(y)
@@ -141,7 +226,6 @@ def automl_fit(
     val_idx, tr_idx = perm[:n_val], perm[n_val:]
     X_tr, y_tr = X[tr_idx], y_enc[tr_idx]
     X_val, y_val = X[val_idx], y_enc[val_idx]
-    y_tr_j, y_val_j = jnp.asarray(y_tr), jnp.asarray(y_val)
 
     families = [restrict_family] if restrict_family else list(FAMILIES)
     n_seed_trials = config.n_trials if not restrict_family else max(4, config.n_trials // 4)
@@ -153,42 +237,57 @@ def automl_fit(
             and time.perf_counter() - t_start > config.time_budget_s
         )
 
-    # successive halving over epoch rungs
-    live: List[tuple] = []       # (spec, val_acc, params, feat_idx, pre_stats)
-    trials_log: List[tuple] = []
-    n_done = 0
-    pipe_cache: Dict[tuple, tuple] = {}
+    ctx = {
+        "X_tr": X_tr, "y_tr": y_tr, "X_val": X_val, "y_val": y_val,
+        "y_tr_j": jnp.asarray(y_tr), "y_val_j": jnp.asarray(y_val),
+        "n_classes": n_classes, "seed": config.seed,
+        "budget_active": config.time_budget_s is not None,
+        "pipe_cache": {},      # loop backend: (preproc, frac) -> projected data
+        "variant_cache": {},   # batched backend: (preproc, frac) -> full-width variant
+    }
 
-    current = specs
+    if config.backend == "batched":
+        from .batched import eval_rung_batched as _eval_rung
+    else:
+        _eval_rung = _eval_rung_loop
+
+    # successive halving over epoch rungs: each rung retrains the surviving
+    # cohort from scratch at the next epoch budget (DESIGN.md §10.2)
+    live: List[tuple] = []
+    trials_log: List[tuple] = []
+    rung_times: List[float] = []
+    n_done = 0
+
+    alive_ids = list(range(len(specs)))
     for rung_i, epochs in enumerate(config.rungs):
-        scored = []
-        for spec in current:
-            if out_of_budget() and scored:
-                break
-            ckey = (spec.preproc, spec.feature_frac)
-            if ckey not in pipe_cache:
-                stats = _fit_preproc(spec.preproc, X_tr)
-                fidx = _select_features(spec.feature_frac, X_tr, y_tr)
-                Xtr_p = apply_pipeline(spec, stats, fidx, X_tr)
-                Xval_p = apply_pipeline(spec, stats, fidx, X_val)
-                pipe_cache[ckey] = (stats, fidx, Xtr_p, Xval_p)
-            stats, fidx, Xtr_p, Xval_p = pipe_cache[ckey]
-            params = train_model(
-                jax.random.key(config.seed + n_done),
-                Xtr_p, y_tr_j, spec.family, n_classes, dict(spec.hp), epochs,
-            )
-            vacc = accuracy(params, Xval_p, y_val_j, spec.family)
-            scored.append((spec, vacc, params, fidx, stats))
-            trials_log.append((spec, vacc))
-            n_done += 1
-        scored.sort(key=lambda t: -t[1])
+        cohort = [specs[i] for i in alive_ids]
+        # non-final rungs only need accuracies for promotion — unless a time
+        # budget could make this rung the last one evaluated
+        collect = (rung_i == len(config.rungs) - 1
+                   or config.time_budget_s is not None)
+        t_rung = time.perf_counter()
+        scored, positions = _eval_rung(cohort, alive_ids, rung_i, int(epochs), ctx,
+                                       out_of_budget, collect)
+        rung_times.append(time.perf_counter() - t_rung)
+        trials_log.extend((s, v) for (s, v, *_rest) in scored)
+        n_done += len(scored)
         live = scored
-        keep = max(1, int(np.ceil(len(scored) * config.keep_frac)))
-        current = [s for (s, *_rest) in scored[:keep]]
+        # on-device top-k promotion; survivors keep population order — except
+        # under a time budget, where the next rung runs best-first so a
+        # mid-rung cutoff spends the remaining budget on the strongest trials
+        mask = np.asarray(sh_promote(
+            np.asarray([v for (_s, v, *_r) in scored], np.float32), config.keep_frac))
+        surv = list(np.flatnonzero(mask))
+        if config.time_budget_s is not None:
+            surv.sort(key=lambda i: (-scored[i][1], i))
+        alive_ids = [alive_ids[positions[i]] for i in surv]
         if out_of_budget():
             break
 
-    best_spec, best_vacc, best_params, best_fidx, best_stats = live[0]
+    best_i = int(np.argmax([v for (_s, v, *_r) in live]))  # ties -> lower index
+    best_spec, best_vacc, best_params, best_fidx, best_stats = live[best_i]
+    if callable(best_params):   # batched backend materializes params lazily
+        best_params = best_params()
     test_acc = None
     if X_test is not None:
         Xt = apply_pipeline(best_spec, best_stats, best_fidx, np.asarray(X_test, np.float32))
@@ -205,4 +304,6 @@ def automl_fit(
         feat_idx=best_fidx,
         pre_stats=best_stats,
         trials=trials_log,
+        rung_times=rung_times,
+        backend=config.backend,
     )

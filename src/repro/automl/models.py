@@ -1,11 +1,29 @@
-"""JAX-native model families for the AutoML substrate.
+"""JAX-native model families for the AutoML substrate (DESIGN.md §5.4, §10.1).
 
 Each family implements the tiny protocol (init / train / predict) on dense
 ``(N, d)`` float32 features and integer labels.  Training is jitted,
 full-batch gradient descent with Adam (cost scales with N — exactly the
 property SubStrat exploits), except the closed-form families (GNB, centroid).
 
-``epochs`` is the successive-halving resource unit.
+``epochs`` is the successive-halving resource unit.  The full search-space
+tables (families × HP grids) live in DESIGN.md §10.1.
+
+Two execution paths consume these families:
+
+- the sequential reference path (``train_model`` below, one trial at a time,
+  used by ``automl/engine.py`` with ``backend="loop"``), and
+- the batched cohort path (``automl/batched.py``), which pads every trial's
+  params to the family's maximal shapes and advances the whole rung cohort
+  under one ``jax.vmap``-ed Adam ``lax.scan`` (DESIGN.md §10.3).
+
+``ModelFamily.shape_hps`` names the hyper-parameters that change the param
+shapes or pytree structure (MLP ``depth`` changes the number of layers,
+``width`` their sizes): the batched path sub-batches on those (padding MLP
+widths only for small, dispatch-bound cohorts — ``batched.WIDTH_PAD_MAX_ROWS``)
+and pads/stacks everything else (the feature axis, per-trial ``lr``/``l2``).
+``init_keyless`` marks families whose init ignores the PRNG key (zero
+init), letting the batched path build one broadcast init inside the jitted
+cohort program.
 """
 from __future__ import annotations
 
@@ -15,7 +33,8 @@ from typing import Any, Callable, Dict, NamedTuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["FAMILIES", "ModelFamily", "train_model", "predict_model", "accuracy"]
+__all__ = ["FAMILIES", "ModelFamily", "adam_train", "train_model",
+           "predict_model", "accuracy"]
 
 
 class ModelFamily(NamedTuple):
@@ -25,6 +44,12 @@ class ModelFamily(NamedTuple):
     fit_closed: Callable[..., Any] | None
     predict: Callable[..., jax.Array]
     hp_grid: Dict[str, tuple]
+    # HPs that change param shapes or pytree structure; the batched engine
+    # sub-batches on these (DESIGN.md §10.3)
+    shape_hps: tuple = ()
+    # init ignores the PRNG key (e.g. zero init) — the batched engine may
+    # broadcast a single init across the sub-batch
+    init_keyless: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -135,14 +160,17 @@ FAMILIES: Dict[str, ModelFamily] = {
     "logreg": ModelFamily(
         "logreg", _logreg_init, _logreg_loss, None, _logreg_predict,
         {"lr": (0.3, 0.1, 0.03), "l2": (0.0, 1e-4, 1e-2)},
+        init_keyless=True,
     ),
     "mlp": ModelFamily(
         "mlp", _mlp_init, _mlp_loss, None, _mlp_forward,
         {"lr": (0.01, 0.003, 0.001), "l2": (0.0, 1e-4), "width": (32, 64, 128), "depth": (1, 2)},
+        shape_hps=("depth", "width"),
     ),
     "linear_svm": ModelFamily(
         "linear_svm", _logreg_init, _svm_loss, None, _logreg_predict,
         {"lr": (0.1, 0.03, 0.01), "l2": (1e-4, 1e-2)},
+        init_keyless=True,
     ),
     "gnb": ModelFamily(
         "gnb", None, None, _gnb_fit, _gnb_predict,
@@ -160,15 +188,15 @@ FAMILIES: Dict[str, ModelFamily] = {
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("family", "c", "epochs", "hp_static"))
-def _train_gd(key, X, y, family: str, c: int, epochs: int, hp_static: tuple):
-    hp = dict(hp_static)
-    fam = FAMILIES[family]
-    params = fam.init(key, X.shape[1], c, hp)
-    lr = hp["lr"]
-    # Adam
-    grad_fn = jax.grad(lambda p: fam.loss(p, X, y, c, hp))
-    flat0, tree = jax.tree.flatten(params)
+def adam_train(grad_fn, params0, lr, epochs: int):
+    """Full-batch Adam ``lax.scan`` shared by both engine backends.
+
+    This is the single definition of the training trajectory: the sequential
+    path (``_train_gd``) and the batched cohort path
+    (``batched._train_eval_cohort``) both call it, which is what keeps
+    same-seed loop/batched parity bit-for-bit (DESIGN.md §10.4).  Works at
+    trace level; ``lr`` may be a static float or a traced scalar."""
+    flat0, tree = jax.tree.flatten(params0)
     m0 = [jnp.zeros_like(x) for x in flat0]
     v0 = [jnp.zeros_like(x) for x in flat0]
 
@@ -184,8 +212,18 @@ def _train_gd(key, X, y, family: str, c: int, epochs: int, hp_static: tuple):
         ]
         return (flat, m, v), None
 
-    (flat, _, _), _ = jax.lax.scan(step, (flat0, m0, v0), jnp.arange(epochs))
+    (flat, _, _), _ = jax.lax.scan(step, (flat0, m0, v0), jnp.arange(epochs),
+                                   unroll=8)
     return jax.tree.unflatten(tree, flat)
+
+
+@functools.partial(jax.jit, static_argnames=("family", "c", "epochs", "hp_static"))
+def _train_gd(key, X, y, family: str, c: int, epochs: int, hp_static: tuple):
+    hp = dict(hp_static)
+    fam = FAMILIES[family]
+    params = fam.init(key, X.shape[1], c, hp)
+    grad_fn = jax.grad(lambda p: fam.loss(p, X, y, c, hp))
+    return adam_train(grad_fn, params, hp["lr"], epochs)
 
 
 def train_model(key, X, y, family: str, n_classes: int, hp: dict, epochs: int):

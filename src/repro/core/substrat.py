@@ -26,19 +26,40 @@ __all__ = ["SubStratResult", "substrat", "SubStratConfig"]
 
 @dataclasses.dataclass(frozen=True)
 class SubStratConfig:
+    """Configuration of the full 3-step strategy (paper §1.1, DESIGN.md §5).
+
+    Every field states its paper section or DESIGN.md anchor:
+
+    - ``gen`` — Gen-DST GA budget and search-loop levers (paper §3.3,
+      DESIGN.md §5.3/§5.5).
+    - ``n`` / ``m`` — DST shape; ``None`` means the paper defaults
+      ``sqrt(N)`` rows and ``0.25·M`` columns (paper §4.2).
+    - ``fine_tune`` — step 3 on/off; ``False`` is the paper's SubStrat-NF
+      ablation (paper §4.4 category F).
+    - ``sub_automl`` — step-2 engine budget ``A(d, y) -> M'`` on the subset
+      (paper §3.4, DESIGN.md §10.2).
+    - ``ft_automl`` — the "restricted, much shorter" step-3 pass on the full
+      data, constrained to M''s family (paper §3.4, DESIGN.md §10.2).
+    - ``num_islands`` / ``dst_backend`` — Gen-DST overrides (DESIGN.md §5.5);
+      when set they win over the corresponding ``gen`` fields, so callers can
+      turn on islands / the Pallas histogram kernel without rebuilding the
+      whole GenDSTConfig.
+    - ``automl_backend`` — AutoML-engine execution override (DESIGN.md §10.3):
+      ``"batched"`` (vmap cohort) or ``"loop"`` (sequential reference),
+      applied to *both* the sub-AutoML and fine-tune passes when set.
+    """
     gen: GenDSTConfig = GenDSTConfig()
-    n: Optional[int] = None           # DST rows (default sqrt(N))
-    m: Optional[int] = None           # DST cols (default 0.25*M)
-    fine_tune: bool = True
+    n: Optional[int] = None           # DST rows (default sqrt(N), paper §4.2)
+    m: Optional[int] = None           # DST cols (default 0.25*M, paper §4.2)
+    fine_tune: bool = True            # False => SubStrat-NF (paper §4.4)
     sub_automl: AutoMLConfig = AutoMLConfig()
-    # "restricted, much shorter" pass on the full data:
+    # "restricted, much shorter" pass on the full data (paper §3.4):
     ft_automl: AutoMLConfig = AutoMLConfig(n_trials=6, rungs=(60,))
-    # Gen-DST search-loop overrides (DESIGN.md §5.5).  When set, they win
-    # over the corresponding ``gen`` fields — convenience knobs so callers
-    # can turn on islands / the Pallas histogram backend without rebuilding
-    # the whole GenDSTConfig.
+    # Gen-DST search-loop overrides (DESIGN.md §5.5)
     num_islands: Optional[int] = None
     dst_backend: Optional[str] = None
+    # AutoML engine backend override (DESIGN.md §10.3)
+    automl_backend: Optional[str] = None
 
     def resolved_gen(self) -> GenDSTConfig:
         gen = self.gen
@@ -47,6 +68,16 @@ class SubStratConfig:
         if self.dst_backend is not None:
             gen = gen._replace(backend=self.dst_backend)
         return gen
+
+    def resolved_sub_automl(self) -> AutoMLConfig:
+        if self.automl_backend is not None:
+            return dataclasses.replace(self.sub_automl, backend=self.automl_backend)
+        return self.sub_automl
+
+    def resolved_ft_automl(self) -> AutoMLConfig:
+        if self.automl_backend is not None:
+            return dataclasses.replace(self.ft_automl, backend=self.automl_backend)
+        return self.ft_automl
 
 
 @dataclasses.dataclass
@@ -108,7 +139,7 @@ def substrat(
         extra = np.random.default_rng(0).permutation(len(y))[:64]
         X_sub = np.concatenate([X_sub, np.asarray(X)[extra][:, col_idx]])
         y_sub = np.concatenate([y_sub, np.asarray(y)[extra]])
-    intermediate = automl_fit(X_sub, y_sub, config=config.sub_automl)
+    intermediate = automl_fit(X_sub, y_sub, config=config.resolved_sub_automl())
     times["automl_sub_s"] = time.perf_counter() - t0
 
     # --- step 3: restricted fine-tune on the full data -------------------------
@@ -116,7 +147,7 @@ def substrat(
         t0 = time.perf_counter()
         final = automl_fit(
             X, y,
-            config=config.ft_automl,
+            config=config.resolved_ft_automl(),
             restrict_family=intermediate.spec.family,
             X_test=X_test, y_test=y_test,
         )

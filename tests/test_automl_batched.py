@@ -1,0 +1,121 @@
+"""Batched population engine (DESIGN.md §10.3/§10.4): loop-vs-batched parity
+and on-device successive-halving promotion."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.automl.engine import AutoMLConfig, automl_fit, sh_promote
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(7)
+    N = 500
+    y = rng.integers(0, 2, N)
+    X = np.column_stack([
+        y * 2.0 + rng.normal(0, 0.5, N),
+        -y * 1.5 + rng.normal(0, 0.5, N),
+        rng.normal(0, 1, N),
+        rng.normal(0, 1, N),
+        y * 0.5 + rng.normal(0, 1.0, N),
+    ]).astype(np.float32)
+    return X, y
+
+
+CFG = dict(n_trials=12, rungs=(15, 40), seed=3)
+
+
+def test_backend_parity_same_winner(data):
+    """Same seed => same winning PipelineSpec and (near-)identical val accs.
+
+    Both backends derive per-trial keys from (seed, trial_id, rung) and the
+    batched path's zero-padding is gradient-inert, so the per-trial training
+    trajectories coincide (DESIGN.md §10.4)."""
+    X, y = data
+    r_loop = automl_fit(X, y, config=AutoMLConfig(**CFG, backend="loop"))
+    r_bat = automl_fit(X, y, config=AutoMLConfig(**CFG, backend="batched"))
+    assert r_loop.spec == r_bat.spec
+    assert r_loop.val_acc == pytest.approx(r_bat.val_acc, abs=1e-6)
+    assert r_loop.n_trials == r_bat.n_trials
+    # the full trial logs line up: same cohorts in the same order, and every
+    # trial's validation accuracy matches within float tolerance
+    assert [s for s, _ in r_loop.trials] == [s for s, _ in r_bat.trials]
+    np.testing.assert_allclose(
+        [v for _, v in r_loop.trials], [v for _, v in r_bat.trials], atol=1e-6)
+
+
+def test_backend_parity_restricted(data):
+    """Parity holds on the fine-tune-shaped restricted pass too."""
+    X, y = data
+    cfg = dict(n_trials=8, rungs=(30,), seed=1)
+    r_loop = automl_fit(X, y, config=AutoMLConfig(**cfg, backend="loop"),
+                        restrict_family="mlp")
+    r_bat = automl_fit(X, y, config=AutoMLConfig(**cfg, backend="batched"),
+                       restrict_family="mlp")
+    assert r_loop.spec == r_bat.spec
+    assert all(s.family == "mlp" for s, _ in r_bat.trials)
+    np.testing.assert_allclose(
+        [v for _, v in r_loop.trials], [v for _, v in r_bat.trials], atol=1e-6)
+
+
+def test_batched_multiclass():
+    rng = np.random.default_rng(1)
+    N = 400
+    y = rng.integers(0, 3, N)
+    X = np.column_stack([(y == k) * 2.0 + rng.normal(0, 0.4, N) for k in range(3)])
+    res = automl_fit(X.astype(np.float32), y,
+                     config=AutoMLConfig(n_trials=6, rungs=(30,), backend="batched"))
+    assert res.val_acc > 0.8
+    assert res.backend == "batched"
+
+
+def test_batched_result_params_usable(data):
+    """Unpadded winner params drive apply_pipeline/accuracy exactly like the
+    sequential path (needed by substrat's test-accuracy evaluation)."""
+    X, y = data
+    res = automl_fit(X[:400], y[:400], config=AutoMLConfig(**CFG, backend="batched"),
+                     X_test=X[400:], y_test=y[400:])
+    assert res.test_acc is not None and res.test_acc > 0.7
+
+
+def test_unknown_backend_raises(data):
+    X, y = data
+    with pytest.raises(ValueError):
+        automl_fit(X, y, config=AutoMLConfig(backend="nope"))
+
+
+# ---------------------------------------------------------------------------
+# successive-halving promotion on a fixed synthetic trial matrix
+# ---------------------------------------------------------------------------
+
+
+def test_sh_promote_topk_mask():
+    vacc = jnp.asarray([0.50, 0.90, 0.70, 0.20, 0.80, 0.60])
+    mask = np.asarray(sh_promote(vacc, keep_frac=0.34))
+    # ceil(6 * 0.34) = 3 survivors: the three highest accuracies
+    assert mask.tolist() == [False, True, True, False, True, False]
+
+
+def test_sh_promote_tie_breaks_to_lower_index():
+    vacc = jnp.asarray([0.70, 0.90, 0.90, 0.90, 0.10])
+    mask = np.asarray(sh_promote(vacc, keep_frac=0.4))
+    # keep 2: both winners come from the tied 0.90 group, lower indices first
+    assert mask.tolist() == [False, True, True, False, False]
+
+
+def test_sh_promote_keeps_at_least_one():
+    mask = np.asarray(sh_promote(jnp.asarray([0.2, 0.1]), keep_frac=0.01))
+    assert mask.sum() == 1 and bool(mask[0])
+
+
+def test_sh_promote_matrix_rungs():
+    """Fixed synthetic trial matrix: promotion cascades 9 -> 4 -> 1."""
+    vacc0 = jnp.asarray([0.1, 0.9, 0.3, 0.8, 0.2, 0.7, 0.4, 0.6, 0.5])
+    alive = np.flatnonzero(np.asarray(sh_promote(vacc0, 0.34)))
+    assert alive.tolist() == [1, 3, 5, 7]            # ceil(9*0.34)=4, pop. order
+    vacc1 = jnp.asarray([0.75, 0.95, 0.85, 0.65])    # rung-2 accs of survivors
+    alive2 = alive[np.flatnonzero(np.asarray(sh_promote(vacc1, 0.25)))]
+    assert alive2.tolist() == [3]
