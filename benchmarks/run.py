@@ -1,15 +1,19 @@
 """Benchmark orchestrator — one section per paper table/figure + kernel
-micro-benches + the dry-run roofline table.
+micro-benches + the service-layer bench + the dry-run roofline table.
 
-    PYTHONPATH=src python -m benchmarks.run [--full]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--json PATH]
 
 Prints ``name,us_per_call,derived`` CSV blocks per section.  --full uses the
 paper-scale settings (long); the default quick mode scales datasets down so
-the whole suite finishes on one CPU core.
+the whole suite finishes on one CPU core.  --json additionally writes every
+section's rows to a machine-readable file so the perf trajectory can be
+tracked across PRs (CI uploads it as ``BENCH_quick.json``) instead of
+scraping CSV from stdout.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -19,12 +23,20 @@ def _section(title):
     print(f"\n### {title}", flush=True)
 
 
+def _rowdicts(columns, rows):
+    """JSON payload of one section: a list of {column: value} dicts."""
+    return [dict(zip(columns, row)) for row in rows]
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--skip", nargs="*", default=[],
                     help="section names to skip (table4 fig2 fig3 fig4 fig5 "
-                         "kernels gen_dst automl roofline)")
+                         "kernels gen_dst automl service roofline)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write each section's rows to a machine-readable "
+                         "JSON file (perf trajectory tracking across PRs)")
     args = ap.parse_args()
 
     quick = not args.full
@@ -38,6 +50,8 @@ def main() -> None:
         sections.append(("gen_dst", lambda: _run_gen_dst(quick)))
     if "automl" not in args.skip:
         sections.append(("automl", lambda: _run_automl(quick)))
+    if "service" not in args.skip:
+        sections.append(("service", lambda: _run_service(quick)))
     if "table4" not in args.skip:
         sections.append(("table4", lambda: _run_table4(quick)))
     if "fig2" not in args.skip:
@@ -51,18 +65,32 @@ def main() -> None:
     if "roofline" not in args.skip:
         sections.append(("roofline", _run_roofline))
 
+    report = {"quick": quick, "sections": {}}
     failures = 0
     for name, fn in sections:
         t0 = time.time()
         try:
-            fn()
+            rows = fn()
         except Exception:  # noqa: BLE001 — keep the suite running
             failures += 1
+            rows = None
             print(f"SECTION {name} FAILED:", file=sys.stderr)
             traceback.print_exc()
-        print(f"# section {name} took {time.time()-t0:.1f}s", flush=True)
-    print(f"\n# benchmarks done in {time.time()-t_start:.1f}s, "
+        dt = time.time() - t0
+        report["sections"][name] = {
+            "seconds": round(dt, 3),
+            "failed": rows is None,
+            "rows": rows if rows is not None else [],
+        }
+        print(f"# section {name} took {dt:.1f}s", flush=True)
+    report["failures"] = failures
+    report["total_s"] = round(time.time() - t_start, 3)
+    print(f"\n# benchmarks done in {report['total_s']:.1f}s, "
           f"{failures} section failures")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2, default=float)
+        print(f"# wrote {args.json}")
     if failures:
         sys.exit(1)
 
@@ -70,8 +98,10 @@ def main() -> None:
 def _run_kernels():
     _section("kernel micro-benchmarks (name,us_per_call,derived)")
     from .kernels_bench import main as kmain
-    for name, us, derived in kmain():
+    rows = [(name, round(us, 1), derived) for name, us, derived in kmain()]
+    for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    return _rowdicts(("name", "us_per_call", "derived"), rows)
 
 
 def _run_gen_dst(quick):
@@ -82,8 +112,10 @@ def _run_gen_dst(quick):
         rows = gen_dst_rows(N=20_000, psi=12, quick_tag="20k")
     else:
         rows = gen_dst_rows(N=100_000, psi=24, quick_tag="100k")
+    rows = [(name, round(us, 1), derived) for name, us, derived in rows]
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    return _rowdicts(("name", "us_per_generation", "derived"), rows)
 
 
 def _run_automl(quick):
@@ -95,8 +127,24 @@ def _run_automl(quick):
     rows = automl_rows(N=100, d=12, quick_tag="dst100")
     rows += automl_rows(N=2_000 if quick else 10_000, d=12,
                         quick_tag="2k" if quick else "10k", reps=2)
+    rows = [(name, round(us, 1), derived) for name, us, derived in rows]
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    return _rowdicts(("name", "us", "derived"), rows)
+
+
+def _run_service(quick):
+    _section("Service layer: 8 concurrent jobs (DST cache + warm start + "
+             "cross-job rung merge) vs sequential substrat (name,us,derived)")
+    from .service_bench import service_rows
+    if quick:
+        rows = service_rows(n_jobs=8, N=2_000, d=10, quick_tag="2k")
+    else:
+        rows = service_rows(n_jobs=8, N=10_000, d=14, quick_tag="10k")
+    rows = [(name, round(us, 1), derived) for name, us, derived in rows]
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return _rowdicts(("name", "us", "derived"), rows)
 
 
 def _run_table4(quick):
@@ -106,16 +154,23 @@ def _run_table4(quick):
     table = t4(datasets=datasets, scale=0.2 if quick else 1.0,
                reps=1 if quick else 5, print_rows=False)
     print("method,time_reduction_mean,time_reduction_std,rel_acc_mean,rel_acc_std")
+    rows = []
     for m, (trm, trs, ram, ras) in sorted(table.items(), key=lambda kv: -kv[1][2]):
         print(f"{m},{trm:.4f},{trs:.4f},{ram:.4f},{ras:.4f}")
+        rows.append((m, trm, trs, ram, ras))
+    return _rowdicts(("method", "time_reduction_mean", "time_reduction_std",
+                      "rel_acc_mean", "rel_acc_std"), rows)
 
 
 def _run_fig2(quick):
     _section("Figure 2: per-dataset points")
     from .fig2_per_dataset import main as f2
     print("dataset,method,time_reduction,relative_accuracy")
-    for ds, m, tr, ra in f2(scale=0.2 if quick else 1.0):
+    rows = list(f2(scale=0.2 if quick else 1.0))
+    for ds, m, tr, ra in rows:
         print(f"{ds},{m},{tr:.4f},{ra:.4f}")
+    return _rowdicts(("dataset", "method", "time_reduction",
+                      "relative_accuracy"), rows)
 
 
 def _run_fig3(quick):
@@ -124,16 +179,22 @@ def _run_fig3(quick):
     points, skyline = f3(scale=0.2 if quick else 1.0)
     sky = {p[0] for p in skyline}
     print("setting,time_reduction,relative_accuracy,on_skyline")
+    rows = []
     for name, tr, ra in points:
         print(f"{name},{tr:.4f},{ra:.4f},{name in sky}")
+        rows.append((name, tr, ra, name in sky))
+    return _rowdicts(("setting", "time_reduction", "relative_accuracy",
+                      "on_skyline"), rows)
 
 
 def _run_fig4(quick):
     _section("Figure 4: DST size heatmap")
     from .fig4_dst_size import main as f4
     print("n,m,time_reduction,relative_accuracy")
-    for n, m, tr, ra in f4(scale=0.15 if quick else 1.0):
+    rows = list(f4(scale=0.15 if quick else 1.0))
+    for n, m, tr, ra in rows:
         print(f"{n},{m},{tr:.4f},{ra:.4f}")
+    return _rowdicts(("n", "m", "time_reduction", "relative_accuracy"), rows)
 
 
 def _run_fig5(quick):
@@ -141,16 +202,26 @@ def _run_fig5(quick):
     from .fig5_isolated import main as f5
     lp, wp = f5(scale=0.15 if quick else 1.0)
     print("axis,value,time_reduction,relative_accuracy")
+    rows = []
     for n, tr, ra in lp:
         print(f"n,{n},{tr:.4f},{ra:.4f}")
+        rows.append(("n", n, tr, ra))
     for m, tr, ra in wp:
         print(f"m,{m},{tr:.4f},{ra:.4f}")
+        rows.append(("m", m, tr, ra))
+    return _rowdicts(("axis", "value", "time_reduction",
+                      "relative_accuracy"), rows)
 
 
 def _run_roofline():
     _section("Roofline (from experiments/dryrun.json)")
-    from .roofline import main as rmain
+    from .roofline import main as rmain, rows as roofline_rows
     rmain()
+    return _rowdicts(
+        ("arch", "shape", "status", "dominant", "compute_s", "memory_s",
+         "collective_s", "roofline_fraction", "useful_flops_ratio",
+         "peak_gb_per_dev"),
+        roofline_rows())
 
 
 if __name__ == "__main__":

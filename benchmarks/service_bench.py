@@ -1,0 +1,97 @@
+"""Service-layer benchmark (DESIGN.md §11): job throughput of the
+multi-tenant server vs sequential ``substrat()`` calls, and the Gen-DST
+time a repeat submission's cache hit skips.
+
+The workload is 8 jobs over 2 distinct datasets (4 submissions each) — the
+serving pattern the layer targets: repeated AutoML runs on recurring data.
+Sequential execution pays factorize + Gen-DST + sub-AutoML + fine-tune per
+job; the server fingerprints each dataset (2 Gen-DST runs total, 6 cache
+hits), parks concurrent repeats in ``warm_wait`` so they skip the
+sub-AutoML pass and warm-start the restricted fine-tune, and merges
+concurrent jobs' rung cohorts into single batched dispatches.  Job budgets
+are the shared quick-mode configuration from ``benchmarks.common``.  One
+untimed warmup pass amortizes jit compilation for both sides, mirroring
+``automl_bench``.
+
+Acceptance targets (ISSUE 3): >= 3x throughput at 8 concurrent jobs;
+cache hits skip >= 90% of the Gen-DST phase time.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.substrat import substrat
+from repro.service import SubStratServer
+
+from .common import substrat_config
+
+
+def _make_data(seed: int, N: int, d: int):
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, 2, N)
+    X = np.column_stack(
+        [y * 1.5 + rng.normal(0, 0.8, N) for _ in range(d)]).astype(np.float32)
+    return X, y
+
+
+def _workload(n_jobs: int, N: int, d: int):
+    """n_jobs submissions cycling over 2 distinct datasets."""
+    datasets = [_make_data(11, N, d), _make_data(23, N, d)]
+    return [datasets[i % 2] for i in range(n_jobs)]
+
+
+def service_rows(n_jobs: int = 8, N: int = 2_000, d: int = 10, quick_tag: str = "2k"):
+    """Returns ``(name, us, derived)`` rows for the ``service`` bench section.
+
+    Job budgets are the shared quick-mode SubStrat configuration
+    (``benchmarks.common.substrat_config``) — the same engine budgets every
+    other quick-mode section runs."""
+    cfg = substrat_config()
+    jobs = _workload(n_jobs, N, d)
+
+    def run_sequential():
+        t0 = time.perf_counter()
+        results = [substrat(X, y, key=jax.random.key(i), config=cfg)
+                   for i, (X, y) in enumerate(jobs)]
+        return time.perf_counter() - t0, results
+
+    def run_service():
+        srv = SubStratServer()
+        t0 = time.perf_counter()
+        ids = [srv.submit(X, y, key=jax.random.key(i), config=cfg)
+               for i, (X, y) in enumerate(jobs)]
+        srv.run()
+        return time.perf_counter() - t0, srv, ids
+
+    run_sequential()                      # warmup: pay jit compiles
+    run_service()
+    t_seq, _ = run_sequential()
+    t_srv, srv, ids = run_service()
+
+    stats = srv.stats()
+    rows = [
+        (f"service_sequential_{n_jobs}jobs_{quick_tag}", t_seq * 1e6,
+         f"jobs={n_jobs}"),
+        (f"service_concurrent_{n_jobs}jobs_{quick_tag}", t_srv * 1e6,
+         f"speedup={t_seq / t_srv:.2f}x merged_rungs={stats['merged_rungs']} "
+         f"merged_jobs={stats['merged_jobs']} "
+         f"cache_hits={stats['cache']['hits']}"),
+    ]
+
+    # cache-hit DST skip: first submission of a dataset pays Gen-DST, its
+    # repeat pays a cache lookup
+    miss = srv.poll(ids[0]).times["gen_dst_s"]
+    hit = srv.poll(ids[2]).times["gen_dst_s"]    # same dataset as ids[0]
+    rows.append((
+        f"service_dst_cache_hit_{quick_tag}", hit * 1e6,
+        f"miss_us={miss * 1e6:.1f} skip={1.0 - hit / max(miss, 1e-12):.3%}",
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in service_rows():
+        print(f"{name},{us:.1f},{derived}")

@@ -34,6 +34,16 @@ successive-halving rung cohort at once:
 Promotion stays in ``engine.sh_promote`` (an on-device top-k mask) shared
 with the loop backend; winner params are unpadded back to the sequential
 shapes so downstream consumers are backend-agnostic (parity: §10.4).
+
+**Cross-job cohort merge** (DESIGN.md §11.4): every trial is tagged with a
+job slot and gathers its own job's data variant (``vids``), label vector
+(``yids`` into a stacked ``(J, N)`` label tensor), and — for MLP — its own
+job's ``(seed, trial_id, rung)`` init key.  ``eval_rung_cohorts`` exploits
+this to fuse rung cohorts from *different* jobs with compatible data shapes
+into one dispatch: sub-batches group by ``(family,) + shape_hps`` across
+jobs, so eight 6-trial jobs cost one program launch instead of eight.
+Merging changes dispatch granularity only — vmapped trials are independent,
+so per-trial math is identical to single-job execution.
 """
 from __future__ import annotations
 
@@ -47,7 +57,7 @@ import numpy as np
 from .engine import _apply_preproc, _fit_preproc, _select_features, _trial_key
 from .models import FAMILIES, adam_train
 
-__all__ = ["eval_rung_batched"]
+__all__ = ["eval_rung_batched", "eval_rung_cohorts"]
 
 
 # ---------------------------------------------------------------------------
@@ -151,37 +161,41 @@ def _val_acc(fam, params, X, y):
     return (jnp.argmax(fam.predict(params, X), axis=1) == y).mean()
 
 
-def _train_eval_cohort(fam, params0, Xall, Xall_val, vids, y, y_val, hp, c, epochs):
+def _train_eval_cohort(fam, params0, Xall, Xall_val, Yall, Yall_val,
+                       vids, yids, hp, c, epochs):
     """Trace-level core: vmapped Adam ``lax.scan`` fused with the
     validation-accuracy eval.  The trajectory is ``models.adam_train`` — the
     same definition the sequential backend runs — with the learning rate and
     regularisation arriving as traced per-trial scalars; each trial gathers
-    its data variant from ``Xall`` on device."""
+    its data variant from ``Xall`` and its job's labels from the stacked
+    ``(J, N)`` label tensor ``Yall`` on device (single-job runs pass J=1)."""
 
-    def one(p0, vid, hp1):
-        X = Xall[vid]
+    def one(p0, vid, yid, hp1):
+        X, y = Xall[vid], Yall[yid]
         grad_fn = jax.grad(lambda p: fam.loss(p, X, y, c, hp1))
         params = adam_train(grad_fn, p0, hp1["lr"], epochs)
-        return params, _val_acc(fam, params, Xall_val[vid], y_val)
+        return params, _val_acc(fam, params, Xall_val[vid], Yall_val[yid])
 
-    return jax.vmap(one)(params0, vids, hp)
+    return jax.vmap(one)(params0, vids, yids, hp)
 
 
-def _keyless_cohort(family, T, Xall, Xall_val, vids, y, y_val, hp, c, epochs):
+def _keyless_cohort(family, T, Xall, Xall_val, Yall, Yall_val, vids, yids,
+                    hp, c, epochs):
     """Zero-init families: the init happens inside the traced program."""
     fam = FAMILIES[family]
     p0 = fam.init(None, Xall.shape[2], c, {})
     params0 = jax.tree.map(lambda x: jnp.broadcast_to(x, (T,) + x.shape), p0)
-    return _train_eval_cohort(fam, params0, Xall, Xall_val, vids, y, y_val,
-                              hp, c, epochs)
+    return _train_eval_cohort(fam, params0, Xall, Xall_val, Yall, Yall_val,
+                              vids, yids, hp, c, epochs)
 
 
-def _mlp_cohort(seed, tids, rung_i, fidxs, shapes, depth, wmax, d,
-                Xall, Xall_val, vids, y, y_val, hp, c, epochs):
+def _mlp_cohort(seeds, tids, rung_i, fidxs, shapes, depth, wmax, d,
+                Xall, Xall_val, Yall, Yall_val, vids, yids, hp, c, epochs):
     """MLP sub-batch: loop-identical per-trial init (same
     ``(seed, trial_id, rung)`` key, actual ``(k, width)`` shapes) scattered
     to the full-feature / ``wmax``-wide layout, stacked, trained, and
-    evaluated.  ``shapes[i] = (k, width)`` per trial.
+    evaluated.  ``shapes[i] = (k, width)`` per trial; ``seeds`` is per-trial
+    so merged cohorts derive each trial's key from its own job's seed.
 
     Padded rows/columns are zero and stay zero under Adam (zero input
     columns, ``relu'(0) = 0``), so the active block trains exactly like the
@@ -189,7 +203,7 @@ def _mlp_cohort(seed, tids, rung_i, fidxs, shapes, depth, wmax, d,
     fam = FAMILIES["mlp"]
     plist = []
     for i, (k, width) in enumerate(shapes):
-        key = _trial_key(seed, tids[i], rung_i)   # loop-identical derivation
+        key = _trial_key(seeds[i], tids[i], rung_i)   # loop-identical derivation
         p0 = fam.init(key, k, c, {"width": width, "depth": depth})
         layers, L = p0["layers"], len(p0["layers"])
         out = []
@@ -209,18 +223,18 @@ def _mlp_cohort(seed, tids, rung_i, fidxs, shapes, depth, wmax, d,
             out.append({"w": buf, "b": bbuf})
         plist.append({"layers": out})
     params0 = jax.tree.map(lambda *xs: jnp.stack(xs), *plist)
-    return _train_eval_cohort(fam, params0, Xall, Xall_val, vids, y, y_val,
-                              hp, c, epochs)
+    return _train_eval_cohort(fam, params0, Xall, Xall_val, Yall, Yall_val,
+                              vids, yids, hp, c, epochs)
 
 
-def _closed_cohort(family, Xall, Xall_val, vids, y, y_val, hp, c):
+def _closed_cohort(family, Xall, Xall_val, Yall, Yall_val, vids, yids, hp, c):
     fam = FAMILIES[family]
 
-    def one(vid, hp1):
-        params = fam.fit_closed(None, Xall[vid], y, c, hp1)
-        return params, _val_acc(fam, params, Xall_val[vid], y_val)
+    def one(vid, yid, hp1):
+        params = fam.fit_closed(None, Xall[vid], Yall[yid], c, hp1)
+        return params, _val_acc(fam, params, Xall_val[vid], Yall_val[yid])
 
-    return jax.vmap(one)(vids, hp)
+    return jax.vmap(one)(vids, yids, hp)
 
 
 class _GroupDesc(NamedTuple):
@@ -233,42 +247,124 @@ class _GroupDesc(NamedTuple):
     shapes: tuple = ()   # mlp: ((k, width), ...) per trial
 
 
-def _run_group(desc, gin, seed, rung_i, Xall, Xall_val, y, y_val, c, d, epochs):
+def _run_group(desc, gin, rung_i, Xall, Xall_val, Yall, Yall_val, c, d, epochs):
     """Trace-level dispatch of one sub-batch; shared by the fused-rung and
     per-group (budget) paths, so both run identical math."""
     if desc.kind == "closed":
-        return _closed_cohort(desc.family, Xall, Xall_val, gin["vids"],
-                              y, y_val, gin["hp"], c)
+        return _closed_cohort(desc.family, Xall, Xall_val, Yall, Yall_val,
+                              gin["vids"], gin["yids"], gin["hp"], c)
     if desc.kind == "keyless":
-        return _keyless_cohort(desc.family, desc.T, Xall, Xall_val, gin["vids"],
-                               y, y_val, gin["hp"], c, epochs)
-    return _mlp_cohort(seed, gin["tids"], rung_i, gin["fidxs"], desc.shapes,
-                       desc.depth, desc.wmax, d, Xall, Xall_val, gin["vids"],
-                       y, y_val, gin["hp"], c, epochs)
+        return _keyless_cohort(desc.family, desc.T, Xall, Xall_val, Yall,
+                               Yall_val, gin["vids"], gin["yids"], gin["hp"],
+                               c, epochs)
+    return _mlp_cohort(gin["seeds"], gin["tids"], rung_i, gin["fidxs"],
+                       desc.shapes, desc.depth, desc.wmax, d, Xall, Xall_val,
+                       Yall, Yall_val, gin["vids"], gin["yids"], gin["hp"],
+                       c, epochs)
 
 
 @functools.partial(jax.jit, static_argnames=("descs", "c", "d", "epochs"))
-def _eval_rung_fused(seed, rung_i, ginputs, Xall, Xall_val, y, y_val,
+def _eval_rung_fused(rung_i, ginputs, Xall, Xall_val, Yall, Yall_val,
                      *, descs, c: int, d: int, epochs: int):
     """One dispatch for the whole rung: every family sub-batch trains and
     evaluates inside a single jitted program (used when no wall-clock budget
-    needs mid-rung cutoffs)."""
+    needs mid-rung cutoffs).  With merged cohorts the sub-batches span jobs,
+    so this is also one dispatch for the whole *job group*."""
     return tuple(
-        _run_group(desc, gin, seed, rung_i, Xall, Xall_val, y, y_val, c, d, epochs)
+        _run_group(desc, gin, rung_i, Xall, Xall_val, Yall, Yall_val, c, d, epochs)
         for desc, gin in zip(descs, ginputs))
 
 
 @functools.partial(jax.jit, static_argnames=("desc", "c", "d", "epochs"))
-def _eval_group(seed, rung_i, gin, Xall, Xall_val, y, y_val,
+def _eval_group(rung_i, gin, Xall, Xall_val, Yall, Yall_val,
                 *, desc, c: int, d: int, epochs: int):
     """Single sub-batch dispatch — the budget path, so the engine can check
     the wall clock between sub-batches."""
-    return _run_group(desc, gin, seed, rung_i, Xall, Xall_val, y, y_val, c, d, epochs)
+    return _run_group(desc, gin, rung_i, Xall, Xall_val, Yall, Yall_val, c, d, epochs)
 
 
 # ---------------------------------------------------------------------------
-# rung driver
+# rung drivers: single-job and cross-job merged
 # ---------------------------------------------------------------------------
+
+
+class _TaggedTrial(NamedTuple):
+    """One trial of a (possibly merged) rung dispatch."""
+    job: int         # job slot = yid into the stacked (J, N) label tensor
+    pos: int         # position in its job's cohort
+    spec: object     # PipelineSpec
+    tid: int         # trial id (PRNG key derivation)
+    seed: int        # its job's AutoMLConfig.seed
+    vid: int         # index into the merged variant stack
+
+
+def _group_subbatches(trials: List[_TaggedTrial], pad_widths: bool, variants):
+    """Group tagged trials by ``(family,) + shape_hps`` into dispatch jobs.
+
+    Returns ``[(trial_indices, desc, gin)]`` — one static descriptor plus
+    numpy inputs per sub-batch; numpy args are converted during the jit call,
+    no eager dispatches.  Trials from different jobs land in the same
+    sub-batch whenever family and shape HPs match — that is the cross-job
+    merge."""
+    groups: Dict[tuple, List[int]] = {}
+    for t_i, t in enumerate(trials):
+        hp = dict(t.spec.hp)
+        fam = FAMILIES[t.spec.family]
+        skip = ("width",) if pad_widths and t.spec.family == "mlp" else ()
+        gkey = (t.spec.family,) + tuple(hp[k] for k in fam.shape_hps if k not in skip)
+        groups.setdefault(gkey, []).append(t_i)
+
+    subbatches: List[tuple] = []   # (trial_indices, desc, gin)
+    for gkey, idxs in groups.items():
+        family = gkey[0]
+        fam = FAMILIES[family]
+        gin = {
+            "vids": np.asarray([trials[i].vid for i in idxs], np.int32),
+            "yids": np.asarray([trials[i].job for i in idxs], np.int32),
+            "hp": {k: np.asarray([dict(trials[i].spec.hp)[k] for i in idxs],
+                                 np.float32)
+                   for k in fam.hp_grid if k not in fam.shape_hps},
+        }
+        if fam.fit_closed is not None:
+            desc = _GroupDesc("closed", family, len(idxs))
+        elif fam.init_keyless:
+            desc = _GroupDesc("keyless", family, len(idxs))
+        else:   # mlp
+            hps = [dict(trials[i].spec.hp) for i in idxs]
+            fidxs = tuple(np.asarray(variants[trials[i].vid]["fidx"])
+                          for i in idxs)
+            shapes = tuple((len(f), int(h["width"])) for f, h in zip(fidxs, hps))
+            gin["tids"] = np.asarray([trials[i].tid for i in idxs], np.int32)
+            gin["seeds"] = np.asarray([trials[i].seed for i in idxs], np.int32)
+            gin["fidxs"] = fidxs
+            desc = _GroupDesc("mlp", family, len(idxs),
+                              depth=int(hps[0]["depth"]),
+                              wmax=max(w for (_k, w) in shapes), shapes=shapes)
+        subbatches.append((idxs, desc, gin))
+    return subbatches
+
+
+def _unpack_results(evaluated, trials, variants, collect_params):
+    """One host sync for the whole dispatch; per-trial result tuples.
+
+    Returns ``{trial_index: (val_acc, params, fidx, stats)}``."""
+    all_vaccs = np.asarray(jnp.concatenate([v for (_i, v, _f, _pb) in evaluated]))
+    results: Dict[int, tuple] = {}
+    i = 0
+    for idxs, _vaccs, family, params_b in evaluated:
+        for j, t_i in enumerate(idxs):
+            var = variants[trials[t_i].vid]
+            if collect_params:
+                # lazy: only the winner's params ever get sliced + unpadded
+                # (the engine materializes callables on access)
+                params = functools.partial(
+                    _unpad_trial, family, params_b, j, var["fidx"],
+                    dict(trials[t_i].spec.hp))
+            else:
+                params = None
+            results[t_i] = (float(all_vaccs[i]), params, var["fidx"], var["stats"])
+            i += 1
+    return results
 
 
 def eval_rung_batched(cohort, tids, rung_i: int, epochs: int, ctx,
@@ -287,87 +383,108 @@ def eval_rung_batched(cohort, tids, rung_i: int, epochs: int, ctx,
     # flop-bound large ones split per width (see WIDTH_PAD_MAX_ROWS)
     pad_widths = ctx["X_tr"].shape[0] <= WIDTH_PAD_MAX_ROWS
 
-    groups: Dict[tuple, List[int]] = {}
-    trial_vids = []
-    for pos, spec in enumerate(cohort):
-        hp = dict(spec.hp)
-        fam = FAMILIES[spec.family]
-        skip = ("width",) if pad_widths and spec.family == "mlp" else ()
-        gkey = (spec.family,) + tuple(hp[k] for k in fam.shape_hps if k not in skip)
-        groups.setdefault(gkey, []).append(pos)
-        trial_vids.append(_variant(ctx, spec.preproc, spec.feature_frac))
+    trials = [
+        _TaggedTrial(0, pos, spec, int(tids[pos]), int(ctx["seed"]),
+                     _variant(ctx, spec.preproc, spec.feature_frac))
+        for pos, spec in enumerate(cohort)
+    ]
     Xall_tr, Xall_val = _variant_stack(ctx)
     variants = {v["id"]: v for v in ctx["variant_cache"].values()}
+    subbatches = _group_subbatches(trials, pad_widths, variants)
     budget_active = ctx.get("budget_active", False)
 
-    # build one (static descriptor, numpy inputs) job per sub-batch; numpy
-    # args are converted during the jit call — no eager dispatches
-    jobs: List[tuple] = []   # (positions, desc, gin)
-    for gkey, positions in groups.items():
-        family = gkey[0]
-        fam = FAMILIES[family]
-        gin = {
-            "vids": np.asarray([trial_vids[p] for p in positions], np.int32),
-            "hp": {k: np.asarray([dict(cohort[p].hp)[k] for p in positions],
-                                 np.float32)
-                   for k in fam.hp_grid if k not in fam.shape_hps},
-        }
-        if fam.fit_closed is not None:
-            desc = _GroupDesc("closed", family, len(positions))
-        elif fam.init_keyless:
-            desc = _GroupDesc("keyless", family, len(positions))
-        else:   # mlp
-            hps = [dict(cohort[p].hp) for p in positions]
-            fidxs = tuple(np.asarray(variants[trial_vids[p]]["fidx"])
-                          for p in positions)
-            shapes = tuple((len(f), int(h["width"])) for f, h in zip(fidxs, hps))
-            gin["tids"] = np.asarray([tids[p] for p in positions], np.int32)
-            gin["fidxs"] = fidxs
-            desc = _GroupDesc("mlp", family, len(positions),
-                              depth=int(hps[0]["depth"]),
-                              wmax=max(w for (_k, w) in shapes), shapes=shapes)
-        jobs.append((positions, desc, gin))
-
-    common = (Xall_tr, Xall_val, ctx["y_tr_j"], ctx["y_val_j"])
-    evaluated: List[tuple] = []   # (positions, device vaccs, family, params_b)
+    common = (Xall_tr, Xall_val, ctx["y_tr_j"][None], ctx["y_val_j"][None])
+    evaluated: List[tuple] = []   # (trial_indices, device vaccs, family, params_b)
     if budget_active:
         # one dispatch per sub-batch, blocking, so the wall-clock cutoff can
         # land between sub-batches
-        for positions, desc, gin in jobs:
+        for idxs, desc, gin in subbatches:
             if out_of_budget() and evaluated:
                 break
-            params_b, vaccs = _eval_group(ctx["seed"], rung_i, gin, *common,
+            params_b, vaccs = _eval_group(rung_i, gin, *common,
                                           desc=desc, c=c, d=d, epochs=epochs)
             jax.block_until_ready(vaccs)
-            evaluated.append((positions, vaccs, desc.family, params_b))
+            evaluated.append((idxs, vaccs, desc.family, params_b))
     else:
         # the whole rung is one jitted program
-        outs = _eval_rung_fused(ctx["seed"], rung_i,
-                                tuple(gin for (_p, _d, gin) in jobs), *common,
-                                descs=tuple(d_ for (_p, d_, _g) in jobs),
+        outs = _eval_rung_fused(rung_i,
+                                tuple(gin for (_i, _d, gin) in subbatches), *common,
+                                descs=tuple(d_ for (_i, d_, _g) in subbatches),
                                 c=c, d=d, epochs=epochs)
-        evaluated = [(positions, vaccs, desc.family, params_b)
-                     for (positions, desc, _g), (params_b, vaccs)
-                     in zip(jobs, outs)]
+        evaluated = [(idxs, vaccs, desc.family, params_b)
+                     for (idxs, desc, _g), (params_b, vaccs)
+                     in zip(subbatches, outs)]
 
-    # one host sync for the whole rung
-    all_vaccs = np.asarray(jnp.concatenate([v for (_p, v, _f, _pb) in evaluated]))
-    results: Dict[int, tuple] = {}
-    i = 0
-    for positions, _vaccs, family, params_b in evaluated:
-        for j, p in enumerate(positions):
-            var = variants[trial_vids[p]]
-            if collect_params:
-                # lazy: only the winner's params ever get sliced + unpadded
-                # (the engine materializes callables on access)
-                params = functools.partial(
-                    _unpad_trial, family, params_b, j, var["fidx"],
-                    dict(cohort[p].hp))
-            else:
-                params = None
-            results[p] = (float(all_vaccs[i]), params, var["fidx"], var["stats"])
-            i += 1
-
+    results = _unpack_results(evaluated, trials, variants, collect_params)
+    # single-job: trial index == cohort position
     eval_pos = sorted(results)
     scored = [(cohort[p],) + results[p] for p in eval_pos]
     return scored, eval_pos
+
+
+def eval_rung_cohorts(jobs, rung_i: int, epochs: int,
+                      collect_params: bool = True) -> List[Tuple[list, list]]:
+    """Cross-job rung merge: one fused dispatch for many jobs' cohorts.
+
+    ``jobs`` is a list of ``(cohort, tids, ctx)`` triples whose evaluation
+    contexts are shape-compatible — same ``(N_tr, d)`` / ``(N_val, d)`` data
+    shapes and class count — and that sit at the same ``(rung_i, epochs)``.
+    Per-trial math is exactly the single-job batched path: every trial is
+    tagged with its job slot, gathers its own job's data variant and label
+    vector on device, and MLP trials derive init keys from their own job's
+    ``(seed, trial_id, rung)``, so merging changes dispatch granularity, not
+    any trained trajectory (DESIGN.md §11.4).  Returns per-job
+    ``(scored, positions)`` pairs in input order.
+
+    No mid-rung time-budget support: the scheduler only merges jobs without
+    ``time_budget_s`` (budgeted jobs run solo via ``eval_rung_batched``).
+    """
+    ctx0 = jobs[0][2]
+    d, c = ctx0["X_tr"].shape[1], ctx0["n_classes"]
+    for (_cohort, _tids, ctx) in jobs[1:]:
+        if (ctx["X_tr"].shape != ctx0["X_tr"].shape
+                or ctx["X_val"].shape != ctx0["X_val"].shape
+                or ctx["n_classes"] != c):
+            raise ValueError("eval_rung_cohorts: incompatible job shapes")
+    pad_widths = ctx0["X_tr"].shape[0] <= WIDTH_PAD_MAX_ROWS
+
+    # register every trial's variant in its own job's cache first (caches
+    # persist across rungs), then offset local variant ids into one merged
+    # stack: merged vid = job's offset + local vid
+    local = []
+    for slot, (cohort, tids, ctx) in enumerate(jobs):
+        for pos, spec in enumerate(cohort):
+            lvid = _variant(ctx, spec.preproc, spec.feature_frac)
+            local.append((slot, pos, spec, int(tids[pos]), int(ctx["seed"]), lvid))
+    offsets = np.concatenate([[0], np.cumsum(
+        [len(ctx["variant_cache"]) for (_c2, _t2, ctx) in jobs])])
+    trials = [_TaggedTrial(slot, pos, spec, tid, seed, int(offsets[slot]) + lvid)
+              for (slot, pos, spec, tid, seed, lvid) in local]
+
+    stacks = [_variant_stack(ctx) for (_c2, _t2, ctx) in jobs]
+    Xall_tr = jnp.concatenate([s[0] for s in stacks])
+    Xall_val = jnp.concatenate([s[1] for s in stacks])
+    Yall_tr = jnp.stack([ctx["y_tr_j"] for (_c2, _t2, ctx) in jobs])
+    Yall_val = jnp.stack([ctx["y_val_j"] for (_c2, _t2, ctx) in jobs])
+    variants = {}
+    for slot, (_c2, _t2, ctx) in enumerate(jobs):
+        for v in ctx["variant_cache"].values():
+            variants[int(offsets[slot]) + v["id"]] = v
+
+    subbatches = _group_subbatches(trials, pad_widths, variants)
+    outs = _eval_rung_fused(rung_i,
+                            tuple(gin for (_i, _d, gin) in subbatches),
+                            Xall_tr, Xall_val, Yall_tr, Yall_val,
+                            descs=tuple(d_ for (_i, d_, _g) in subbatches),
+                            c=c, d=d, epochs=epochs)
+    evaluated = [(idxs, vaccs, desc.family, params_b)
+                 for (idxs, desc, _g), (params_b, vaccs)
+                 in zip(subbatches, outs)]
+    results = _unpack_results(evaluated, trials, variants, collect_params)
+
+    per_job: List[Tuple[list, list]] = []
+    for slot, (cohort, _tids, _ctx) in enumerate(jobs):
+        idxs = [i for i in sorted(results) if trials[i].job == slot]
+        scored = [(cohort[trials[i].pos],) + results[i] for i in idxs]
+        per_job.append((scored, [trials[i].pos for i in idxs]))
+    return per_job

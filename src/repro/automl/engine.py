@@ -40,7 +40,8 @@ from .models import FAMILIES, accuracy, train_model
 
 __all__ = [
     "AutoMLConfig", "AutoMLResult", "automl_fit", "PipelineSpec",
-    "apply_pipeline", "sh_promote",
+    "apply_pipeline", "sh_promote", "SearchState", "search_init",
+    "search_cohort", "search_record", "search_result", "search_eval_rung",
 ]
 
 # preprocessor and feature-fraction axes of the pipeline search space
@@ -198,18 +199,49 @@ def _eval_rung_loop(cohort, tids, rung_i, epochs, ctx, out_of_budget,
     return scored, list(range(len(scored)))
 
 
-def automl_fit(
+@dataclasses.dataclass
+class SearchState:
+    """Resumable state of one successive-halving search (DESIGN.md §11.3).
+
+    ``automl_fit`` drives a state rung-by-rung to completion; the service
+    scheduler instead advances many states in lockstep so compatible rung
+    cohorts from different jobs can merge into one batched dispatch
+    (``automl/batched.eval_rung_cohorts``).  The cycle per rung is
+    ``search_cohort`` (what to evaluate) → any backend evaluation →
+    ``search_record`` (promotion + advance); ``search_result`` finalizes.
+    """
+    config: AutoMLConfig
+    classes: np.ndarray                # original label values, sorted
+    ctx: dict                          # backend evaluation context
+    specs: List[PipelineSpec]
+    alive_ids: List[int]
+    t_start: float
+    rung_i: int = 0
+    live: List[tuple] = dataclasses.field(default_factory=list)
+    trials_log: List[tuple] = dataclasses.field(default_factory=list)
+    rung_times: List[float] = dataclasses.field(default_factory=list)
+    n_done: int = 0
+    stopped: bool = False              # budget cutoff fired after a rung
+
+    @property
+    def done(self) -> bool:
+        return self.stopped or self.rung_i >= len(self.config.rungs)
+
+    def out_of_budget(self) -> bool:
+        return (
+            self.config.time_budget_s is not None
+            and time.perf_counter() - self.t_start > self.config.time_budget_s
+        )
+
+
+def search_init(
     X: np.ndarray,
     y: np.ndarray,
     *,
     config: AutoMLConfig = AutoMLConfig(),
     restrict_family: Optional[str] = None,
-    X_test: Optional[np.ndarray] = None,
-    y_test: Optional[np.ndarray] = None,
-) -> AutoMLResult:
-    """Run the AutoML search.  Returns the best pipeline found.
-
-    ``restrict_family`` implements the paper's restricted fine-tune pass."""
+) -> SearchState:
+    """Build the evaluation context and sample the initial population."""
     if config.backend not in ("batched", "loop"):
         raise ValueError(f"unknown AutoML backend {config.backend!r}")
     t_start = time.perf_counter()
@@ -231,12 +263,6 @@ def automl_fit(
     n_seed_trials = config.n_trials if not restrict_family else max(4, config.n_trials // 4)
     specs = _sample_specs(rng, n_seed_trials, families)
 
-    def out_of_budget() -> bool:
-        return (
-            config.time_budget_s is not None
-            and time.perf_counter() - t_start > config.time_budget_s
-        )
-
     ctx = {
         "X_tr": X_tr, "y_tr": y_tr, "X_val": X_val, "y_val": y_val,
         "y_tr_j": jnp.asarray(y_tr), "y_val_j": jnp.asarray(y_val),
@@ -245,45 +271,58 @@ def automl_fit(
         "pipe_cache": {},      # loop backend: (preproc, frac) -> projected data
         "variant_cache": {},   # batched backend: (preproc, frac) -> full-width variant
     }
+    return SearchState(
+        config=config, classes=classes, ctx=ctx, specs=specs,
+        alive_ids=list(range(len(specs))), t_start=t_start,
+    )
 
-    if config.backend == "batched":
-        from .batched import eval_rung_batched as _eval_rung
-    else:
-        _eval_rung = _eval_rung_loop
 
-    # successive halving over epoch rungs: each rung retrains the surviving
-    # cohort from scratch at the next epoch budget (DESIGN.md §10.2)
-    live: List[tuple] = []
-    trials_log: List[tuple] = []
-    rung_times: List[float] = []
-    n_done = 0
+def search_cohort(state: SearchState):
+    """Current rung's work unit: ``(cohort, tids, epochs, collect_params)``.
 
-    alive_ids = list(range(len(specs)))
-    for rung_i, epochs in enumerate(config.rungs):
-        cohort = [specs[i] for i in alive_ids]
-        # non-final rungs only need accuracies for promotion — unless a time
-        # budget could make this rung the last one evaluated
-        collect = (rung_i == len(config.rungs) - 1
-                   or config.time_budget_s is not None)
-        t_rung = time.perf_counter()
-        scored, positions = _eval_rung(cohort, alive_ids, rung_i, int(epochs), ctx,
-                                       out_of_budget, collect)
-        rung_times.append(time.perf_counter() - t_rung)
-        trials_log.extend((s, v) for (s, v, *_rest) in scored)
-        n_done += len(scored)
-        live = scored
-        # on-device top-k promotion; survivors keep population order — except
-        # under a time budget, where the next rung runs best-first so a
-        # mid-rung cutoff spends the remaining budget on the strongest trials
-        mask = np.asarray(sh_promote(
-            np.asarray([v for (_s, v, *_r) in scored], np.float32), config.keep_frac))
-        surv = list(np.flatnonzero(mask))
-        if config.time_budget_s is not None:
-            surv.sort(key=lambda i: (-scored[i][1], i))
-        alive_ids = [alive_ids[positions[i]] for i in surv]
-        if out_of_budget():
-            break
+    ``collect_params`` is False on non-final rungs (promotion only needs
+    accuracies) — unless a time budget could make this rung the last one
+    evaluated."""
+    config = state.config
+    cohort = [state.specs[i] for i in state.alive_ids]
+    collect = (state.rung_i == len(config.rungs) - 1
+               or config.time_budget_s is not None)
+    return cohort, list(state.alive_ids), int(config.rungs[state.rung_i]), collect
 
+
+def search_record(state: SearchState, scored, positions, rung_time: float) -> None:
+    """Record one evaluated rung: log trials, promote survivors, advance.
+
+    ``scored``/``positions`` are the backend's rung output (loop-backend
+    tuple layout).  Promotion is the on-device top-k mask shared by both
+    backends; survivors keep population order except under a time budget
+    (DESIGN.md §10.2)."""
+    config = state.config
+    state.rung_times.append(rung_time)
+    state.trials_log.extend((s, v) for (s, v, *_rest) in scored)
+    state.n_done += len(scored)
+    state.live = scored
+    # on-device top-k promotion; survivors keep population order — except
+    # under a time budget, where the next rung runs best-first so a
+    # mid-rung cutoff spends the remaining budget on the strongest trials
+    mask = np.asarray(sh_promote(
+        np.asarray([v for (_s, v, *_r) in scored], np.float32), config.keep_frac))
+    surv = list(np.flatnonzero(mask))
+    if config.time_budget_s is not None:
+        surv.sort(key=lambda i: (-scored[i][1], i))
+    state.alive_ids = [state.alive_ids[positions[i]] for i in surv]
+    state.rung_i += 1
+    if state.out_of_budget():
+        state.stopped = True
+
+
+def search_result(
+    state: SearchState,
+    X_test: Optional[np.ndarray] = None,
+    y_test: Optional[np.ndarray] = None,
+) -> AutoMLResult:
+    """Finalize: pick the accuracy-argmax of the last evaluated rung."""
+    live = state.live
     best_i = int(np.argmax([v for (_s, v, *_r) in live]))  # ties -> lower index
     best_spec, best_vacc, best_params, best_fidx, best_stats = live[best_i]
     if callable(best_params):   # batched backend materializes params lazily
@@ -291,7 +330,7 @@ def automl_fit(
     test_acc = None
     if X_test is not None:
         Xt = apply_pipeline(best_spec, best_stats, best_fidx, np.asarray(X_test, np.float32))
-        yt = jnp.asarray(np.searchsorted(classes, np.asarray(y_test)))
+        yt = jnp.asarray(np.searchsorted(state.classes, np.asarray(y_test)))
         test_acc = accuracy(best_params, Xt, yt, best_spec.family)
 
     return AutoMLResult(
@@ -299,11 +338,51 @@ def automl_fit(
         params=best_params,
         val_acc=float(best_vacc),
         test_acc=test_acc,
-        time_s=time.perf_counter() - t_start,
-        n_trials=n_done,
+        time_s=time.perf_counter() - state.t_start,
+        n_trials=state.n_done,
         feat_idx=best_fidx,
         pre_stats=best_stats,
-        trials=trials_log,
-        rung_times=rung_times,
-        backend=config.backend,
+        trials=state.trials_log,
+        rung_times=state.rung_times,
+        backend=state.config.backend,
     )
+
+
+def search_eval_rung(state: SearchState):
+    """Evaluate the current rung in-process (single-job path) and record it.
+
+    The service scheduler bypasses this for batched jobs it can merge
+    (``automl/batched.eval_rung_cohorts``); everything else — ``automl_fit``,
+    loop-backend jobs, time-budgeted jobs — rungs through here."""
+    if state.config.backend == "batched":
+        from .batched import eval_rung_batched as _eval_rung
+    else:
+        _eval_rung = _eval_rung_loop
+    cohort, tids, epochs, collect = search_cohort(state)
+    t_rung = time.perf_counter()
+    scored, positions = _eval_rung(cohort, tids, state.rung_i, epochs, state.ctx,
+                                   state.out_of_budget, collect)
+    search_record(state, scored, positions, time.perf_counter() - t_rung)
+
+
+def automl_fit(
+    X: np.ndarray,
+    y: np.ndarray,
+    *,
+    config: AutoMLConfig = AutoMLConfig(),
+    restrict_family: Optional[str] = None,
+    X_test: Optional[np.ndarray] = None,
+    y_test: Optional[np.ndarray] = None,
+) -> AutoMLResult:
+    """Run the AutoML search.  Returns the best pipeline found.
+
+    ``restrict_family`` implements the paper's restricted fine-tune pass.
+    This is the one-shot driver over the resumable ``SearchState`` API
+    (``search_init``/``search_cohort``/``search_record``/``search_result``)
+    that the service scheduler uses to interleave many searches."""
+    state = search_init(X, y, config=config, restrict_family=restrict_family)
+    # successive halving over epoch rungs: each rung retrains the surviving
+    # cohort from scratch at the next epoch budget (DESIGN.md §10.2)
+    while not state.done:
+        search_eval_rung(state)
+    return search_result(state, X_test, y_test)

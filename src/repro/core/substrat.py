@@ -7,6 +7,12 @@
      only considering pipelines with M''s model family:  -> M_sub.
 
 ``fine_tune=False`` gives the paper's SubStrat-NF ablation (category F).
+
+The strategy is factored into explicit phase functions — ``phase_dst``,
+``dst_feature_columns``, ``build_subset``, ``nf_test_eval`` — so the service
+scheduler (``repro/service``, DESIGN.md §11.3) can interleave many jobs'
+phases and merge their AutoML rung cohorts; ``substrat()`` remains the
+one-shot single-tenant driver over the same functions.
 """
 from __future__ import annotations
 
@@ -21,7 +27,10 @@ from ..automl.engine import AutoMLConfig, AutoMLResult, automl_fit
 from .gen_dst import GenDSTConfig, gen_dst, default_dst_size
 from .measures import CodedDataset, factorize
 
-__all__ = ["SubStratResult", "substrat", "SubStratConfig"]
+__all__ = [
+    "SubStratResult", "substrat", "SubStratConfig",
+    "phase_dst", "dst_feature_columns", "build_subset", "nf_test_eval",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,6 +100,98 @@ class SubStratResult:
     total_time_s: float
 
 
+# ---------------------------------------------------------------------------
+# phase functions (the scheduler's units of work; substrat() chains them)
+# ---------------------------------------------------------------------------
+
+
+def phase_dst(
+    key: jax.Array,
+    coded: CodedDataset,
+    config: SubStratConfig,
+    dst_fn: Optional[Callable] = None,
+):
+    """Step 1: find the measure-preserving DST.
+
+    Returns ``(row_idx, col_mask, fitness)`` as host numpy/float — the
+    exact payload the service DST cache stores."""
+    if dst_fn is None:
+        dst = gen_dst(key, coded, config.n, config.m, config.resolved_gen())
+    else:
+        dst = dst_fn(key, coded, config.n, config.m)
+    row_idx = np.asarray(jax.device_get(dst.row_idx))
+    col_mask = np.asarray(jax.device_get(dst.col_mask))
+    return row_idx, col_mask, float(dst.fitness)
+
+
+def dst_feature_columns(col_mask: np.ndarray, target_col: int) -> np.ndarray:
+    """Feature columns of the DST (the target column participates in the
+    measure but is the label, not a feature)."""
+    col_idx = np.flatnonzero(col_mask)
+    col_idx = col_idx[col_idx != target_col]
+    if len(col_idx) == 0:
+        # degenerate DST (some baselines can select only the target on
+        # tiny m) — fall back to the first feature column
+        col_idx = np.array([0 if target_col != 0 else 1])
+    return col_idx
+
+
+def build_subset(
+    X: np.ndarray,
+    y: np.ndarray,
+    row_idx: np.ndarray,
+    col_idx: np.ndarray,
+    key: Optional[jax.Array] = None,
+):
+    """Materialize the DST rows/columns as the step-2 training set.
+
+    If the row draw misses entire label classes (skewed labels), patch the
+    subset by drawing explicitly from rows of each missing class — a fixed
+    random draw can miss a rare minority class entirely — with the draw
+    seeded from the run ``key`` so repeat runs are deterministic per key."""
+    X, y = np.asarray(X), np.asarray(y)
+    X_sub = X[row_idx][:, col_idx]
+    y_sub = y[row_idx]
+    missing = np.setdiff1d(np.unique(y), np.unique(y_sub))
+    if len(missing):
+        key = jax.random.key(0) if key is None else key
+        seed = int(np.asarray(jax.random.randint(
+            jax.random.fold_in(key, 0x5AB5), (), 0, np.iinfo(np.int32).max)))
+        rng = np.random.default_rng(seed)
+        extra = np.concatenate([
+            rng.choice(np.flatnonzero(y == cls),
+                       size=min(32, int((y == cls).sum())), replace=False)
+            for cls in missing
+        ])
+        X_sub = np.concatenate([X_sub, X[extra][:, col_idx]])
+        y_sub = np.concatenate([y_sub, y[extra]])
+    return X_sub, y_sub
+
+
+def nf_test_eval(
+    intermediate: AutoMLResult,
+    y_sub: np.ndarray,
+    col_idx: np.ndarray,
+    X_test: np.ndarray,
+    y_test: np.ndarray,
+) -> AutoMLResult:
+    """SubStrat-NF test evaluation: score M' on the full-width test data
+    restricted to the DST's feature columns (no fine-tune pass)."""
+    from ..automl.engine import apply_pipeline
+    from ..automl.models import accuracy
+    import jax.numpy as jnp
+    Xt = apply_pipeline(
+        intermediate.spec, intermediate.pre_stats, intermediate.feat_idx,
+        np.asarray(X_test, np.float32)[:, col_idx],
+    )
+    classes = np.unique(y_sub)
+    yt = jnp.asarray(np.searchsorted(classes, np.asarray(y_test)))
+    return dataclasses.replace(
+        intermediate,
+        test_acc=accuracy(intermediate.params, Xt, yt, intermediate.spec.family),
+    )
+
+
 def substrat(
     X: np.ndarray,
     y: np.ndarray,
@@ -113,32 +214,13 @@ def substrat(
 
     # --- step 1: find the measure-preserving DST ------------------------------
     t0 = time.perf_counter()
-    if dst_fn is None:
-        dst = gen_dst(key, coded, config.n, config.m, config.resolved_gen())
-    else:
-        dst = dst_fn(key, coded, config.n, config.m)
-    row_idx = np.asarray(jax.device_get(dst.row_idx))
-    col_mask = np.asarray(jax.device_get(dst.col_mask))
+    row_idx, col_mask, fitness = phase_dst(key, coded, config, dst_fn)
     times["gen_dst_s"] = time.perf_counter() - t0
-
-    # feature columns of the DST (target column participates in the measure
-    # but is the label, not a feature)
-    col_idx = np.flatnonzero(col_mask)
-    col_idx = col_idx[col_idx != coded.target_col]
-    if len(col_idx) == 0:
-        # degenerate DST (some baselines can select only the target on
-        # tiny m) — fall back to the first feature column
-        col_idx = np.array([0 if coded.target_col != 0 else 1])
+    col_idx = dst_feature_columns(col_mask, coded.target_col)
 
     # --- step 2: AutoML on the subset -----------------------------------------
     t0 = time.perf_counter()
-    X_sub = np.asarray(X)[row_idx][:, col_idx]
-    y_sub = np.asarray(y)[row_idx]
-    if len(np.unique(y_sub)) < 2:
-        # degenerate label draw — patch with a few random extra rows
-        extra = np.random.default_rng(0).permutation(len(y))[:64]
-        X_sub = np.concatenate([X_sub, np.asarray(X)[extra][:, col_idx]])
-        y_sub = np.concatenate([y_sub, np.asarray(y)[extra]])
+    X_sub, y_sub = build_subset(X, y, row_idx, col_idx, key)
     intermediate = automl_fit(X_sub, y_sub, config=config.resolved_sub_automl())
     times["automl_sub_s"] = time.perf_counter() - t0
 
@@ -155,26 +237,14 @@ def substrat(
     else:
         final = intermediate
         if X_test is not None:
-            # evaluate M' on the full-width test data restricted to DST columns
-            from ..automl.engine import apply_pipeline
-            Xt = apply_pipeline(
-                intermediate.spec, intermediate.pre_stats, intermediate.feat_idx,
-                np.asarray(X_test, np.float32)[:, col_idx],
-            )
-            from ..automl.models import accuracy
-            import jax.numpy as jnp
-            classes = np.unique(y_sub)
-            yt = jnp.asarray(np.searchsorted(classes, np.asarray(y_test)))
-            final = dataclasses.replace(
-                intermediate, test_acc=accuracy(intermediate.params, Xt, yt, intermediate.spec.family)
-            )
+            final = nf_test_eval(intermediate, y_sub, col_idx, X_test, y_test)
 
     return SubStratResult(
         final=final,
         intermediate=intermediate,
         row_idx=row_idx,
         col_idx=col_idx,
-        dst_fitness=float(dst.fitness),
+        dst_fitness=fitness,
         times=times,
         total_time_s=sum(times.values()),
     )

@@ -1,0 +1,23 @@
+"""SubStrat service layer (DESIGN.md §11): a multi-tenant job server over
+the one-shot ``substrat()`` pipeline.
+
+- ``fingerprint`` — stable content hash of a factorized dataset.
+- ``cache``       — LRU DST cache keyed by (fingerprint, n, m, measure,
+                    search config), so repeat submissions skip Gen-DST and
+                    warm-start the restricted fine-tune.
+- ``scheduler``   — async job queue running jobs through explicit resumable
+                    phases, merging compatible rung cohorts from different
+                    jobs into one batched-engine dispatch.
+- ``server``      — in-process submit/poll/result front end with per-tenant
+                    budget accounting.
+"""
+from .cache import DSTCache, DSTCacheEntry
+from .fingerprint import dataset_fingerprint
+from .scheduler import Scheduler, SubStratJob
+from .server import BudgetExceeded, JobStatus, SubStratServer
+
+__all__ = [
+    "DSTCache", "DSTCacheEntry", "dataset_fingerprint",
+    "Scheduler", "SubStratJob",
+    "BudgetExceeded", "JobStatus", "SubStratServer",
+]

@@ -1,0 +1,104 @@
+"""LRU DST cache (DESIGN.md §11.2).
+
+Keyed by ``(fingerprint, n, m, measure, search_cfg)`` — the full identity
+of a Gen-DST search problem: the factorized dataset content, the requested
+subset shape, the preserved measure, and the resolved search configuration
+(subsets found by weaker searches must not satisfy stronger requests).
+An entry stores the search's *output*
+(``row_idx``/``col_mask``/fitness) and, once a job's sub-AutoML pass has
+finished, the winning model family, so a repeat submission can skip Gen-DST
+entirely and warm-start the restricted fine-tune (scheduler, §11.3).
+
+Entries are immutable snapshots of host numpy arrays; the cache never holds
+device buffers.  Capacity is enforced LRU (get refreshes recency).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Optional, Tuple
+
+import numpy as np
+
+__all__ = ["DSTCache", "DSTCacheEntry", "dst_cache_key"]
+
+
+def dst_cache_key(fingerprint: str, n: int, m: int, measure: str,
+                  search_cfg: Optional[Tuple] = None) -> Tuple:
+    """The cache key of one Gen-DST search problem.
+
+    ``(fingerprint, n, m, measure)`` identifies *what* subset is sought;
+    ``search_cfg`` (any hashable, e.g. the resolved ``GenDSTConfig``)
+    identifies *how hard* it was searched for — without it, a subset found
+    by a 2-generation toy search would satisfy a later paper-strength
+    request for the same dataset."""
+    return (fingerprint, int(n), int(m), measure, search_cfg)
+
+
+@dataclasses.dataclass
+class DSTCacheEntry:
+    row_idx: np.ndarray            # (n,) host int
+    col_mask: np.ndarray           # (M,) host bool
+    fitness: float                 # -|F(d) - F(D)| at insert time
+    winner_family: Optional[str] = None   # sub-AutoML winner from a prior job
+    hits: int = 0
+
+
+class DSTCache:
+    """LRU map from DST search problems to their solved subsets."""
+
+    def __init__(self, capacity: int = 128):
+        if capacity < 1:
+            raise ValueError("DSTCache capacity must be >= 1")
+        self.capacity = capacity
+        self._entries: "OrderedDict[Tuple, DSTCacheEntry]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key) -> bool:
+        return key in self._entries
+
+    def peek(self, key) -> Optional[DSTCacheEntry]:
+        """Look up without touching recency or hit/miss stats (used by the
+        scheduler's warm-wait polling, which is not a cache *use*)."""
+        return self._entries.get(key)
+
+    def get(self, key) -> Optional[DSTCacheEntry]:
+        entry = self._entries.get(key)
+        if entry is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.hits += 1
+        entry.hits += 1
+        return entry
+
+    def put(self, key, entry: DSTCacheEntry) -> DSTCacheEntry:
+        self._entries[key] = entry
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+        return entry
+
+    def note_winner(self, key, family: str) -> None:
+        """Record the sub-AutoML winner family for warm-started repeats.
+
+        No-op if the entry was evicted meanwhile; does not refresh recency
+        (recording a result is not a use of the entry)."""
+        entry = self._entries.get(key)
+        if entry is not None:
+            entry.winner_family = family
+
+    def stats(self) -> dict:
+        return {
+            "size": len(self._entries),
+            "capacity": self.capacity,
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+        }

@@ -1,0 +1,33 @@
+"""Dataset fingerprinting for the service layer (DESIGN.md §11.1).
+
+A fingerprint is a SHA-256 content hash of the *factorized* dataset — the
+integer ``codes`` matrix, the per-column ``n_bins``, and ``target_col`` —
+not of the raw float matrix.  Factorization is deterministic (quantile bins
+from sorted values, dense code assignment by value order), so two
+byte-identical raw datasets always factorize to identical codes, and the
+codes are exactly what the DST search consumes: datasets that factorize the
+same have the same Gen-DST search problem, which is the equivalence the DST
+cache needs.  Shapes are hashed explicitly so a prefix relationship between
+two code buffers can never collide.
+"""
+from __future__ import annotations
+
+import hashlib
+
+import numpy as np
+
+from ..core.measures import CodedDataset
+
+__all__ = ["dataset_fingerprint"]
+
+
+def dataset_fingerprint(coded: CodedDataset) -> str:
+    """Stable hex fingerprint of a factorized dataset."""
+    codes = np.ascontiguousarray(np.asarray(coded.codes, dtype=np.int32))
+    n_bins = np.ascontiguousarray(np.asarray(coded.n_bins, dtype=np.int32))
+    h = hashlib.sha256()
+    h.update(np.asarray(codes.shape, np.int64).tobytes())
+    h.update(codes.tobytes())
+    h.update(n_bins.tobytes())
+    h.update(np.int64(coded.target_col).tobytes())
+    return h.hexdigest()

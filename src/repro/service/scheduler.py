@@ -1,0 +1,443 @@
+"""Multi-tenant SubStrat job scheduler (DESIGN.md §11.3).
+
+Turns the one-shot ``substrat()`` pipeline into a cooperative job queue.
+Every job moves through explicit resumable phases::
+
+    factorize  ─►  dst  ─►  sub_automl  ─►  fine_tune  ─►  done
+        │  cache hit │           │              ▲
+        │            └► warm_wait ──────────────┤
+        │  (known winner family) ───────────────┘
+        └────────────────────────────────────────
+
+A cache hit skips ``dst``; if the entry already names the sub-AutoML winner
+family, the job warm-starts straight into ``fine_tune``.  If the family is
+not yet known but another in-flight job on the same cache key is about to
+produce it, the repeat parks in ``warm_wait`` instead of duplicating the
+sub-AutoML pass (in-flight dedup) and un-parks the moment the leader
+publishes its winner — falling back to running the pass itself if every
+leader disappears.
+
+``step()`` advances every active job by exactly one unit of work — one
+phase transition, or one successive-halving rung of its current AutoML
+search.  The AutoML phases run on the resumable ``SearchState`` API
+(``engine.search_init``/``search_cohort``/``search_record``), which is what
+makes **cross-job batching** possible: jobs whose current rungs are
+compatible — batched backend, no wall-clock budget, same data shapes and
+class count, same ``(rung_i, epochs)`` — are merged into one vmapped
+dispatch of the batched engine (``batched.eval_rung_cohorts``) instead of
+running per-job.  Merging changes dispatch granularity only; per-trial math
+is identical to solo execution (parity argument: DESIGN.md §11.4), and the
+merged rung's wall time is attributed to the participating jobs in equal
+shares.
+
+The DST cache keys on ``(fingerprint, n, m, measure, gen config)``: a
+repeat submission
+of a seen dataset skips Gen-DST entirely (phase ``dst`` is bypassed), and —
+when the cache already knows the winning model family from a prior job's
+sub-AutoML pass and ``warm_start`` is on — skips the sub-AutoML pass too,
+jumping straight to the restricted fine-tune (its ``SubStratResult`` then
+reports ``intermediate is final``).  Jobs with a custom ``dst_fn`` bypass
+the cache: its entries are Gen-DST outputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from ..automl.engine import (
+    SearchState, search_cohort, search_eval_rung, search_init, search_record,
+    search_result,
+)
+from ..core.gen_dst import default_dst_size
+from ..core.measures import CodedDataset, factorize
+from ..core.substrat import (
+    SubStratConfig, SubStratResult, build_subset, dst_feature_columns,
+    nf_test_eval, phase_dst,
+)
+from .cache import DSTCache, DSTCacheEntry, dst_cache_key
+from .fingerprint import dataset_fingerprint
+
+__all__ = ["Scheduler", "SubStratJob", "PHASES"]
+
+PHASES = ("factorize", "dst", "warm_wait", "sub_automl", "fine_tune",
+          "done", "failed")
+
+# times-dict key per AutoML phase (matches substrat()'s per-phase keys)
+_PHASE_TIME_KEY = {"sub_automl": "automl_sub_s", "fine_tune": "fine_tune_s"}
+
+
+@dataclasses.dataclass
+class SubStratJob:
+    """One submitted SubStrat run and its phase state."""
+    job_id: int
+    tenant: str
+    X: np.ndarray
+    y: np.ndarray
+    key: jax.Array
+    config: SubStratConfig
+    dst_fn: Optional[Callable] = None
+    coded: Optional[CodedDataset] = None
+    X_test: Optional[np.ndarray] = None
+    y_test: Optional[np.ndarray] = None
+
+    phase: str = "factorize"
+    times: Dict[str, float] = dataclasses.field(default_factory=dict)
+    cache_hit: bool = False
+    warm_family: Optional[str] = None      # cache-known winner (skips sub pass)
+    fingerprint: Optional[str] = None
+    cache_key: Optional[tuple] = None
+    row_idx: Optional[np.ndarray] = None
+    col_mask: Optional[np.ndarray] = None
+    col_idx: Optional[np.ndarray] = None
+    dst_fitness: Optional[float] = None
+    y_sub: Optional[np.ndarray] = None     # NF test eval needs the subset labels
+    search: Optional[SearchState] = None   # current AutoML pass, rung-resumable
+    intermediate: Optional[object] = None  # AutoMLResult M'
+    final: Optional[object] = None         # AutoMLResult M_sub
+    result: Optional[SubStratResult] = None
+    error: Optional[BaseException] = None
+
+    @property
+    def active(self) -> bool:
+        return self.phase not in ("done", "failed")
+
+    @property
+    def cost_s(self) -> float:
+        return sum(self.times.values())
+
+
+class Scheduler:
+    """Cooperative multi-job scheduler with DST caching and rung merging."""
+
+    def __init__(self, cache: Optional[DSTCache] = None, *, warm_start: bool = True):
+        self.cache = cache if cache is not None else DSTCache()
+        self.warm_start = warm_start
+        self.jobs: Dict[int, SubStratJob] = {}
+        self._next_id = 0
+        self.merged_rungs = 0   # merged dispatches issued
+        self.merged_jobs = 0    # job-rungs that rode a merged dispatch
+        self.solo_rungs = 0     # rungs evaluated per-job
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(
+        self,
+        X: np.ndarray,
+        y: np.ndarray,
+        *,
+        tenant: str = "default",
+        key: Optional[jax.Array] = None,
+        config: SubStratConfig = SubStratConfig(),
+        dst_fn: Optional[Callable] = None,
+        coded: Optional[CodedDataset] = None,
+        X_test: Optional[np.ndarray] = None,
+        y_test: Optional[np.ndarray] = None,
+    ) -> int:
+        """Admit a job; returns its id.  No work happens until ``step()``."""
+        job = SubStratJob(
+            job_id=self._next_id, tenant=tenant, X=X, y=y,
+            key=jax.random.key(0) if key is None else key,
+            config=config, dst_fn=dst_fn, coded=coded,
+            X_test=X_test, y_test=y_test,
+        )
+        self.jobs[job.job_id] = job
+        self._next_id += 1
+        return job.job_id
+
+    def pending(self) -> List[SubStratJob]:
+        return [j for j in self.jobs.values() if j.active]
+
+    # -- phase work ---------------------------------------------------------
+
+    def _factorize(self, job: SubStratJob) -> None:
+        t0 = time.perf_counter()
+        if job.coded is None:
+            job.coded = factorize(job.X, job.y)
+        job.fingerprint = dataset_fingerprint(job.coded)
+        job.times["factorize_s"] = time.perf_counter() - t0
+
+        # resolve the DST shape the same way gen_dst does, so the cache key
+        # is the actual search problem, not the (possibly None) config fields
+        N, M = job.coded.codes.shape
+        dn, dm = default_dst_size(N, M)
+        n = dn if job.config.n is None else min(job.config.n, N)
+        m = dm if job.config.m is None else min(job.config.m, M)
+        if job.dst_fn is None:
+            gen = job.config.resolved_gen()
+            job.cache_key = dst_cache_key(
+                job.fingerprint, n, m, gen.measure, search_cfg=gen)
+
+        if not self._try_cache_hit(job):
+            job.phase = "dst"
+
+    def _try_cache_hit(self, job: SubStratJob) -> bool:
+        """Probe the DST cache; on a hit, install the stored subset and
+        advance the job past Gen-DST (and, when warm-startable, past the
+        sub-AutoML pass)."""
+        t0 = time.perf_counter()
+        entry = self.cache.get(job.cache_key) if job.cache_key else None
+        if entry is None:
+            return False
+        # cache hit: the stored subset replaces the whole Gen-DST search;
+        # gen_dst_s records what the hit actually cost (the lookup)
+        job.cache_hit = True
+        job.row_idx, job.col_mask = entry.row_idx, entry.col_mask
+        job.dst_fitness = entry.fitness
+        job.col_idx = dst_feature_columns(job.col_mask, job.coded.target_col)
+        job.times["gen_dst_s"] = time.perf_counter() - t0
+        if self.warm_start and job.config.fine_tune and entry.winner_family:
+            job.warm_family = entry.winner_family
+            job.phase = "fine_tune"
+        elif (self.warm_start and job.config.fine_tune
+              and self._family_leader(job) is not None):
+            # a concurrent job on the same cache key is already running the
+            # sub-AutoML pass: wait for its winner family instead of
+            # duplicating the pass (in-flight dedup; resolves in step())
+            job.phase = "warm_wait"
+        else:
+            job.phase = "sub_automl"
+        return True
+
+    def _family_leader(self, job: SubStratJob) -> Optional[SubStratJob]:
+        """An active job on the same cache key whose sub-AutoML pass will
+        publish the winner family this job could warm-start from."""
+        for other in self.jobs.values():
+            if (other is not job and other.active
+                    and other.cache_key == job.cache_key
+                    and other.phase in ("dst", "sub_automl")):
+                return other
+        return None
+
+    def _advance_waiters(self) -> bool:
+        """Resolve warm-wait jobs: warm-start once the family is published,
+        or fall back to running the sub pass if every leader is gone."""
+        worked = False
+        for job in self.pending():
+            if job.phase != "warm_wait":
+                continue
+            entry = (self.cache.peek(job.cache_key)
+                     if job.cache_key is not None else None)
+            if entry is not None and entry.winner_family:
+                job.warm_family = entry.winner_family
+                job.phase = "fine_tune"
+                worked = True
+            elif self._family_leader(job) is None:
+                job.phase = "sub_automl"   # leader failed/evicted: run it
+                worked = True
+        return worked
+
+    def _dst(self, job: SubStratJob) -> None:
+        # re-probe before searching: a same-fingerprint job earlier in the
+        # queue may have inserted the entry since this job's admission probe
+        # (concurrent duplicate submissions coalesce onto one Gen-DST run);
+        # peek first so an absent entry doesn't count a second miss
+        if (job.cache_key is not None
+                and self.cache.peek(job.cache_key) is not None
+                and self._try_cache_hit(job)):
+            return
+        t0 = time.perf_counter()
+        job.row_idx, job.col_mask, job.dst_fitness = phase_dst(
+            job.key, job.coded, job.config, job.dst_fn)
+        job.col_idx = dst_feature_columns(job.col_mask, job.coded.target_col)
+        job.times["gen_dst_s"] = time.perf_counter() - t0
+        if job.cache_key is not None:
+            self.cache.put(job.cache_key, DSTCacheEntry(
+                row_idx=job.row_idx, col_mask=job.col_mask,
+                fitness=job.dst_fitness))
+        job.phase = "sub_automl"
+
+    def _ensure_search(self, job: SubStratJob) -> None:
+        if job.search is not None:
+            return
+        t0 = time.perf_counter()
+        if job.phase == "sub_automl":
+            X_sub, y_sub = build_subset(job.X, job.y, job.row_idx, job.col_idx,
+                                        job.key)
+            job.y_sub = y_sub
+            job.search = search_init(
+                X_sub, y_sub, config=job.config.resolved_sub_automl())
+        else:   # fine_tune: restricted to M''s (or the cache-known) family
+            family = job.warm_family or job.intermediate.spec.family
+            job.search = search_init(
+                job.X, job.y, config=job.config.resolved_ft_automl(),
+                restrict_family=family)
+        key = _PHASE_TIME_KEY[job.phase]
+        job.times[key] = job.times.get(key, 0.0) + (time.perf_counter() - t0)
+
+    def _finish_search(self, job: SubStratJob) -> None:
+        if job.phase == "sub_automl":
+            job.intermediate = search_result(job.search)
+            job.search = None
+            if job.cache_key is not None:
+                self.cache.note_winner(job.cache_key,
+                                       job.intermediate.spec.family)
+            if job.config.fine_tune:
+                job.phase = "fine_tune"
+                return
+            final = job.intermediate
+            if job.X_test is not None:
+                final = nf_test_eval(job.intermediate, job.y_sub, job.col_idx,
+                                     job.X_test, job.y_test)
+            job.final = final
+        else:
+            job.final = search_result(job.search, job.X_test, job.y_test)
+            job.search = None
+        self._complete(job)
+
+    def _complete(self, job: SubStratJob) -> None:
+        job.result = SubStratResult(
+            final=job.final,
+            # warm-started jobs skip the sub pass: intermediate is final
+            intermediate=(job.intermediate if job.intermediate is not None
+                          else job.final),
+            row_idx=job.row_idx,
+            col_idx=job.col_idx,
+            dst_fitness=job.dst_fitness,
+            times=dict(job.times),
+            total_time_s=job.cost_s,
+        )
+        job.phase = "done"
+        self._release_data(job)
+
+    def _fail(self, job: SubStratJob, error: BaseException) -> None:
+        job.error, job.phase = error, "failed"
+        self._release_data(job)
+
+    @staticmethod
+    def _release_data(job: SubStratJob) -> None:
+        """Drop the finished job's dataset references: the job table is
+        long-lived (poll/result/accounting) but must not pin every tenant's
+        data in memory for the server's lifetime."""
+        job.X = job.y = job.X_test = job.y_test = None
+        job.coded = job.y_sub = job.search = None
+
+    # -- rung dispatch: merged where compatible -----------------------------
+
+    def _merge_key(self, job: SubStratJob):
+        """Hashable compatibility class of a job's current rung, or None if
+        the job must run solo (loop backend, or mid-rung time budget)."""
+        st = job.search
+        cfg = st.config
+        if cfg.backend != "batched" or cfg.time_budget_s is not None:
+            return None
+        ctx = st.ctx
+        return (ctx["X_tr"].shape, ctx["X_val"].shape, ctx["n_classes"],
+                st.rung_i, int(cfg.rungs[st.rung_i]))
+
+    def _dispatch_rungs(self, ready: List[SubStratJob]) -> None:
+        from ..automl.batched import eval_rung_cohorts
+
+        groups: Dict[object, List[SubStratJob]] = {}
+        solo: List[SubStratJob] = []
+        for job in ready:
+            mkey = self._merge_key(job)
+            if mkey is None:
+                solo.append(job)
+            else:
+                groups.setdefault(mkey, []).append(job)
+        merged = []
+        for group in groups.values():
+            if len(group) > 1:
+                merged.append(group)
+            else:
+                solo.append(group[0])   # a merge group of one runs solo
+
+        for job in solo:
+            t0 = time.perf_counter()
+            try:
+                search_eval_rung(job.search)
+            except Exception as e:   # noqa: BLE001 — isolate job failures
+                self._fail(job, e)
+                continue
+            self.solo_rungs += 1
+            key = _PHASE_TIME_KEY[job.phase]
+            job.times[key] = job.times.get(key, 0.0) + (time.perf_counter() - t0)
+
+        for group in merged:
+            cohorts = [search_cohort(j.search) for j in group]
+            rung_i = group[0].search.rung_i
+            epochs = cohorts[0][2]
+            collect = any(c[3] for c in cohorts)
+            t0 = time.perf_counter()
+            try:
+                outs = eval_rung_cohorts(
+                    [(c[0], c[1], j.search.ctx) for c, j in zip(cohorts, group)],
+                    rung_i, epochs, collect)
+            except Exception as e:   # noqa: BLE001
+                for job in group:
+                    self._fail(job, e)
+                continue
+            # the merged rung's wall time is shared equally by its jobs
+            share = (time.perf_counter() - t0) / len(group)
+            self.merged_rungs += 1
+            self.merged_jobs += len(group)
+            for job, (scored, positions) in zip(group, outs):
+                search_record(job.search, scored, positions, share)
+                key = _PHASE_TIME_KEY[job.phase]
+                job.times[key] = job.times.get(key, 0.0) + share
+
+    # -- the cooperative loop ----------------------------------------------
+
+    def step(self) -> bool:
+        """Advance every active job one phase unit.  Returns True iff any
+        work was done (False means nothing is pending)."""
+        worked = False
+        for job in sorted(self.pending(), key=lambda j: j.job_id):
+            try:
+                if job.phase == "factorize":
+                    self._factorize(job)
+                    worked = True
+                elif job.phase == "dst":
+                    self._dst(job)
+                    worked = True
+            except Exception as e:   # noqa: BLE001 — isolate job failures
+                self._fail(job, e)
+                worked = True
+
+        ready: List[SubStratJob] = []
+        for job in sorted(self.pending(), key=lambda j: j.job_id):
+            if job.phase not in ("sub_automl", "fine_tune"):
+                continue
+            try:
+                self._ensure_search(job)
+            except Exception as e:   # noqa: BLE001
+                self._fail(job, e)
+                worked = True
+                continue
+            ready.append(job)
+        if ready:
+            self._dispatch_rungs(ready)
+            worked = True
+            for job in ready:
+                if job.active and job.search is not None and job.search.done:
+                    try:
+                        self._finish_search(job)
+                    except Exception as e:   # noqa: BLE001
+                        self._fail(job, e)
+        # release warm-waiters last, so the step that publishes a winner
+        # family also un-parks the jobs waiting on it
+        if self._advance_waiters():
+            worked = True
+        return worked
+
+    def run(self) -> None:
+        """Drive all pending jobs to completion."""
+        while self.pending():
+            if not self.step():   # pragma: no cover — step always works
+                raise RuntimeError("scheduler stalled with pending jobs")
+
+    def stats(self) -> dict:
+        phases: Dict[str, int] = {}
+        for job in self.jobs.values():
+            phases[job.phase] = phases.get(job.phase, 0) + 1
+        return {
+            "jobs": phases,
+            "cache": self.cache.stats(),
+            "merged_rungs": self.merged_rungs,
+            "merged_jobs": self.merged_jobs,
+            "solo_rungs": self.solo_rungs,
+        }

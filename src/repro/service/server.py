@@ -1,0 +1,156 @@
+"""In-process SubStrat serving front end (DESIGN.md §11.5).
+
+``SubStratServer`` wraps the scheduler with the three-call serving surface —
+``submit`` / ``poll`` / ``result`` — plus per-tenant budget accounting:
+every job's phase costs (measured wall seconds; merged rungs charge each
+participant its equal share) accrue to the submitting tenant, and a tenant
+over its budget gets ``BudgetExceeded`` at the next ``submit``.  Already
+admitted jobs always run to completion — admission control, not preemption.
+
+This is deliberately in-process (one Python heap, one device): the
+cross-process transport is an open ROADMAP item, and nothing here assumes
+more than the scheduler's cooperative ``step()`` loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from ..core.measures import CodedDataset
+from ..core.substrat import SubStratConfig, SubStratResult
+from .cache import DSTCache
+from .scheduler import Scheduler
+
+__all__ = ["BudgetExceeded", "JobStatus", "SubStratServer", "TenantAccount"]
+
+
+class BudgetExceeded(RuntimeError):
+    """Raised by ``submit`` when the tenant has spent its budget."""
+
+
+@dataclasses.dataclass
+class TenantAccount:
+    budget_s: Optional[float] = None   # None = unlimited
+    spent_s: float = 0.0               # accrued phase seconds (all jobs)
+    jobs_submitted: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class JobStatus:
+    """Snapshot returned by ``poll``."""
+    job_id: int
+    tenant: str
+    phase: str                 # scheduler.PHASES: factorize | dst | warm_wait
+                               #   | sub_automl | fine_tune | done | failed
+    cache_hit: bool
+    warm_started: bool         # cache knew the winner family: sub pass skipped
+    times: Dict[str, float]    # per-phase seconds so far
+    error: Optional[str] = None
+
+    @property
+    def done(self) -> bool:
+        return self.phase == "done"
+
+
+class SubStratServer:
+    """submit/poll/result over the multi-tenant scheduler."""
+
+    def __init__(
+        self,
+        *,
+        cache_capacity: int = 128,
+        warm_start: bool = True,
+        tenant_budgets: Optional[Dict[str, float]] = None,
+    ):
+        self.scheduler = Scheduler(DSTCache(cache_capacity),
+                                   warm_start=warm_start)
+        self.tenants: Dict[str, TenantAccount] = {}
+        for tenant, budget in (tenant_budgets or {}).items():
+            self.tenants[tenant] = TenantAccount(budget_s=budget)
+
+    # -- tenancy ------------------------------------------------------------
+
+    def _account(self, tenant: str) -> TenantAccount:
+        if tenant not in self.tenants:
+            self.tenants[tenant] = TenantAccount()
+        return self.tenants[tenant]
+
+    def set_budget(self, tenant: str, budget_s: Optional[float]) -> None:
+        self._account(tenant).budget_s = budget_s
+
+    def _refresh_spend(self) -> None:
+        for account in self.tenants.values():
+            account.spent_s = 0.0
+        for job in self.scheduler.jobs.values():
+            self._account(job.tenant).spent_s += job.cost_s
+
+    # -- serving surface ----------------------------------------------------
+
+    def submit(
+        self,
+        X: np.ndarray,
+        y: np.ndarray,
+        *,
+        tenant: str = "default",
+        key: Optional[jax.Array] = None,
+        config: SubStratConfig = SubStratConfig(),
+        dst_fn: Optional[Callable] = None,
+        coded: Optional[CodedDataset] = None,
+        X_test: Optional[np.ndarray] = None,
+        y_test: Optional[np.ndarray] = None,
+    ) -> int:
+        """Admit a job for ``tenant``; returns a job id for poll/result."""
+        account = self._account(tenant)
+        self._refresh_spend()
+        if account.budget_s is not None and account.spent_s >= account.budget_s:
+            raise BudgetExceeded(
+                f"tenant {tenant!r} spent {account.spent_s:.2f}s of its "
+                f"{account.budget_s:.2f}s budget")
+        account.jobs_submitted += 1
+        return self.scheduler.submit(
+            X, y, tenant=tenant, key=key, config=config, dst_fn=dst_fn,
+            coded=coded, X_test=X_test, y_test=y_test)
+
+    def poll(self, job_id: int) -> JobStatus:
+        job = self.scheduler.jobs[job_id]
+        return JobStatus(
+            job_id=job.job_id,
+            tenant=job.tenant,
+            phase=job.phase,
+            cache_hit=job.cache_hit,
+            warm_started=job.warm_family is not None,
+            times=dict(job.times),
+            error=None if job.error is None else repr(job.error),
+        )
+
+    def run(self) -> None:
+        """Drive every pending job to completion (cooperative loop)."""
+        self.scheduler.run()
+        self._refresh_spend()
+
+    def result(self, job_id: int) -> SubStratResult:
+        """Block (cooperatively) until ``job_id`` finishes; return its result.
+
+        Other pending jobs advance too — the scheduler has no way to run one
+        job's rung without stepping the queue, and stepping the queue is the
+        point (merged rungs)."""
+        job = self.scheduler.jobs[job_id]
+        while job.active:
+            self.scheduler.step()
+        self._refresh_spend()
+        if job.phase == "failed":
+            raise RuntimeError(f"job {job_id} failed") from job.error
+        return job.result
+
+    def stats(self) -> dict:
+        self._refresh_spend()
+        out = self.scheduler.stats()
+        out["tenants"] = {
+            tenant: {"spent_s": acc.spent_s, "budget_s": acc.budget_s,
+                     "jobs_submitted": acc.jobs_submitted}
+            for tenant, acc in self.tenants.items()
+        }
+        return out

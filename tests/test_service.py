@@ -1,0 +1,265 @@
+"""Service layer (DESIGN.md §11): fingerprinting, the LRU DST cache, the
+phase scheduler with cross-job rung merging, and the serving front end.
+
+The headline assertions are the PR's acceptance criteria: merged cross-job
+execution is parity-exact with per-job sequential ``substrat()`` (same
+winner spec, trial accuracies within 1e-6), and a repeat submission's DST
+phase is a cache lookup (>= 90% of the Gen-DST time skipped)."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.automl.engine import AutoMLConfig
+from repro.core.gen_dst import GenDSTConfig
+from repro.core.measures import factorize
+from repro.core.substrat import SubStratConfig, substrat
+from repro.service import (
+    BudgetExceeded, DSTCache, DSTCacheEntry, SubStratServer,
+    dataset_fingerprint,
+)
+from repro.service.cache import dst_cache_key
+
+
+def _make(seed, N=700, d=8):
+    r = np.random.default_rng(seed)
+    y = r.integers(0, 2, N)
+    X = np.column_stack(
+        [y * 1.5 + r.normal(0, 0.8, N) for _ in range(d)]).astype(np.float32)
+    return X, y
+
+
+CFG = SubStratConfig(
+    gen=GenDSTConfig(psi=4, phi=8),
+    sub_automl=AutoMLConfig(n_trials=6, rungs=(15, 40)),
+    ft_automl=AutoMLConfig(n_trials=4, rungs=(40,)),
+)
+
+
+# ---------------------------------------------------------------------------
+# fingerprint
+# ---------------------------------------------------------------------------
+
+
+def test_fingerprint_stable_and_content_sensitive():
+    X, y = _make(0)
+    fp1 = dataset_fingerprint(factorize(X, y))
+    fp2 = dataset_fingerprint(factorize(X.copy(), y.copy()))
+    assert fp1 == fp2                      # content hash, not object identity
+
+    X2 = X.copy()
+    X2[0, 0] += 100.0                      # changes that column's codes
+    assert dataset_fingerprint(factorize(X2, y)) != fp1
+
+    y2 = 1 - y                             # same columns, different target
+    assert dataset_fingerprint(factorize(X, y2)) != fp1
+
+
+# ---------------------------------------------------------------------------
+# LRU DST cache
+# ---------------------------------------------------------------------------
+
+
+def _entry(i):
+    return DSTCacheEntry(row_idx=np.arange(i + 1), col_mask=np.ones(3, bool),
+                         fitness=-float(i))
+
+
+def test_cache_lru_eviction_and_recency():
+    cache = DSTCache(capacity=2)
+    ka, kb, kc = (dst_cache_key(fp, 4, 2, "entropy") for fp in "abc")
+    cache.put(ka, _entry(0))
+    cache.put(kb, _entry(1))
+    assert cache.get(ka) is not None       # refreshes a's recency
+    cache.put(kc, _entry(2))               # evicts b (least recent)
+    assert kb not in cache and ka in cache and kc in cache
+    assert cache.get(kb) is None
+    stats = cache.stats()
+    assert stats["evictions"] == 1 and stats["size"] == 2
+    assert stats["hits"] == 1 and stats["misses"] == 1
+
+
+def test_cache_note_winner():
+    cache = DSTCache(capacity=2)
+    key = dst_cache_key("fp", 4, 2, "entropy")
+    cache.put(key, _entry(0))
+    cache.note_winner(key, "mlp")
+    assert cache.get(key).winner_family == "mlp"
+    cache.note_winner(dst_cache_key("gone", 4, 2, "entropy"), "gnb")  # no-op
+
+
+# ---------------------------------------------------------------------------
+# scheduler: cross-job merge parity + caching  (acceptance criteria)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def datasets():
+    return _make(1), _make(2)
+
+
+@pytest.fixture(scope="module")
+def served(datasets):
+    """Two distinct-dataset jobs run concurrently (merged rungs), plus a
+    repeat of the first (cache path); warm_start off so every job runs the
+    full 3-step pipeline and stays comparable to sequential substrat()."""
+    (XA, yA), (XB, yB) = datasets
+    srv = SubStratServer(warm_start=False)
+    ids = [
+        srv.submit(XA, yA, key=jax.random.key(0), config=CFG),
+        srv.submit(XB, yB, key=jax.random.key(1), config=CFG),
+        srv.submit(XA, yA, key=jax.random.key(2), config=CFG),
+    ]
+    srv.run()
+    return srv, ids
+
+
+def test_jobs_complete_and_rungs_merge(served):
+    srv, ids = served
+    assert all(srv.poll(j).done for j in ids)
+    stats = srv.stats()
+    # concurrent compatible jobs must actually merge, not run solo
+    assert stats["merged_rungs"] >= 1
+    assert stats["merged_jobs"] > stats["merged_rungs"]
+
+
+def test_merged_parity_with_sequential_substrat(served, datasets):
+    """Acceptance: cross-job batched results equal per-job sequential
+    execution — same winner spec, trial accuracies within 1e-6."""
+    srv, ids = served
+    (XA, yA), (XB, yB) = datasets
+    for jid, (X, y), key in ((ids[0], (XA, yA), 0), (ids[1], (XB, yB), 1)):
+        seq = substrat(X, y, key=jax.random.key(key), config=CFG)
+        got = srv.result(jid)
+        assert got.final.spec == seq.final.spec
+        assert got.intermediate.spec == seq.intermediate.spec
+        np.testing.assert_array_equal(got.row_idx, seq.row_idx)
+        np.testing.assert_array_equal(got.col_idx, seq.col_idx)
+        for pass_got, pass_seq in ((got.intermediate, seq.intermediate),
+                                   (got.final, seq.final)):
+            assert [s for s, _ in pass_got.trials] == [s for s, _ in pass_seq.trials]
+            np.testing.assert_allclose([v for _, v in pass_got.trials],
+                                       [v for _, v in pass_seq.trials],
+                                       atol=1e-6)
+
+
+def test_repeat_submission_skips_gen_dst(served):
+    """Acceptance: a cache hit skips >= 90% of the Gen-DST phase time."""
+    srv, ids = served
+    first, repeat = srv.poll(ids[0]), srv.poll(ids[2])
+    assert not first.cache_hit and repeat.cache_hit
+    assert repeat.times["gen_dst_s"] <= 0.1 * first.times["gen_dst_s"]
+    # and the repeat reuses the identical subset
+    np.testing.assert_array_equal(srv.result(ids[2]).row_idx,
+                                  srv.result(ids[0]).row_idx)
+
+
+def test_cache_keyed_by_search_config(datasets):
+    """A subset found by a weaker Gen-DST search must not satisfy a repeat
+    submission that asks for a stronger search."""
+    import dataclasses
+    (XA, yA), _ = datasets
+    srv = SubStratServer()
+    srv.submit(XA, yA, config=CFG)
+    srv.run()
+    stronger = dataclasses.replace(CFG, gen=GenDSTConfig(psi=6, phi=12))
+    b = srv.submit(XA, yA, config=stronger)
+    srv.run()
+    assert not srv.poll(b).cache_hit
+    assert srv.stats()["cache"]["size"] == 2
+
+
+def test_warm_start_skips_sub_automl(datasets):
+    """A repeat arriving after the winner family is known jumps straight to
+    the restricted fine-tune (warm_start is the production default)."""
+    (XA, yA), _ = datasets
+    srv = SubStratServer()
+    first = srv.submit(XA, yA, key=jax.random.key(0), config=CFG)
+    prior = srv.result(first)
+    late = srv.submit(XA, yA, key=jax.random.key(7), config=CFG)
+    res = srv.result(late)
+    status = srv.poll(late)
+    assert status.cache_hit and status.warm_started
+    assert "automl_sub_s" not in status.times
+    assert res.intermediate is res.final
+    assert res.final.spec.family == prior.intermediate.spec.family
+
+
+def test_concurrent_repeats_wait_and_warm_start(datasets):
+    """A concurrent duplicate submission parks in warm_wait instead of
+    duplicating the sub-AutoML pass, then warm-starts off the leader's
+    winner family (in-flight dedup)."""
+    (XA, yA), _ = datasets
+    srv = SubStratServer()
+    a = srv.submit(XA, yA, key=jax.random.key(0), config=CFG)
+    b = srv.submit(XA, yA, key=jax.random.key(1), config=CFG)
+    srv.run()
+    sa, sb = srv.poll(a), srv.poll(b)
+    assert not sa.cache_hit and sb.cache_hit and sb.warm_started
+    assert "automl_sub_s" in sa.times and "automl_sub_s" not in sb.times
+    assert (srv.result(b).final.spec.family
+            == srv.result(a).intermediate.spec.family)
+
+
+def test_loop_backend_jobs_run_solo(datasets):
+    """Jobs the merged dispatch can't take (loop backend) still complete."""
+    (XA, yA), _ = datasets
+    import dataclasses
+    cfg = dataclasses.replace(CFG, automl_backend="loop",
+                              sub_automl=AutoMLConfig(n_trials=4, rungs=(15,)),
+                              ft_automl=AutoMLConfig(n_trials=4, rungs=(15,)))
+    srv = SubStratServer()
+    jid = srv.submit(XA, yA, config=cfg)
+    res = srv.result(jid)
+    assert res.final.val_acc > 0
+    stats = srv.stats()
+    assert stats["solo_rungs"] >= 1 and stats["merged_rungs"] == 0
+
+
+# ---------------------------------------------------------------------------
+# server front end: budgets, failure isolation
+# ---------------------------------------------------------------------------
+
+
+def test_tenant_budget_enforced(datasets):
+    (XA, yA), (XB, yB) = datasets
+    srv = SubStratServer(tenant_budgets={"alice": 1e-6})
+    jid = srv.submit(XA, yA, tenant="alice", config=CFG)   # admitted: no spend yet
+    srv.run()
+    assert srv.poll(jid).done                 # admitted jobs run to completion
+    with pytest.raises(BudgetExceeded):
+        srv.submit(XA, yA, tenant="alice", config=CFG)
+    # other tenants are unaffected
+    jid2 = srv.submit(XB, yB, tenant="bob", config=CFG)
+    assert srv.result(jid2).final is not None
+    spent = srv.stats()["tenants"]["alice"]["spent_s"]
+    assert spent > 1e-6
+
+
+def test_failed_job_is_isolated(datasets):
+    (XA, yA), (XB, yB) = datasets
+
+    def bad_dst(key, coded, n, m):
+        raise RuntimeError("boom")
+
+    srv = SubStratServer()
+    bad = srv.submit(XA, yA, config=CFG, dst_fn=bad_dst)
+    good = srv.submit(XB, yB, config=CFG)
+    srv.run()
+    assert srv.poll(bad).phase == "failed"
+    assert "boom" in srv.poll(bad).error
+    assert srv.poll(good).done
+    with pytest.raises(RuntimeError):
+        srv.result(bad)
+
+
+def test_custom_dst_fn_bypasses_cache(datasets):
+    """dst_fn outputs are not Gen-DST outputs: they must not be cached."""
+    from repro.core.gen_dst import random_dst
+    (XA, yA), _ = datasets
+    srv = SubStratServer()
+    a = srv.submit(XA, yA, config=CFG, dst_fn=random_dst)
+    b = srv.submit(XA, yA, config=CFG, dst_fn=random_dst)
+    srv.run()
+    assert not srv.poll(a).cache_hit and not srv.poll(b).cache_hit
+    assert srv.stats()["cache"]["size"] == 0

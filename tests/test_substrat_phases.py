@@ -1,0 +1,169 @@
+"""SubStrat phase functions: the degenerate-label subset patch, the
+SubStrat-NF test-evaluation path (DST-column-restricted accuracy), and the
+``dst_fn`` baseline-injection path."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.automl.engine import AutoMLConfig, apply_pipeline
+from repro.automl.models import accuracy
+from repro.core.gen_dst import DSTResult, GenDSTConfig
+from repro.core.substrat import (
+    SubStratConfig, build_subset, nf_test_eval, substrat,
+)
+
+SMALL_CFG = SubStratConfig(
+    gen=GenDSTConfig(psi=4, phi=8),
+    sub_automl=AutoMLConfig(n_trials=5, rungs=(15, 40)),
+    ft_automl=AutoMLConfig(n_trials=4, rungs=(40,)),
+)
+
+
+# ---------------------------------------------------------------------------
+# build_subset: degenerate-label patch draws from the missing class(es)
+# ---------------------------------------------------------------------------
+
+
+def _skewed_data(N=500, d=4, minority=3):
+    """Binary labels where class 1 exists only in the last ``minority`` rows,
+    far outside any small fixed-seed draw's likely reach."""
+    rng = np.random.default_rng(0)
+    X = rng.normal(0, 1, (N, d)).astype(np.float32)
+    y = np.zeros(N, np.int64)
+    y[-minority:] = 1
+    return X, y
+
+
+def test_build_subset_patches_missing_class():
+    X, y = _skewed_data()
+    row_idx = np.arange(50)          # all majority-class rows
+    col_idx = np.arange(3)
+    X_sub, y_sub = build_subset(X, y, row_idx, col_idx, jax.random.key(0))
+    # every class of y must be present — drawn explicitly from class rows,
+    # not hoped-for via a fixed random draw (which misses a 3-row minority
+    # with probability ~(1 - 3/500)^64 ≈ 68%)
+    assert set(np.unique(y_sub)) == {0, 1}
+    assert X_sub.shape[1] == 3
+    # patched rows carry the right features for their labels
+    patched = y_sub[len(row_idx):]
+    assert (patched == 1).sum() == 3     # all 3 minority rows drawn
+
+
+def test_build_subset_patch_seeded_from_run_key():
+    X, y = _skewed_data(minority=40)
+    row_idx, col_idx = np.arange(50), np.arange(3)
+    a1 = build_subset(X, y, row_idx, col_idx, jax.random.key(5))
+    a2 = build_subset(X, y, row_idx, col_idx, jax.random.key(5))
+    b = build_subset(X, y, row_idx, col_idx, jax.random.key(6))
+    np.testing.assert_array_equal(a1[1], a2[1])        # deterministic per key
+    np.testing.assert_array_equal(a1[0], a2[0])
+    # a different run key draws a different minority sample (40 choose 32
+    # leaves plenty of room; identical draws would mean the key is ignored)
+    assert not np.array_equal(a1[0], b[0])
+
+
+def test_build_subset_no_patch_when_all_classes_present():
+    X, y = _skewed_data()
+    row_idx = np.concatenate([np.arange(20), [len(y) - 1]])  # incl. a minority row
+    X_sub, y_sub = build_subset(X, y, row_idx, np.arange(2), jax.random.key(0))
+    assert len(y_sub) == len(row_idx)                  # nothing appended
+
+
+def test_build_subset_multiclass_patch():
+    X, y = _skewed_data()
+    y = y.copy()
+    y[-1] = 2                        # classes {0, 1, 2}; rows cover only 0
+    X_sub, y_sub = build_subset(X, y, np.arange(30), np.arange(2),
+                                jax.random.key(1))
+    assert set(np.unique(y_sub)) == {0, 1, 2}
+
+
+# ---------------------------------------------------------------------------
+# SubStrat-NF: DST-column-restricted test accuracy
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def learnable():
+    rng = np.random.default_rng(3)
+    N = 600
+    # non-contiguous label values exercise the class re-encoding
+    y = np.where(rng.uniform(size=N) < 0.5, 2, 9)
+    X = np.column_stack([
+        (y == 9) * 2.0 + rng.normal(0, 0.6, N) for _ in range(6)
+    ]).astype(np.float32)
+    return X[:480], y[:480], X[480:], y[480:]
+
+
+def test_nf_test_eval_matches_manual_restricted_accuracy(learnable):
+    Xtr, ytr, Xte, yte = learnable
+    cfg = dataclasses.replace(SMALL_CFG, fine_tune=False)
+    res = substrat(Xtr, ytr, key=jax.random.key(0), config=cfg,
+                   X_test=Xte, y_test=yte)
+    assert res.final.test_acc is not None
+    # recompute: M' applied to the test data restricted to the DST's columns
+    inter = res.intermediate
+    Xt = apply_pipeline(inter.spec, inter.pre_stats, inter.feat_idx,
+                        np.asarray(Xte, np.float32)[:, res.col_idx])
+    yt = jnp.asarray(np.searchsorted(np.asarray([2, 9]), yte))
+    manual = accuracy(inter.params, Xt, yt, inter.spec.family)
+    assert res.final.test_acc == pytest.approx(float(manual), abs=1e-7)
+    assert res.final.test_acc > 0.6      # the restricted eval is meaningful
+
+
+def test_nf_test_eval_unit(learnable):
+    """nf_test_eval in isolation: re-encodes labels via the subset's class
+    set and restricts columns before applying the pipeline."""
+    Xtr, ytr, Xte, yte = learnable
+    cfg = dataclasses.replace(SMALL_CFG, fine_tune=False)
+    res = substrat(Xtr, ytr, key=jax.random.key(1), config=cfg)
+    y_sub_like = np.asarray([2, 9])      # classes present in any valid subset
+    out = nf_test_eval(res.intermediate, y_sub_like, res.col_idx, Xte, yte)
+    assert out.test_acc is not None and 0.0 <= out.test_acc <= 1.0
+    assert out.spec == res.intermediate.spec     # only test_acc replaced
+
+
+# ---------------------------------------------------------------------------
+# dst_fn baseline injection
+# ---------------------------------------------------------------------------
+
+
+def test_dst_fn_injection_controls_subset(learnable):
+    """A custom dst_fn's rows/columns are used verbatim by the strategy."""
+    Xtr, ytr, Xte, yte = learnable
+    M = Xtr.shape[1] + 1                 # factorize appends the target column
+    fixed_rows = np.arange(40, dtype=np.int32)
+    col_mask = np.zeros(M, bool)
+    col_mask[[0, 2, M - 1]] = True       # two features + the target column
+
+    def fixed_dst(key, coded, n, m):
+        return DSTResult(jnp.asarray(fixed_rows), jnp.asarray(col_mask),
+                         jnp.float32(-0.25), jnp.zeros((0,)), jnp.float32(0.0))
+
+    res = substrat(Xtr, ytr, key=jax.random.key(0), config=SMALL_CFG,
+                   dst_fn=fixed_dst, X_test=Xte, y_test=yte)
+    np.testing.assert_array_equal(res.row_idx, fixed_rows)
+    np.testing.assert_array_equal(res.col_idx, [0, 2])   # target dropped
+    assert res.dst_fitness == pytest.approx(-0.25)
+    assert res.final.test_acc is not None
+
+
+def test_dst_fn_target_only_mask_falls_back(learnable):
+    """A degenerate mask selecting only the target column falls back to one
+    feature column instead of producing an empty subset."""
+    Xtr, ytr, _, _ = learnable
+    M = Xtr.shape[1] + 1
+
+    def target_only(key, coded, n, m):
+        mask = np.zeros(M, bool)
+        mask[M - 1] = True
+        return DSTResult(jnp.arange(30, dtype=jnp.int32), jnp.asarray(mask),
+                         jnp.float32(-1.0), jnp.zeros((0,)), jnp.float32(0.0))
+
+    res = substrat(Xtr, ytr, key=jax.random.key(0), config=SMALL_CFG,
+                   dst_fn=target_only)
+    assert res.col_idx.tolist() == [0]
