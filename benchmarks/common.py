@@ -1,22 +1,25 @@
 """Shared benchmark harness: run Full-AutoML vs SubStrat vs baselines on a
 dataset and report the paper's metrics (time-reduction, relative-accuracy).
+
+Every method is a declarative ``Plan`` (DESIGN.md §12) executed by the one
+shared driver: SubStrat is ``plan("gen_dst")``, the paper baselines are the
+same plan with a different SubsetStrategy, and ASP is the proxy-scorer
+strategy — the harness itself is a thin client of ``plan()``/``execute()``.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, Optional
+from typing import Dict, Optional, Tuple
 
 import jax
-import numpy as np
 
 from repro.automl.engine import AutoMLConfig, automl_fit
-from repro.core.baselines import (
-    ig_km_dst, ig_rand_dst, km_dst, mab_dst, mc_dst,
-)
 from repro.core.gen_dst import GenDSTConfig
 from repro.core.measures import factorize
-from repro.core.substrat import SubStratConfig, substrat
+from repro.core.plan import Plan, execute, plan_from_config
+from repro.core.substrat import SubStratConfig
+from repro.core.strategies import run_strategy
 from repro.data.tabular import DatasetSpec, make_dataset, train_test_split
 
 # quick-mode engine budgets (scaled so compute, not jit, dominates on CPU)
@@ -31,14 +34,27 @@ def substrat_config(**kw) -> SubStratConfig:
     return SubStratConfig(**base)
 
 
-BASELINE_DST_FNS: Dict[str, Callable] = {
-    "MC-100": lambda k, c, n, m: mc_dst(k, c, n, m, budget=100, batch=50),
-    "MC-100K": lambda k, c, n, m: mc_dst(k, c, n, m, budget=4000, batch=200),
-    "MAB": lambda k, c, n, m: mab_dst(k, c, n, m, rounds=200),
-    "KM": km_dst,
-    "IG-Rand": ig_rand_dst,
-    "IG-KM": ig_km_dst,
+# method name -> (strategy, strategy_opts): the subset axis of each plan
+BASELINE_STRATEGIES: Dict[str, Tuple[str, tuple]] = {
+    "MC-100": ("mc", (("budget", 100), ("batch", 50))),
+    "MC-100K": ("mc", (("budget", 4000), ("batch", 200))),
+    "MAB": ("mab", (("rounds", 200),)),
+    "KM": ("km", ()),
+    "IG-Rand": ("ig_rand", ()),
+    "IG-KM": ("ig_km", ()),
+    "ASP": ("asp_proxy", ()),
 }
+
+
+def method_plan(method: str, sub_cfg: SubStratConfig) -> Plan:
+    """The ``Plan`` of one named method under the shared engine budgets."""
+    base = plan_from_config(sub_cfg)
+    if method == "SubStrat":
+        return base
+    if method == "SubStrat-NF":
+        return dataclasses.replace(base, fine_tune=False)
+    strategy, opts = BASELINE_STRATEGIES[method]
+    return dataclasses.replace(base, strategy=strategy, strategy_opts=opts)
 
 
 @dataclasses.dataclass
@@ -73,32 +89,21 @@ def run_dataset(
     sub_cfg = sub_cfg or substrat_config()
     out = []
     methods = methods if methods is not None else (
-        ["SubStrat", "SubStrat-NF"] + list(BASELINE_DST_FNS)
+        ["SubStrat", "SubStrat-NF"] + list(BASELINE_STRATEGIES)
     )
-    # warm up the DST generators once (untimed): jit compilation is a
+    # warm up the subset strategies once (untimed): jit compilation is a
     # one-time per-(shape, config) cost a production deployment amortizes
     # across runs; the paper's sklearn stack has no analogous cost.  The
     # AutoML engine's compiles hit Full-AutoML and SubStrat equally and are
     # left in the timings.
-    from repro.core.gen_dst import gen_dst as _gd
     for method in set(methods):
-        if method in ("SubStrat", "SubStrat-NF"):
-            _gd(jax.random.key(0), coded, sub_cfg.n, sub_cfg.m, sub_cfg.gen)
-        elif method in BASELINE_DST_FNS:
-            BASELINE_DST_FNS[method](jax.random.key(0), coded, None, None)
+        p = method_plan(method, sub_cfg)
+        run_strategy(p.strategy, jax.random.key(0), coded, p.n, p.m,
+                     p.strategy_opts)
     for method in methods:
         key = jax.random.key(seed * 977 + 13)
-        if method == "SubStrat":
-            res = substrat(Xtr, ytr, key=key, config=sub_cfg, coded=coded,
-                           X_test=Xte, y_test=yte)
-        elif method == "SubStrat-NF":
-            cfg_nf = dataclasses.replace(sub_cfg, fine_tune=False)
-            res = substrat(Xtr, ytr, key=key, config=cfg_nf, coded=coded,
-                           X_test=Xte, y_test=yte)
-        else:
-            res = substrat(Xtr, ytr, key=key, config=sub_cfg, coded=coded,
-                           dst_fn=BASELINE_DST_FNS[method],
-                           X_test=Xte, y_test=yte)
+        res = execute(method_plan(method, sub_cfg), Xtr, ytr, key=key,
+                      coded=coded, X_test=Xte, y_test=yte)
         t = res.total_time_s
         acc = res.final.test_acc
         out.append(BenchResult(

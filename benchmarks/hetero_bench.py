@@ -1,0 +1,124 @@
+"""Heterogeneous-merge benchmark (DESIGN.md §12.3–§12.4): throughput of the
+two cross-job merge layers the plan API unlocked.
+
+- **hetero rung merge**: 2–4 concurrent searches on *differently-shaped*
+  data (different ``(N_tr, d, n_classes)`` — no two shapes equal, so
+  pre-§12 none of them could share a dispatch) advanced rung-by-rung merged
+  (``eval_rung_cohorts`` shape-padding path, one fused program per rung)
+  vs sequentially (one ``search_eval_rung`` program per job per rung).
+  The workload is the serving sub-AutoML regime the merge targets:
+  DST-sized data (~100 rows — a sqrt(N) subset of a paper-scale dataset),
+  small per-tenant trial budgets, closely-clustered shapes (the scheduler's
+  ``hetero_pad_limit`` admits exactly this cluster-shaped traffic; widely
+  spread shapes run per-shape instead because padding waste would dominate).
+  Acceptance target (ISSUE 5): >= 1.5x throughput at 4 jobs.
+
+- **batched Gen-DST**: K same-shaped (distinct-content) datasets searched by
+  one vmapped ``gen_dst_batch`` dispatch vs K sequential ``gen_dst`` calls —
+  the scheduler's cache-miss fusion path, bit-identical per search.  On one
+  CPU core this is a wash (the GA is already a single fused scan with no
+  dispatch overhead to amortize; the row records the measured ratio) — it
+  is a device-utilization play: on parallel hardware K small independent
+  searches underfill the device and the vmapped batch fills it.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.automl.engine import (
+    AutoMLConfig, search_eval_rung, search_init, search_record,
+    search_trial_cohort,
+)
+from repro.automl.batched import eval_rung_cohorts
+from repro.core.gen_dst import GenDSTConfig, gen_dst, gen_dst_batch
+from repro.core.measures import factorize
+
+# 4 deliberately different job shapes: rows / features / classes all vary,
+# clustered the way the scheduler's pad-waste guard admits
+_SHAPES = [(100, 8, 2), (105, 8, 3), (110, 8, 2), (95, 9, 2)]
+
+
+def _make_data(seed: int, N: int, d: int, C: int):
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, C, N)
+    X = np.column_stack(
+        [y * 1.2 + rng.normal(0, 0.8, N) for _ in range(d)]).astype(np.float32)
+    return X, y
+
+
+def _measure(fn, reps: int = 5) -> float:
+    fn()                                  # warmup: pay jit compiles
+    return min(fn() for _ in range(reps))
+
+
+def hetero_rows(n_jobs: int = 4, quick_tag: str = "quick"):
+    """Returns ``(name, us, derived)`` rows for the ``hetero_merge`` section."""
+    shapes = _SHAPES[:n_jobs]
+    data = [_make_data(7 + i, *s) for i, s in enumerate(shapes)]
+    cfgs = [AutoMLConfig(n_trials=6, rungs=(20, 60), seed=i)
+            for i in range(n_jobs)]
+
+    def run_sequential():
+        t0 = time.perf_counter()
+        for (X, y), cfg in zip(data, cfgs):
+            st = search_init(X, y, config=cfg)
+            while not st.done:
+                search_eval_rung(st)
+        return time.perf_counter() - t0
+
+    def run_merged():
+        t0 = time.perf_counter()
+        states = [search_init(X, y, config=cfg)
+                  for (X, y), cfg in zip(data, cfgs)]
+        while not all(s.done for s in states):
+            live = [s for s in states if not s.done]
+            outs = eval_rung_cohorts([search_trial_cohort(s) for s in live])
+            for s, (scored, positions) in zip(live, outs):
+                search_record(s, scored, positions, 0.0)
+        return time.perf_counter() - t0
+
+    t_seq = _measure(run_sequential)
+    t_merged = _measure(run_merged)
+    rows = [
+        (f"hetero_sequential_{n_jobs}jobs_{quick_tag}", t_seq * 1e6,
+         f"dispatches_per_rung={n_jobs}"),
+        (f"hetero_merged_{n_jobs}jobs_{quick_tag}", t_merged * 1e6,
+         f"speedup={t_seq / t_merged:.2f}x dispatches_per_rung=1 "
+         f"shapes={'/'.join(str(s) for s in shapes)}"),
+    ]
+
+    # batched Gen-DST: K same-shaped, distinct-content datasets
+    K = 4
+    codeds = [factorize(*_make_data(100 + i, 2_000, 8, 2)) for i in range(K)]
+    keys = [jax.random.key(i) for i in range(K)]
+    cfg = GenDSTConfig(psi=8, phi=24)
+    n, m = 45, 3
+
+    def run_dst_seq():
+        t0 = time.perf_counter()
+        outs = [gen_dst(k, c, n, m, cfg) for k, c in zip(keys, codeds)]
+        jax.block_until_ready([o.row_idx for o in outs])
+        return time.perf_counter() - t0
+
+    def run_dst_batch():
+        t0 = time.perf_counter()
+        outs = gen_dst_batch(keys, codeds, n, m, cfg)
+        jax.block_until_ready([o.row_idx for o in outs])
+        return time.perf_counter() - t0
+
+    t_dseq = _measure(run_dst_seq, reps=3)
+    t_dbatch = _measure(run_dst_batch, reps=3)
+    rows.append((
+        f"gen_dst_batch_{K}jobs_{quick_tag}", t_dbatch * 1e6,
+        f"sequential_us={t_dseq * 1e6:.1f} speedup={t_dseq / t_dbatch:.2f}x "
+        f"(device-utilization play; ~neutral on 1 CPU core)",
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in hetero_rows():
+        print(f"{name},{us:.1f},{derived}")

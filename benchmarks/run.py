@@ -1,14 +1,19 @@
 """Benchmark orchestrator — one section per paper table/figure + kernel
-micro-benches + the service-layer bench + the dry-run roofline table.
+micro-benches + the service-layer / hetero-merge benches + the dry-run
+roofline table.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--json PATH]
+                                            [--compare BASELINE.json]
 
 Prints ``name,us_per_call,derived`` CSV blocks per section.  --full uses the
 paper-scale settings (long); the default quick mode scales datasets down so
 the whole suite finishes on one CPU core.  --json additionally writes every
 section's rows to a machine-readable file so the perf trajectory can be
 tracked across PRs (CI uploads it as ``BENCH_quick.json``) instead of
-scraping CSV from stdout.
+scraping CSV from stdout.  --compare reads a previous run's --json artifact
+and exits non-zero when any section regressed by more than
+--compare-threshold (default 15%) in wall seconds — CI runs it against the
+committed ``benchmarks/BASELINE_quick.json``.
 """
 from __future__ import annotations
 
@@ -28,16 +33,70 @@ def _rowdicts(columns, rows):
     return [dict(zip(columns, row)) for row in rows]
 
 
+def _compare(report: dict, baseline_path: str, threshold: float) -> int:
+    """Compare per-section wall seconds against a previous --json artifact.
+
+    Returns the number of regressed sections (> ``threshold`` slower).
+    Sections missing from either side are reported but never fail — a new
+    section has no baseline, a removed one no measurement."""
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    base_secs = {name: sec["seconds"]
+                 for name, sec in baseline.get("sections", {}).items()
+                 if not sec.get("failed")}
+    print(f"\n### comparison vs {baseline_path} "
+          f"(threshold {threshold:.0%})")
+    print("section,baseline_s,current_s,ratio,verdict")
+    regressions = 0
+    for name, sec in report["sections"].items():
+        if sec["failed"]:
+            continue
+        if name not in base_secs:
+            print(f"{name},-,{sec['seconds']:.3f},-,new (no baseline)")
+            continue
+        base = base_secs.pop(name)
+        cur = sec["seconds"]
+        ratio = cur / max(base, 1e-9)
+        regressed = ratio > 1.0 + threshold
+        regressions += int(regressed)
+        print(f"{name},{base:.3f},{cur:.3f},{ratio:.2f}x,"
+              f"{'REGRESSED' if regressed else 'ok'}")
+    for name in base_secs:
+        print(f"{name},{base_secs[name]:.3f},-,-,missing from this run")
+    return regressions
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--skip", nargs="*", default=[],
                     help="section names to skip (table4 fig2 fig3 fig4 fig5 "
-                         "kernels gen_dst automl service roofline)")
+                         "kernels gen_dst automl service hetero_merge "
+                         "roofline)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write each section's rows to a machine-readable "
                          "JSON file (perf trajectory tracking across PRs)")
+    ap.add_argument("--compare", metavar="BASELINE", default=None,
+                    help="previous --json artifact to compare against; "
+                         "exits 2 when any section regresses by more than "
+                         "--compare-threshold in wall seconds")
+    ap.add_argument("--compare-threshold", type=float, default=0.15,
+                    help="allowed per-section slowdown fraction "
+                         "(default 0.15 = 15%%)")
+    ap.add_argument("--compare-only", metavar="CURRENT", default=None,
+                    help="skip running benchmarks; compare an existing "
+                         "--json artifact against --compare's baseline")
     args = ap.parse_args()
+
+    if args.compare_only:
+        if not args.compare:
+            ap.error("--compare-only requires --compare BASELINE.json")
+        with open(args.compare_only) as f:
+            report = json.load(f)
+        regressions = _compare(report, args.compare, args.compare_threshold)
+        print(f"# {regressions} section regressions "
+              f"(>{args.compare_threshold:.0%} slower)")
+        sys.exit(2 if regressions else 0)
 
     quick = not args.full
     t_start = time.time()
@@ -52,6 +111,8 @@ def main() -> None:
         sections.append(("automl", lambda: _run_automl(quick)))
     if "service" not in args.skip:
         sections.append(("service", lambda: _run_service(quick)))
+    if "hetero_merge" not in args.skip:
+        sections.append(("hetero_merge", lambda: _run_hetero(quick)))
     if "table4" not in args.skip:
         sections.append(("table4", lambda: _run_table4(quick)))
     if "fig2" not in args.skip:
@@ -91,8 +152,15 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump(report, f, indent=2, default=float)
         print(f"# wrote {args.json}")
+    regressions = 0
+    if args.compare:
+        regressions = _compare(report, args.compare, args.compare_threshold)
+        print(f"# {regressions} section regressions "
+              f"(>{args.compare_threshold:.0%} slower)")
     if failures:
         sys.exit(1)
+    if regressions:
+        sys.exit(2)
 
 
 def _run_kernels():
@@ -141,6 +209,17 @@ def _run_service(quick):
         rows = service_rows(n_jobs=8, N=2_000, d=10, quick_tag="2k")
     else:
         rows = service_rows(n_jobs=8, N=10_000, d=14, quick_tag="10k")
+    rows = [(name, round(us, 1), derived) for name, us, derived in rows]
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return _rowdicts(("name", "us", "derived"), rows)
+
+
+def _run_hetero(quick):
+    _section("Heterogeneous merge: shape-padded cross-job rung dispatch + "
+             "batched Gen-DST (name,us,derived)")
+    from .hetero_bench import hetero_rows
+    rows = hetero_rows(n_jobs=4, quick_tag="quick" if quick else "full")
     rows = [(name, round(us, 1), derived) for name, us, derived in rows]
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

@@ -2,12 +2,15 @@
 
     PYTHONPATH=src python examples/quickstart.py [--scale 0.5] [--trials 10]
                                                  [--backend batched|loop]
+                                                 [--strategy gen_dst|mc|...]
 
 Reproduces the paper's headline comparison on one dataset: run the AutoML
-engine on the full data, then run SubStrat (Gen-DST subset -> AutoML ->
-restricted fine-tune) and report time-reduction + relative accuracy.
-``--scale 0.1 --trials 4`` is the CI smoke configuration; ``--backend loop``
-pins the sequential AutoML reference engine (DESIGN.md §10.3).
+engine on the full data, then execute a SubStrat ``Plan`` (subset strategy
+-> AutoML -> restricted fine-tune) and report time-reduction + relative
+accuracy.  ``--scale 0.1 --trials 4`` is the CI smoke configuration;
+``--backend loop`` pins the sequential AutoML reference engine (DESIGN.md
+§10.3); ``--strategy`` swaps the subset finder across the SubsetStrategy
+registry (DESIGN.md §12.1) — the paper's Gen-DST by default.
 """
 import argparse
 import sys
@@ -20,7 +23,8 @@ import jax  # noqa: E402
 
 from repro.automl.engine import AutoMLConfig, automl_fit  # noqa: E402
 from repro.core.gen_dst import GenDSTConfig  # noqa: E402
-from repro.core.substrat import SubStratConfig, substrat  # noqa: E402
+from repro.core.plan import execute, plan  # noqa: E402
+from repro.core.strategies import available_strategies  # noqa: E402
 from repro.data.tabular import PAPER_DATASETS, make_dataset, train_test_split  # noqa: E402
 
 
@@ -32,13 +36,17 @@ def main():
                     help="AutoML trial budget for the full and sub passes")
     ap.add_argument("--backend", default="batched", choices=("batched", "loop"),
                     help="AutoML engine backend (DESIGN.md §10.3)")
+    ap.add_argument("--strategy", default="gen_dst",
+                    choices=available_strategies(),
+                    help="SubsetStrategy registry entry (DESIGN.md §12.1)")
     args = ap.parse_args()
 
     spec = PAPER_DATASETS["D3"]           # car insurance, 10k x 18
     X, y = make_dataset(spec, scale=args.scale)
     Xtr, ytr, Xte, yte = train_test_split(X, y)
     print(f"dataset {spec.name} ({spec.domain}): {Xtr.shape[0]} train rows, "
-          f"{Xtr.shape[1]} columns, engine backend {args.backend}")
+          f"{Xtr.shape[1]} columns, engine backend {args.backend}, "
+          f"subset strategy {args.strategy}")
 
     automl_cfg = AutoMLConfig(n_trials=args.trials, rungs=(60, 200),
                               backend=args.backend)
@@ -48,15 +56,15 @@ def main():
     print(f"\nFull-AutoML : {t_full:6.1f}s  test-acc {full.test_acc:.3f} "
           f"({full.spec.family}, {full.n_trials} trials)")
 
-    res = substrat(
-        Xtr, ytr, key=jax.random.key(0),
-        config=SubStratConfig(
-            gen=GenDSTConfig(psi=10, phi=24),
-            sub_automl=automl_cfg,
-            ft_automl=AutoMLConfig(n_trials=4, rungs=(120,), backend=args.backend),
-        ),
-        X_test=Xte, y_test=yte,
+    opts = {"cfg": GenDSTConfig(psi=10, phi=24)} \
+        if args.strategy in ("gen_dst", "gen_dst_islands") else {}
+    p = plan(
+        args.strategy,
+        sub_automl=automl_cfg,
+        ft_automl=AutoMLConfig(n_trials=4, rungs=(120,), backend=args.backend),
+        **opts,
     )
+    res = execute(p, Xtr, ytr, key=jax.random.key(0), X_test=Xte, y_test=yte)
     print(f"SubStrat    : {res.total_time_s:6.1f}s  test-acc "
           f"{res.final.test_acc:.3f} ({res.final.spec.family})")
     print(f"  subset: {len(res.row_idx)} rows x {len(res.col_idx)}(+target) cols, "

@@ -24,7 +24,7 @@ import jax  # noqa: E402
 
 from repro.automl.engine import AutoMLConfig  # noqa: E402
 from repro.core.gen_dst import GenDSTConfig  # noqa: E402
-from repro.core.substrat import SubStratConfig  # noqa: E402
+from repro.core.plan import plan  # noqa: E402
 from repro.data.tabular import PAPER_DATASETS, make_dataset, train_test_split  # noqa: E402
 from repro.service import BudgetExceeded, SubStratServer  # noqa: E402
 
@@ -46,8 +46,8 @@ def main():
         Xtr, ytr, Xte, yte = train_test_split(X, y)
         datasets.append((name, Xtr, ytr, Xte, yte))
 
-    cfg = SubStratConfig(
-        gen=GenDSTConfig(psi=8, phi=20),
+    p = plan(
+        "gen_dst", cfg=GenDSTConfig(psi=8, phi=20),
         sub_automl=AutoMLConfig(n_trials=args.trials, rungs=(30, 80)),
         ft_automl=AutoMLConfig(n_trials=4, rungs=(80,)),
     )
@@ -57,7 +57,7 @@ def main():
     for i in range(args.jobs):
         name, Xtr, ytr, Xte, yte = datasets[(i // 2) % len(datasets)]
         jid = srv.submit(Xtr, ytr, tenant=("acme" if i % 2 == 0 else "globex"),
-                         key=jax.random.key(i), config=cfg,
+                         key=jax.random.key(i), plan=p,
                          X_test=Xte, y_test=yte)
         ids.append((jid, name))
         print(f"submitted job {jid} ({name}, tenant "
@@ -81,7 +81,8 @@ def main():
     print(f"\ncache: {stats['cache']['hits']} hits / "
           f"{stats['cache']['misses']} misses, {stats['cache']['size']} DSTs")
     print(f"rung dispatches: {stats['merged_rungs']} merged "
-          f"(covering {stats['merged_jobs']} job-rungs), "
+          f"(covering {stats['merged_jobs']} job-rungs, "
+          f"{stats['hetero_rungs']} shape-padded), "
           f"{stats['solo_rungs']} solo")
     for tenant, acc in stats["tenants"].items():
         print(f"tenant {tenant}: {acc['jobs_submitted']} jobs, "
@@ -91,7 +92,7 @@ def main():
     srv.set_budget("acme", 1e-6)
     _, Xtr, ytr, *_ = datasets[0]
     try:
-        srv.submit(Xtr, ytr, tenant="acme", config=cfg)
+        srv.submit(Xtr, ytr, tenant="acme", plan=p)
     except BudgetExceeded as e:
         print(f"\nbudget rejection works: {e}")
 

@@ -54,8 +54,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .engine import _apply_preproc, _fit_preproc, _select_features, _trial_key
-from .models import FAMILIES, adam_train
+from .engine import (
+    TrialCohort, _apply_preproc, _fit_preproc, _select_features, _trial_key,
+)
+from .models import (
+    CLASS_MASK_NEG, FAMILIES, adam_train, masked_accuracy, masked_fit,
+    masked_loss,
+)
 
 __all__ = ["eval_rung_batched", "eval_rung_cohorts"]
 
@@ -101,6 +106,18 @@ def _variant_stack(ctx):
     return ctx["variant_stack"]
 
 
+def _concat_padded(parts, N_to: int, d_to: int):
+    """Trace-level merge of per-job variant stacks into one (ΣV, N, d)
+    tensor, zero-padding each part to the group-maximal shape.  Runs inside
+    the jitted rung program so the padding fuses with the downstream
+    gathers instead of materializing eagerly per rung."""
+    if len(parts) == 1 and parts[0].shape[1] == N_to and parts[0].shape[2] == d_to:
+        return parts[0]
+    return jnp.concatenate([
+        jnp.pad(x, ((0, 0), (0, N_to - x.shape[1]), (0, d_to - x.shape[2])))
+        for x in parts])
+
+
 # ---------------------------------------------------------------------------
 # param padding / unpadding between loop-backend and full-width layouts
 # ---------------------------------------------------------------------------
@@ -114,11 +131,11 @@ def _variant_stack(ctx):
 WIDTH_PAD_MAX_ROWS = 2048
 
 
-def _unpad_linear(params, fidx, hp) -> dict:
-    return {"w": params["w"][np.asarray(fidx)], "b": params["b"]}
+def _unpad_linear(params, fidx, hp, c) -> dict:
+    return {"w": params["w"][np.asarray(fidx)][:, :c], "b": params["b"][:c]}
 
 
-def _unpad_mlp(params, fidx, hp) -> dict:
+def _unpad_mlp(params, fidx, hp, c) -> dict:
     width = int(hp["width"])
     layers, L = params["layers"], len(params["layers"])
     out = []
@@ -127,18 +144,20 @@ def _unpad_mlp(params, fidx, hp) -> dict:
         w = w[np.asarray(fidx)] if i == 0 else w[:width]
         if i < L - 1:            # hidden outputs may be width-padded
             w, b = w[:, :width], b[:width]
+        else:                    # output classes may be class-padded (§12.3)
+            w, b = w[:, :c], b[:c]
         out.append({"w": w, "b": b})
     return {"layers": out}
 
 
-def _unpad_gnb(params, fidx, hp) -> dict:
+def _unpad_gnb(params, fidx, hp, c) -> dict:
     cols = np.asarray(fidx)
-    return {"mean": params["mean"][:, cols], "var": params["var"][:, cols],
-            "prior": params["prior"]}
+    return {"mean": params["mean"][:c, cols], "var": params["var"][:c, cols],
+            "prior": params["prior"][:c]}
 
 
-def _unpad_centroid(params, fidx, hp) -> dict:
-    return {"cent": params["cent"][:, np.asarray(fidx)]}
+def _unpad_centroid(params, fidx, hp, c) -> dict:
+    return {"cent": params["cent"][:c, np.asarray(fidx)]}
 
 
 _UNPAD: Dict[str, Callable] = {
@@ -147,9 +166,9 @@ _UNPAD: Dict[str, Callable] = {
 }
 
 
-def _unpad_trial(family: str, params_b, j: int, fidx, hp):
+def _unpad_trial(family: str, params_b, j: int, fidx, hp, c: int):
     single = jax.tree.map(lambda x: x[j], params_b)
-    return _UNPAD[family](single, fidx, hp)
+    return _UNPAD[family](single, fidx, hp, c)
 
 
 # ---------------------------------------------------------------------------
@@ -162,61 +181,79 @@ def _val_acc(fam, params, X, y):
 
 
 def _train_eval_cohort(fam, params0, Xall, Xall_val, Yall, Yall_val,
-                       vids, yids, hp, c, epochs):
+                       vids, yids, hp, c, epochs, masks=None):
     """Trace-level core: vmapped Adam ``lax.scan`` fused with the
     validation-accuracy eval.  The trajectory is ``models.adam_train`` — the
     same definition the sequential backend runs — with the learning rate and
     regularisation arriving as traced per-trial scalars; each trial gathers
     its data variant from ``Xall`` and its job's labels from the stacked
-    ``(J, N)`` label tensor ``Yall`` on device (single-job runs pass J=1)."""
+    ``(J, N)`` label tensor ``Yall`` on device (single-job runs pass J=1).
+
+    ``masks`` is None on exact-shape dispatches; a heterogeneous-shape merge
+    passes ``(Wtr (J, N), Wval (J, Nval), Cmask (J, c))`` row/class padding
+    masks and the trial trains through the masked loss (DESIGN.md §12.3)."""
 
     def one(p0, vid, yid, hp1):
         X, y = Xall[vid], Yall[yid]
-        grad_fn = jax.grad(lambda p: fam.loss(p, X, y, c, hp1))
+        if masks is None:
+            grad_fn = jax.grad(lambda p: fam.loss(p, X, y, c, hp1))
+        else:
+            w, cm = masks[0][yid], masks[2][yid]
+            grad_fn = jax.grad(
+                lambda p: masked_loss(fam.name, p, X, y, w, cm, c, hp1))
         params = adam_train(grad_fn, p0, hp1["lr"], epochs)
-        return params, _val_acc(fam, params, Xall_val[vid], Yall_val[yid])
+        if masks is None:
+            return params, _val_acc(fam, params, Xall_val[vid], Yall_val[yid])
+        return params, masked_accuracy(
+            fam.name, params, Xall_val[vid], Yall_val[yid],
+            masks[1][yid], masks[2][yid])
 
     return jax.vmap(one)(params0, vids, yids, hp)
 
 
 def _keyless_cohort(family, T, Xall, Xall_val, Yall, Yall_val, vids, yids,
-                    hp, c, epochs):
+                    hp, c, epochs, masks=None):
     """Zero-init families: the init happens inside the traced program."""
     fam = FAMILIES[family]
     p0 = fam.init(None, Xall.shape[2], c, {})
     params0 = jax.tree.map(lambda x: jnp.broadcast_to(x, (T,) + x.shape), p0)
     return _train_eval_cohort(fam, params0, Xall, Xall_val, Yall, Yall_val,
-                              vids, yids, hp, c, epochs)
+                              vids, yids, hp, c, epochs, masks)
 
 
 def _mlp_cohort(seeds, tids, rung_i, fidxs, shapes, depth, wmax, d,
-                Xall, Xall_val, Yall, Yall_val, vids, yids, hp, c, epochs):
+                Xall, Xall_val, Yall, Yall_val, vids, yids, hp, c, epochs,
+                masks=None):
     """MLP sub-batch: loop-identical per-trial init (same
-    ``(seed, trial_id, rung)`` key, actual ``(k, width)`` shapes) scattered
-    to the full-feature / ``wmax``-wide layout, stacked, trained, and
-    evaluated.  ``shapes[i] = (k, width)`` per trial; ``seeds`` is per-trial
-    so merged cohorts derive each trial's key from its own job's seed.
+    ``(seed, trial_id, rung)`` key, actual ``(k, width, c_job)`` shapes)
+    scattered to the full-feature / ``wmax``-wide / ``c``-class layout,
+    stacked, trained, and evaluated.  ``shapes[i] = (k, width, c_i)`` per
+    trial; ``seeds`` is per-trial so merged cohorts derive each trial's key
+    from its own job's seed, and ``c_i`` is the trial's own class count so
+    a heterogeneous merge initializes exactly the solo shapes before
+    class-padding.
 
     Padded rows/columns are zero and stay zero under Adam (zero input
-    columns, ``relu'(0) = 0``), so the active block trains exactly like the
-    sequential path (DESIGN.md §10.4)."""
+    columns, ``relu'(0) = 0``; padded class logits are masked out of the
+    softmax), so the active block trains exactly like the sequential path
+    (DESIGN.md §10.4, §12.3)."""
     fam = FAMILIES["mlp"]
     plist = []
-    for i, (k, width) in enumerate(shapes):
+    for i, (k, width, ci) in enumerate(shapes):
         key = _trial_key(seeds[i], tids[i], rung_i)   # loop-identical derivation
-        p0 = fam.init(key, k, c, {"width": width, "depth": depth})
+        p0 = fam.init(key, k, ci, {"width": width, "depth": depth})
         layers, L = p0["layers"], len(p0["layers"])
         out = []
         for li, lyr in enumerate(layers):
             w, b = lyr["w"], lyr["b"]
-            if k == d and width == wmax:
+            if k == d and width == wmax and ci == c:
                 out.append({"w": w, "b": b})
                 continue
             in_dim = d if li == 0 else wmax
-            out_dim = w.shape[1] if li == L - 1 else wmax
+            out_dim = c if li == L - 1 else wmax
             buf = jnp.zeros((in_dim, out_dim), w.dtype)
             if li == 0:
-                buf = buf.at[fidxs[i][:, None], jnp.arange(width)[None, :]].set(w)
+                buf = buf.at[fidxs[i][:, None], jnp.arange(w.shape[1])[None, :]].set(w)
             else:
                 buf = buf.at[: w.shape[0], : w.shape[1]].set(w)
             bbuf = jnp.zeros((out_dim,), b.dtype).at[: b.shape[0]].set(b)
@@ -224,15 +261,23 @@ def _mlp_cohort(seeds, tids, rung_i, fidxs, shapes, depth, wmax, d,
         plist.append({"layers": out})
     params0 = jax.tree.map(lambda *xs: jnp.stack(xs), *plist)
     return _train_eval_cohort(fam, params0, Xall, Xall_val, Yall, Yall_val,
-                              vids, yids, hp, c, epochs)
+                              vids, yids, hp, c, epochs, masks)
 
 
-def _closed_cohort(family, Xall, Xall_val, Yall, Yall_val, vids, yids, hp, c):
+def _closed_cohort(family, Xall, Xall_val, Yall, Yall_val, vids, yids, hp, c,
+                   masks=None):
     fam = FAMILIES[family]
 
     def one(vid, yid, hp1):
-        params = fam.fit_closed(None, Xall[vid], Yall[yid], c, hp1)
-        return params, _val_acc(fam, params, Xall_val[vid], Yall_val[yid])
+        X, y = Xall[vid], Yall[yid]
+        if masks is None:
+            params = fam.fit_closed(None, X, y, c, hp1)
+            return params, _val_acc(fam, params, Xall_val[vid], Yall_val[yid])
+        w, cm = masks[0][yid], masks[2][yid]
+        params = masked_fit(family, X, y, w, cm, c, hp1)
+        return params, masked_accuracy(
+            family, params, Xall_val[vid], Yall_val[yid],
+            masks[1][yid], cm)
 
     return jax.vmap(one)(vids, yids, hp)
 
@@ -244,34 +289,44 @@ class _GroupDesc(NamedTuple):
     T: int
     depth: int = 0
     wmax: int = 0
-    shapes: tuple = ()   # mlp: ((k, width), ...) per trial
+    shapes: tuple = ()   # mlp: ((k, width, c_trial), ...) per trial
 
 
-def _run_group(desc, gin, rung_i, Xall, Xall_val, Yall, Yall_val, c, d, epochs):
+def _run_group(desc, gin, rung_i, Xall, Xall_val, Yall, Yall_val, c, d,
+               epochs, masks=None):
     """Trace-level dispatch of one sub-batch; shared by the fused-rung and
     per-group (budget) paths, so both run identical math."""
     if desc.kind == "closed":
         return _closed_cohort(desc.family, Xall, Xall_val, Yall, Yall_val,
-                              gin["vids"], gin["yids"], gin["hp"], c)
+                              gin["vids"], gin["yids"], gin["hp"], c, masks)
     if desc.kind == "keyless":
         return _keyless_cohort(desc.family, desc.T, Xall, Xall_val, Yall,
                                Yall_val, gin["vids"], gin["yids"], gin["hp"],
-                               c, epochs)
+                               c, epochs, masks)
     return _mlp_cohort(gin["seeds"], gin["tids"], rung_i, gin["fidxs"],
                        desc.shapes, desc.depth, desc.wmax, d, Xall, Xall_val,
                        Yall, Yall_val, gin["vids"], gin["yids"], gin["hp"],
-                       c, epochs)
+                       c, epochs, masks)
 
 
 @functools.partial(jax.jit, static_argnames=("descs", "c", "d", "epochs"))
-def _eval_rung_fused(rung_i, ginputs, Xall, Xall_val, Yall, Yall_val,
-                     *, descs, c: int, d: int, epochs: int):
+def _eval_rung_fused(rung_i, ginputs, Xparts, Xval_parts, Yall, Yall_val,
+                     masks, *, descs, c: int, d: int, epochs: int):
     """One dispatch for the whole rung: every family sub-batch trains and
     evaluates inside a single jitted program (used when no wall-clock budget
     needs mid-rung cutoffs).  With merged cohorts the sub-batches span jobs,
-    so this is also one dispatch for the whole *job group*."""
+    so this is also one dispatch for the whole *job group*.
+
+    ``Xparts``/``Xval_parts`` are tuples of per-job variant stacks, merged
+    (and, when job shapes differ, zero-padded to the ``Yall`` row count /
+    static ``d``) at trace level; ``masks`` is None for exact-shape
+    dispatches, or the (Wtr, Wval, Cmask) padding tensors of a
+    heterogeneous-shape merge (DESIGN.md §12.3)."""
+    Xall = _concat_padded(Xparts, Yall.shape[1], d)
+    Xall_val = _concat_padded(Xval_parts, Yall_val.shape[1], d)
     return tuple(
-        _run_group(desc, gin, rung_i, Xall, Xall_val, Yall, Yall_val, c, d, epochs)
+        _run_group(desc, gin, rung_i, Xall, Xall_val, Yall, Yall_val, c, d,
+                   epochs, masks)
         for desc, gin in zip(descs, ginputs))
 
 
@@ -280,7 +335,8 @@ def _eval_group(rung_i, gin, Xall, Xall_val, Yall, Yall_val,
                 *, desc, c: int, d: int, epochs: int):
     """Single sub-batch dispatch — the budget path, so the engine can check
     the wall clock between sub-batches."""
-    return _run_group(desc, gin, rung_i, Xall, Xall_val, Yall, Yall_val, c, d, epochs)
+    return _run_group(desc, gin, rung_i, Xall, Xall_val, Yall, Yall_val, c, d,
+                      epochs)
 
 
 # ---------------------------------------------------------------------------
@@ -296,6 +352,7 @@ class _TaggedTrial(NamedTuple):
     tid: int         # trial id (PRNG key derivation)
     seed: int        # its job's AutoMLConfig.seed
     vid: int         # index into the merged variant stack
+    c: int           # its job's class count (class-padding axis, §12.3)
 
 
 def _group_subbatches(trials: List[_TaggedTrial], pad_widths: bool, variants):
@@ -333,13 +390,15 @@ def _group_subbatches(trials: List[_TaggedTrial], pad_widths: bool, variants):
             hps = [dict(trials[i].spec.hp) for i in idxs]
             fidxs = tuple(np.asarray(variants[trials[i].vid]["fidx"])
                           for i in idxs)
-            shapes = tuple((len(f), int(h["width"])) for f, h in zip(fidxs, hps))
+            shapes = tuple((len(f), int(h["width"]), trials[i].c)
+                           for f, h, i in zip(fidxs, hps, idxs))
             gin["tids"] = np.asarray([trials[i].tid for i in idxs], np.int32)
             gin["seeds"] = np.asarray([trials[i].seed for i in idxs], np.int32)
             gin["fidxs"] = fidxs
             desc = _GroupDesc("mlp", family, len(idxs),
                               depth=int(hps[0]["depth"]),
-                              wmax=max(w for (_k, w) in shapes), shapes=shapes)
+                              wmax=max(w for (_k, w, _c) in shapes),
+                              shapes=shapes)
         subbatches.append((idxs, desc, gin))
     return subbatches
 
@@ -359,7 +418,7 @@ def _unpack_results(evaluated, trials, variants, collect_params):
                 # (the engine materializes callables on access)
                 params = functools.partial(
                     _unpad_trial, family, params_b, j, var["fidx"],
-                    dict(trials[t_i].spec.hp))
+                    dict(trials[t_i].spec.hp), trials[t_i].c)
             else:
                 params = None
             results[t_i] = (float(all_vaccs[i]), params, var["fidx"], var["stats"])
@@ -385,7 +444,7 @@ def eval_rung_batched(cohort, tids, rung_i: int, epochs: int, ctx,
 
     trials = [
         _TaggedTrial(0, pos, spec, int(tids[pos]), int(ctx["seed"]),
-                     _variant(ctx, spec.preproc, spec.feature_frac))
+                     _variant(ctx, spec.preproc, spec.feature_frac), c)
         for pos, spec in enumerate(cohort)
     ]
     Xall_tr, Xall_val = _variant_stack(ctx)
@@ -408,7 +467,9 @@ def eval_rung_batched(cohort, tids, rung_i: int, epochs: int, ctx,
     else:
         # the whole rung is one jitted program
         outs = _eval_rung_fused(rung_i,
-                                tuple(gin for (_i, _d, gin) in subbatches), *common,
+                                tuple(gin for (_i, _d, gin) in subbatches),
+                                (Xall_tr,), (Xall_val,),
+                                ctx["y_tr_j"][None], ctx["y_val_j"][None], None,
                                 descs=tuple(d_ for (_i, d_, _g) in subbatches),
                                 c=c, d=d, epochs=epochs)
         evaluated = [(idxs, vaccs, desc.family, params_b)
@@ -422,59 +483,100 @@ def eval_rung_batched(cohort, tids, rung_i: int, epochs: int, ctx,
     return scored, eval_pos
 
 
-def eval_rung_cohorts(jobs, rung_i: int, epochs: int,
-                      collect_params: bool = True) -> List[Tuple[list, list]]:
+def eval_rung_cohorts(cohorts: List[TrialCohort],
+                      collect_params=None) -> List[Tuple[list, list]]:
     """Cross-job rung merge: one fused dispatch for many jobs' cohorts.
 
-    ``jobs`` is a list of ``(cohort, tids, ctx)`` triples whose evaluation
-    contexts are shape-compatible — same ``(N_tr, d)`` / ``(N_val, d)`` data
-    shapes and class count — and that sit at the same ``(rung_i, epochs)``.
-    Per-trial math is exactly the single-job batched path: every trial is
-    tagged with its job slot, gathers its own job's data variant and label
-    vector on device, and MLP trials derive init keys from their own job's
-    ``(seed, trial_id, rung)``, so merging changes dispatch granularity, not
-    any trained trajectory (DESIGN.md §11.4).  Returns per-job
+    ``cohorts`` is a list of ``TrialCohort``s (``engine.
+    search_trial_cohort``) sitting at the same ``(rung_i, epochs)``.  Every
+    trial is tagged with its job slot, gathers its own job's data variant
+    and label vector on device, and MLP trials derive init keys from their
+    own job's ``(seed, trial_id, rung)``.  Returns per-job
     ``(scored, positions)`` pairs in input order.
 
+    Two merge regimes (DESIGN.md §12.3):
+
+    - **Exact** — all cohorts share ``(N_tr, N_val, d, n_classes)``: merging
+      changes dispatch granularity only; per-trial math is bit-identical to
+      single-job execution (the §11.4 parity argument).
+    - **Padded** — shapes differ: every job's data variants are zero-padded
+      to the group-maximal ``(N_max, d_max)``, labels to ``(J, N_max)``, and
+      trials train through the row/class-masked losses
+      (``models.masked_loss``), in which padded rows carry zero weight and
+      padded class logits are additively masked out of softmax/hinge/argmax.
+      Padding is inert up to floating-point reduction order, so results
+      match solo execution to ~1e-6 rather than bit-exactly.
+
+    ``collect_params=None`` collects params iff any cohort asks for them.
     No mid-rung time-budget support: the scheduler only merges jobs without
     ``time_budget_s`` (budgeted jobs run solo via ``eval_rung_batched``).
     """
-    ctx0 = jobs[0][2]
-    d, c = ctx0["X_tr"].shape[1], ctx0["n_classes"]
-    for (_cohort, _tids, ctx) in jobs[1:]:
-        if (ctx["X_tr"].shape != ctx0["X_tr"].shape
-                or ctx["X_val"].shape != ctx0["X_val"].shape
-                or ctx["n_classes"] != c):
-            raise ValueError("eval_rung_cohorts: incompatible job shapes")
-    pad_widths = ctx0["X_tr"].shape[0] <= WIDTH_PAD_MAX_ROWS
+    if collect_params is None:
+        collect_params = any(tc.collect for tc in cohorts)
+    rung_i, epochs = cohorts[0].rung_i, cohorts[0].epochs
+    for tc in cohorts[1:]:
+        if tc.rung_i != rung_i or tc.epochs != epochs:
+            raise ValueError("eval_rung_cohorts: cohorts must share "
+                             "(rung_i, epochs)")
+    shapes = [tc.shape for tc in cohorts]
+    hetero = len(set(shapes)) > 1
+    N_max = max(s[0] for s in shapes)
+    Nval_max = max(s[1] for s in shapes)
+    d = max(s[2] for s in shapes)
+    c = max(s[3] for s in shapes)
+    pad_widths = N_max <= WIDTH_PAD_MAX_ROWS
 
     # register every trial's variant in its own job's cache first (caches
     # persist across rungs), then offset local variant ids into one merged
     # stack: merged vid = job's offset + local vid
     local = []
-    for slot, (cohort, tids, ctx) in enumerate(jobs):
-        for pos, spec in enumerate(cohort):
-            lvid = _variant(ctx, spec.preproc, spec.feature_frac)
-            local.append((slot, pos, spec, int(tids[pos]), int(ctx["seed"]), lvid))
+    for slot, tc in enumerate(cohorts):
+        for pos, spec in enumerate(tc.specs):
+            lvid = _variant(tc.ctx, spec.preproc, spec.feature_frac)
+            local.append((slot, pos, spec, int(tc.tids[pos]),
+                          int(tc.ctx["seed"]), lvid))
     offsets = np.concatenate([[0], np.cumsum(
-        [len(ctx["variant_cache"]) for (_c2, _t2, ctx) in jobs])])
-    trials = [_TaggedTrial(slot, pos, spec, tid, seed, int(offsets[slot]) + lvid)
+        [len(tc.ctx["variant_cache"]) for tc in cohorts])])
+    trials = [_TaggedTrial(slot, pos, spec, tid, seed,
+                           int(offsets[slot]) + lvid,
+                           int(cohorts[slot].ctx["n_classes"]))
               for (slot, pos, spec, tid, seed, lvid) in local]
 
-    stacks = [_variant_stack(ctx) for (_c2, _t2, ctx) in jobs]
-    Xall_tr = jnp.concatenate([s[0] for s in stacks])
-    Xall_val = jnp.concatenate([s[1] for s in stacks])
-    Yall_tr = jnp.stack([ctx["y_tr_j"] for (_c2, _t2, ctx) in jobs])
-    Yall_val = jnp.stack([ctx["y_val_j"] for (_c2, _t2, ctx) in jobs])
+    stacks = [_variant_stack(tc.ctx) for tc in cohorts]
+    if hetero:
+        # per-job stacks go into the fused program unpadded — the trace
+        # zero-pads them to the group-maximal shape (``_concat_padded``);
+        # labels/masks are host numpy, transferred once inside the jit call.
+        # The masks make the padding exactly inert (see module docstring).
+        Yall_tr = np.stack([
+            np.pad(tc.ctx["y_tr"], (0, N_max - tc.ctx["y_tr"].shape[0]))
+            for tc in cohorts])
+        Yall_val = np.stack([
+            np.pad(tc.ctx["y_val"], (0, Nval_max - tc.ctx["y_val"].shape[0]))
+            for tc in cohorts])
+        masks = (
+            np.stack([(np.arange(N_max) < s[0]).astype(np.float32)
+                      for s in shapes]),
+            np.stack([(np.arange(Nval_max) < s[1]).astype(np.float32)
+                      for s in shapes]),
+            np.stack([np.where(np.arange(c) < s[3], 0.0, CLASS_MASK_NEG)
+                      .astype(np.float32) for s in shapes]),
+        )
+    else:
+        Yall_tr = jnp.stack([tc.ctx["y_tr_j"] for tc in cohorts])
+        Yall_val = jnp.stack([tc.ctx["y_val_j"] for tc in cohorts])
+        masks = None
     variants = {}
-    for slot, (_c2, _t2, ctx) in enumerate(jobs):
-        for v in ctx["variant_cache"].values():
+    for slot, tc in enumerate(cohorts):
+        for v in tc.ctx["variant_cache"].values():
             variants[int(offsets[slot]) + v["id"]] = v
 
     subbatches = _group_subbatches(trials, pad_widths, variants)
     outs = _eval_rung_fused(rung_i,
                             tuple(gin for (_i, _d, gin) in subbatches),
-                            Xall_tr, Xall_val, Yall_tr, Yall_val,
+                            tuple(s[0] for s in stacks),
+                            tuple(s[1] for s in stacks),
+                            Yall_tr, Yall_val, masks,
                             descs=tuple(d_ for (_i, d_, _g) in subbatches),
                             c=c, d=d, epochs=epochs)
     evaluated = [(idxs, vaccs, desc.family, params_b)
@@ -483,8 +585,8 @@ def eval_rung_cohorts(jobs, rung_i: int, epochs: int,
     results = _unpack_results(evaluated, trials, variants, collect_params)
 
     per_job: List[Tuple[list, list]] = []
-    for slot, (cohort, _tids, _ctx) in enumerate(jobs):
+    for slot, tc in enumerate(cohorts):
         idxs = [i for i in sorted(results) if trials[i].job == slot]
-        scored = [(cohort[trials[i].pos],) + results[i] for i in idxs]
+        scored = [(tc.specs[trials[i].pos],) + results[i] for i in idxs]
         per_job.append((scored, [trials[i].pos for i in idxs]))
     return per_job

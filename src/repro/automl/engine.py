@@ -30,7 +30,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -42,6 +42,8 @@ __all__ = [
     "AutoMLConfig", "AutoMLResult", "automl_fit", "PipelineSpec",
     "apply_pipeline", "sh_promote", "SearchState", "search_init",
     "search_cohort", "search_record", "search_result", "search_eval_rung",
+    "TrialCohort", "search_trial_cohort", "register_backend", "get_backend",
+    "available_backends", "BACKENDS",
 ]
 
 # preprocessor and feature-fraction axes of the pipeline search space
@@ -199,6 +201,56 @@ def _eval_rung_loop(cohort, tids, rung_i, epochs, ctx, out_of_budget,
     return scored, list(range(len(scored)))
 
 
+# ---------------------------------------------------------------------------
+# SearchBackend registry: "how one rung of trials is evaluated"
+# ---------------------------------------------------------------------------
+
+# A backend is a rung evaluator:
+#   (cohort, tids, rung_i, epochs, ctx, out_of_budget, collect_params)
+#     -> (scored, positions)
+# where ``scored[i]`` is the loop-backend tuple
+# ``(spec, val_acc, params, feat_idx, pre_stats)`` and ``positions[i]`` its
+# index into ``cohort``.  ``AutoMLConfig.backend`` and Plan backends resolve
+# through this registry, so third parties can plug in their own evaluator
+# (distributed, quantized, ...) without touching the engine (DESIGN.md §12.2).
+BACKENDS: Dict[str, Any] = {}
+
+
+def register_backend(name: str, eval_rung, *, overwrite: bool = False):
+    """Register a SearchBackend rung evaluator under ``name``."""
+    if not overwrite and name in BACKENDS:
+        raise ValueError(f"backend {name!r} already registered "
+                         f"(pass overwrite=True to replace)")
+    BACKENDS[name] = eval_rung
+    return eval_rung
+
+
+def available_backends():
+    return tuple(sorted(BACKENDS))
+
+
+def get_backend(name: str):
+    """Look up a registered backend; unknown names list what exists."""
+    try:
+        return BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown AutoML backend {name!r}; available backends: "
+            f"{', '.join(available_backends())}") from None
+
+
+def _eval_rung_batched_lazy(cohort, tids, rung_i, epochs, ctx, out_of_budget,
+                            collect_params=True):
+    # deferred import: batched.py imports engine helpers (no cycle at load)
+    from .batched import eval_rung_batched
+    return eval_rung_batched(cohort, tids, rung_i, epochs, ctx, out_of_budget,
+                             collect_params)
+
+
+register_backend("loop", _eval_rung_loop)
+register_backend("batched", _eval_rung_batched_lazy)
+
+
 @dataclasses.dataclass
 class SearchState:
     """Resumable state of one successive-halving search (DESIGN.md §11.3).
@@ -242,8 +294,7 @@ def search_init(
     restrict_family: Optional[str] = None,
 ) -> SearchState:
     """Build the evaluation context and sample the initial population."""
-    if config.backend not in ("batched", "loop"):
-        raise ValueError(f"unknown AutoML backend {config.backend!r}")
+    get_backend(config.backend)   # unknown names raise, listing the registry
     t_start = time.perf_counter()
     X = np.asarray(X, dtype=np.float32)
     y = np.asarray(y)
@@ -288,6 +339,34 @@ def search_cohort(state: SearchState):
     collect = (state.rung_i == len(config.rungs) - 1
                or config.time_budget_s is not None)
     return cohort, list(state.alive_ids), int(config.rungs[state.rung_i]), collect
+
+
+class TrialCohort(NamedTuple):
+    """One job's current rung as a uniform, mergeable unit of trial work.
+
+    Every search emits ``TrialCohort``s regardless of which strategy found
+    its subset or which backend evaluates it — this is the currency the
+    scheduler's cross-job merge layers trade in (``batched.
+    eval_rung_cohorts``): same-shaped cohorts fuse exactly, differently-
+    shaped ones fuse through maximal-shape padding (DESIGN.md §12.3)."""
+    specs: list            # PipelineSpec per live trial
+    tids: list             # trial ids (PRNG key derivation)
+    rung_i: int
+    epochs: int
+    collect: bool          # params wanted (final rung / budget active)
+    ctx: dict              # the SearchState evaluation context
+
+    @property
+    def shape(self):
+        """(N_tr, N_val, d, n_classes) — the merge-compatibility axes."""
+        return (self.ctx["X_tr"].shape[0], self.ctx["X_val"].shape[0],
+                self.ctx["X_tr"].shape[1], self.ctx["n_classes"])
+
+
+def search_trial_cohort(state: SearchState) -> TrialCohort:
+    """The current rung of ``state`` as a ``TrialCohort``."""
+    cohort, tids, epochs, collect = search_cohort(state)
+    return TrialCohort(cohort, tids, state.rung_i, epochs, collect, state.ctx)
 
 
 def search_record(state: SearchState, scored, positions, rung_time: float) -> None:
@@ -354,10 +433,7 @@ def search_eval_rung(state: SearchState):
     The service scheduler bypasses this for batched jobs it can merge
     (``automl/batched.eval_rung_cohorts``); everything else — ``automl_fit``,
     loop-backend jobs, time-budgeted jobs — rungs through here."""
-    if state.config.backend == "batched":
-        from .batched import eval_rung_batched as _eval_rung
-    else:
-        _eval_rung = _eval_rung_loop
+    _eval_rung = get_backend(state.config.backend)
     cohort, tids, epochs, collect = search_cohort(state)
     t_rung = time.perf_counter()
     scored, positions = _eval_rung(cohort, tids, state.rung_i, epochs, state.ctx,

@@ -34,7 +34,8 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["FAMILIES", "ModelFamily", "adam_train", "train_model",
-           "predict_model", "accuracy"]
+           "predict_model", "accuracy", "masked_loss", "masked_fit",
+           "masked_accuracy", "CLASS_MASK_NEG"]
 
 
 class ModelFamily(NamedTuple):
@@ -181,6 +182,82 @@ FAMILIES: Dict[str, ModelFamily] = {
         {"shrinkage": (0.0, 0.2, 0.5)},
     ),
 }
+
+
+# ---------------------------------------------------------------------------
+# masked counterparts for heterogeneous-shape cohort merging
+# ---------------------------------------------------------------------------
+
+# Additive class-mask constant: finite (no inf-inf NaNs) yet large enough
+# that exp(CLASS_MASK_NEG - max_logit) underflows to exactly 0.0 in float32,
+# so a masked class contributes exactly nothing to softmax/hinge/argmax and
+# its logit receives exactly zero gradient.
+CLASS_MASK_NEG = -1e30
+
+
+def _xent_masked(logits, y, w):
+    """Row-weighted cross-entropy: sum(w * nll) / sum(w).
+
+    Padded rows enter as exact ``0.0`` terms of the sum, so the weighted
+    mean equals the unpadded mean up to reduction order (DESIGN.md §12.3)."""
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=1)[:, 0]
+    return (nll * w).sum() / w.sum()
+
+
+def masked_loss(family: str, params, X, y, w, cmask, c, hp):
+    """Row/class-masked counterpart of ``FAMILIES[family].loss``.
+
+    ``w`` is a (N,) 0/1 row-validity weight and ``cmask`` a (c,) additive
+    class mask (0 for real classes, ``CLASS_MASK_NEG`` for padding).  With
+    all-ones ``w`` and all-zeros ``cmask`` this computes the same quantity
+    as the unmasked loss; with padding active, padded rows and classes are
+    exactly inert — the heterogeneous-merge parity argument (§12.3)."""
+    fam = FAMILIES[family]
+    logits = fam.predict(params, X) + cmask[None, :]
+    if family == "linear_svm":
+        correct = jnp.take_along_axis(logits, y[:, None], axis=1)
+        margins = jnp.maximum(0.0, logits - correct + 1.0)
+        margins = margins.at[jnp.arange(X.shape[0]), y].set(0.0)
+        data = (margins.sum(axis=1) * w).sum() / w.sum()
+        reg = hp["l2"] * jnp.sum(params["w"] ** 2)
+    elif family == "mlp":
+        data = _xent_masked(logits, y, w)
+        reg = hp["l2"] * sum(jnp.sum(l["w"] ** 2) for l in params["layers"])
+    elif family == "logreg":
+        data = _xent_masked(logits, y, w)
+        reg = hp["l2"] * jnp.sum(params["w"] ** 2)
+    else:
+        raise ValueError(f"no masked loss for family {family!r}")
+    return data + reg
+
+
+def masked_fit(family: str, X, y, w, cmask, c, hp):
+    """Row/class-masked counterpart of ``FAMILIES[family].fit_closed``:
+    class statistics weight rows by ``w`` and the row count is ``w.sum()``;
+    padded classes get ``CLASS_MASK_NEG`` priors (gnb) or are suppressed at
+    prediction time via ``cmask`` (centroid)."""
+    onehot = jax.nn.one_hot(y, c) * w[:, None]
+    cnt = onehot.sum(0)[:, None]
+    if family == "gnb":
+        eps = hp["var_smoothing"]
+        mean = (onehot.T @ X) / jnp.maximum(cnt, 1.0)
+        sq = (onehot.T @ (X ** 2)) / jnp.maximum(cnt, 1.0)
+        var = jnp.maximum(sq - mean ** 2, 0.0) + eps
+        prior = jnp.log(jnp.maximum(cnt[:, 0] / w.sum(), 1e-12)) + cmask
+        return {"mean": mean, "var": var, "prior": prior}
+    if family == "centroid":
+        cent = (onehot.T @ X) / jnp.maximum(cnt, 1.0)
+        overall = (w[:, None] * X).sum(0, keepdims=True) / w.sum()
+        cent = overall + (cent - overall) * (1.0 - hp["shrinkage"])
+        return {"cent": cent}
+    raise ValueError(f"no masked closed-form fit for family {family!r}")
+
+
+def masked_accuracy(family: str, params, X, y, w, cmask):
+    """Row-weighted accuracy with padded classes excluded from the argmax."""
+    logits = FAMILIES[family].predict(params, X) + cmask[None, :]
+    return ((jnp.argmax(logits, axis=1) == y) * w).sum() / w.sum()
 
 
 # ---------------------------------------------------------------------------

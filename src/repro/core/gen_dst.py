@@ -50,7 +50,8 @@ from .measures import (
 )
 from ..kernels.entropy.ops import population_histogram, resolve_interpret
 
-__all__ = ["GenDSTConfig", "DSTResult", "gen_dst", "default_dst_size", "random_dst"]
+__all__ = ["GenDSTConfig", "DSTResult", "gen_dst", "gen_dst_batch",
+           "default_dst_size", "random_dst"]
 
 
 class GenDSTConfig(NamedTuple):
@@ -354,11 +355,10 @@ def _ring_migrate(rows, cols, counts, fit, *, k):
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("n", "m", "cfg", "B", "target"),
-)
-def _gen_dst_jit(key, codes, values, n, m, cfg: GenDSTConfig, B, target):
+def _gen_dst_core(key, codes, values, n, m, cfg: GenDSTConfig, B, target):
+    """Trace-level GA body shared by the solo jit and the vmapped batch jit
+    (``gen_dst_batch``): one definition, so a batched search runs the exact
+    same per-search math as a solo one."""
     N, M = codes.shape
     I, phi = cfg.num_islands, cfg.phi
     entropy = cfg.measure == "entropy"
@@ -471,6 +471,18 @@ def _gen_dst_jit(key, codes, values, n, m, cfg: GenDSTConfig, B, target):
     return best_r, best_c, best_f, history, f_ref
 
 
+_gen_dst_jit = functools.partial(
+    jax.jit, static_argnames=("n", "m", "cfg", "B", "target")
+)(_gen_dst_core)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "m", "cfg", "B", "target"))
+def _gen_dst_batch_jit(keys, codes, values, n, m, cfg: GenDSTConfig, B, target):
+    return jax.vmap(
+        lambda k, cd, vl: _gen_dst_core(k, cd, vl, n, m, cfg, B, target)
+    )(keys, codes, values)
+
+
 def gen_dst(
     key: jax.Array,
     coded: CodedDataset,
@@ -489,6 +501,46 @@ def gen_dst(
         key, coded.codes, coded.values, n, m, cfg, coded.max_bins, coded.target_col
     )
     return DSTResult(best_r, best_c, best_f, history, f_ref)
+
+
+def gen_dst_batch(
+    keys,
+    codeds,
+    n: Optional[int] = None,
+    m: Optional[int] = None,
+    cfg: GenDSTConfig = GenDSTConfig(),
+) -> list[DSTResult]:
+    """Run Gen-DST on several same-shaped datasets in one vmapped dispatch.
+
+    ``keys``/``codeds`` are parallel sequences; every dataset must share the
+    same ``codes`` shape, ``max_bins`` and ``target_col`` (the static axes
+    of the jitted GA).  The searches are independent — vmap only changes the
+    dispatch granularity, exactly like the AutoML engine's cross-job rung
+    merge — so each result matches a solo ``gen_dst`` run with the same key.
+    The service scheduler batches concurrent cache-miss jobs through this
+    (DESIGN.md §12.4)."""
+    if len(keys) != len(codeds) or not codeds:
+        raise ValueError("gen_dst_batch: keys and codeds must be equal-length"
+                         " non-empty sequences")
+    c0 = codeds[0]
+    for c in codeds[1:]:
+        if (c.codes.shape != c0.codes.shape or c.max_bins != c0.max_bins
+                or c.target_col != c0.target_col):
+            raise ValueError("gen_dst_batch: all datasets must share the "
+                             "codes shape, max_bins, and target_col")
+    N, M = c0.codes.shape
+    dn, dm = default_dst_size(N, M)
+    n = dn if n is None else min(n, N)
+    m = dm if m is None else min(m, M)
+    assert cfg.phi % 2 == 0, "population size must be even (pairwise crossover)"
+    rb, cb, fb, hist, f_ref = _gen_dst_batch_jit(
+        jnp.stack(list(keys)),
+        jnp.stack([c.codes for c in codeds]),
+        jnp.stack([c.values for c in codeds]),
+        n, m, cfg, c0.max_bins, c0.target_col,
+    )
+    return [DSTResult(rb[i], cb[i], fb[i], hist[i], f_ref[i])
+            for i in range(len(codeds))]
 
 
 def random_dst(key, coded: CodedDataset, n: Optional[int] = None, m: Optional[int] = None):

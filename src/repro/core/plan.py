@@ -1,0 +1,218 @@
+"""The declarative plan-based pipeline API (DESIGN.md §12).
+
+Three PRs of growth left four overlapping entry points — one-shot
+``substrat()``, the phase functions, the resumable ``SearchState`` engine
+API, and the service scheduler — each with its own way of spelling "which
+subset finder" and "which search engine".  This module collapses them onto
+one declarative object executed by one engine:
+
+    from repro.core.plan import plan, execute
+
+    p = plan("gen_dst", cfg=GenDSTConfig(psi=20),
+             sub_automl=AutoMLConfig(n_trials=12))
+    result = execute(p, X, y, key=jax.random.key(0))
+
+A ``Plan`` names a **SubsetStrategy** (registry: ``core/strategies.py`` —
+Gen-DST, the island variant, every paper baseline, the ASP-style proxy
+scorer, or any third-party registration) plus the subset shape, and a
+**SearchBackend** (registry: ``automl/engine.py`` — ``batched``/``loop``/
+third-party) plus the two AutoML pass budgets.  ``execute()`` is the one
+driver: factorize → strategy → subset → sub-AutoML → restricted fine-tune.
+
+``substrat()``, the service scheduler, and the examples are thin clients of
+this API; ``plan_from_config`` converts the legacy ``SubStratConfig`` blob
+(and the deprecated ``dst_fn=`` escape hatch) into an equivalent ``Plan``,
+so old call sites produce identical results through the new path.
+
+Plans are frozen and hashable (strategy options are stored as sorted
+``(key, value)`` items): the service layer derives DST-cache keys directly
+from ``(strategy, strategy_opts, n, m)``, which is what makes *every*
+registered strategy cacheable and servable, not just Gen-DST.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional, Tuple, Union
+
+import jax
+import numpy as np
+
+from ..automl.engine import AutoMLConfig, automl_fit, get_backend
+from .gen_dst import GenDSTConfig, default_dst_size
+from .measures import CodedDataset, factorize
+from .strategies import SubsetResult, get_strategy, run_strategy
+
+__all__ = ["Plan", "plan", "execute", "plan_from_config"]
+
+
+def _norm_opts(opts) -> Tuple[Tuple[str, object], ...]:
+    """Normalize strategy options to sorted hashable items."""
+    items = sorted(dict(opts).items())
+    return tuple((k, v) for k, v in items)
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """A declarative description of one SubStrat run.
+
+    ``strategy`` is a SubsetStrategy registry name (or a bare callable for
+    un-registered generators — those bypass the service cache).
+    ``backend``, when set, overrides the SearchBackend of *both* AutoML
+    passes.  All other fields mirror the paper's three-step strategy
+    (§1.1): subset shape ``n``/``m`` (None = paper defaults), the step-2
+    budget ``sub_automl``, and the step-3 restricted pass ``ft_automl``
+    (skipped entirely by ``fine_tune=False`` — SubStrat-NF)."""
+    strategy: Union[str, Callable] = "gen_dst"
+    strategy_opts: Tuple[Tuple[str, object], ...] = ()
+    n: Optional[int] = None
+    m: Optional[int] = None
+    fine_tune: bool = True
+    sub_automl: AutoMLConfig = AutoMLConfig()
+    ft_automl: AutoMLConfig = AutoMLConfig(n_trials=6, rungs=(60,))
+    backend: Optional[str] = None
+
+    def __post_init__(self):
+        if not callable(self.strategy):
+            get_strategy(self.strategy)        # fail fast, listing names
+        if self.backend is not None:
+            get_backend(self.backend)
+        object.__setattr__(self, "strategy_opts", _norm_opts(self.strategy_opts))
+
+    def resolved_sub_automl(self) -> AutoMLConfig:
+        if self.backend is not None:
+            return dataclasses.replace(self.sub_automl, backend=self.backend)
+        return self.sub_automl
+
+    def resolved_ft_automl(self) -> AutoMLConfig:
+        if self.backend is not None:
+            return dataclasses.replace(self.ft_automl, backend=self.backend)
+        return self.ft_automl
+
+    @property
+    def cacheable(self) -> bool:
+        """Whether this plan's subset is DST-cache eligible: a *registered*
+        strategy whose output is a pure function of (dataset, n, m, opts)."""
+        return (not callable(self.strategy)
+                and get_strategy(self.strategy).cacheable)
+
+    @property
+    def batchable(self) -> bool:
+        """Whether the strategy can fuse same-shaped concurrent searches."""
+        return (not callable(self.strategy)
+                and get_strategy(self.strategy).batch_fn is not None)
+
+    def subset_identity(self, coded: CodedDataset) -> tuple:
+        """The hashable identity of this plan's subset-search problem on
+        ``coded`` — the service cache-key payload: the resolved subset shape
+        plus the strategy name and options."""
+        N, M = coded.codes.shape
+        dn, dm = default_dst_size(N, M)
+        n = dn if self.n is None else min(self.n, N)
+        m = dm if self.m is None else min(self.m, M)
+        return (n, m, self.strategy, self.strategy_opts)
+
+
+def plan(
+    strategy: Union[str, Callable] = "gen_dst",
+    *,
+    n: Optional[int] = None,
+    m: Optional[int] = None,
+    fine_tune: bool = True,
+    sub_automl: Optional[AutoMLConfig] = None,
+    ft_automl: Optional[AutoMLConfig] = None,
+    backend: Optional[str] = None,
+    **strategy_opts,
+) -> Plan:
+    """Build a ``Plan``; extra keyword arguments become strategy options.
+
+    ``plan("mc", budget=4000)`` configures the Monte-Carlo strategy;
+    ``plan("gen_dst", cfg=GenDSTConfig(psi=40))`` the genetic search."""
+    kw = {}
+    if sub_automl is not None:
+        kw["sub_automl"] = sub_automl
+    if ft_automl is not None:
+        kw["ft_automl"] = ft_automl
+    return Plan(strategy=strategy, strategy_opts=_norm_opts(strategy_opts),
+                n=n, m=m, fine_tune=fine_tune, backend=backend, **kw)
+
+
+def plan_from_config(config, dst_fn: Optional[Callable] = None) -> Plan:
+    """Convert a legacy ``SubStratConfig`` (+ optional ``dst_fn``) into the
+    equivalent ``Plan`` — the compatibility bridge old call sites ride."""
+    if dst_fn is not None:
+        strategy, opts = dst_fn, ()
+    else:
+        strategy = "gen_dst"
+        opts = (("cfg", config.resolved_gen()),)
+    return Plan(
+        strategy=strategy, strategy_opts=opts,
+        n=config.n, m=config.m, fine_tune=config.fine_tune,
+        sub_automl=config.resolved_sub_automl(),
+        ft_automl=config.resolved_ft_automl(),
+    )
+
+
+def execute(
+    p: Plan,
+    X: np.ndarray,
+    y: np.ndarray,
+    *,
+    key: Optional[jax.Array] = None,
+    coded: Optional[CodedDataset] = None,
+    X_test: Optional[np.ndarray] = None,
+    y_test: Optional[np.ndarray] = None,
+):
+    """Run one plan end to end; returns a ``SubStratResult``.
+
+    The single driver behind ``substrat()`` and the scheduler's phase
+    machine: factorize once, run the plan's subset strategy, train the
+    sub-AutoML pass on the subset, then the restricted fine-tune on the
+    full data (or the SubStrat-NF test evaluation when ``fine_tune`` is
+    off)."""
+    from .substrat import (
+        SubStratResult, build_subset, dst_feature_columns, nf_test_eval,
+    )
+    key = jax.random.key(0) if key is None else key
+    times = {}
+
+    t0 = time.perf_counter()
+    if coded is None:
+        coded = factorize(X, y)
+    times["factorize_s"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    subset: SubsetResult = run_strategy(
+        p.strategy, key, coded, p.n, p.m, p.strategy_opts)
+    times["gen_dst_s"] = time.perf_counter() - t0
+    col_idx = dst_feature_columns(subset.col_mask, coded.target_col)
+
+    t0 = time.perf_counter()
+    X_sub, y_sub = build_subset(X, y, subset.row_idx, col_idx, key)
+    intermediate = automl_fit(X_sub, y_sub, config=p.resolved_sub_automl())
+    times["automl_sub_s"] = time.perf_counter() - t0
+
+    if p.fine_tune:
+        t0 = time.perf_counter()
+        final = automl_fit(
+            X, y,
+            config=p.resolved_ft_automl(),
+            restrict_family=intermediate.spec.family,
+            X_test=X_test, y_test=y_test,
+        )
+        times["fine_tune_s"] = time.perf_counter() - t0
+    else:
+        final = intermediate
+        if X_test is not None:
+            final = nf_test_eval(intermediate, y_sub, col_idx, X_test, y_test)
+
+    return SubStratResult(
+        final=final,
+        intermediate=intermediate,
+        row_idx=subset.row_idx,
+        col_idx=col_idx,
+        dst_fitness=subset.fitness,
+        times=times,
+        total_time_s=sum(times.values()),
+        strategy=subset.strategy,
+    )

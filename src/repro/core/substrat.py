@@ -8,24 +8,27 @@
 
 ``fine_tune=False`` gives the paper's SubStrat-NF ablation (category F).
 
-The strategy is factored into explicit phase functions — ``phase_dst``,
-``dst_feature_columns``, ``build_subset``, ``nf_test_eval`` — so the service
-scheduler (``repro/service``, DESIGN.md §11.3) can interleave many jobs'
-phases and merge their AutoML rung cohorts; ``substrat()`` remains the
-one-shot single-tenant driver over the same functions.
+Since the plan-based API redesign (DESIGN.md §12), ``substrat()`` is a thin
+client of ``core/plan.py``: it converts its ``SubStratConfig`` (and the
+deprecated ``dst_fn=`` escape hatch) into a declarative ``Plan`` via
+``plan_from_config`` and hands it to ``execute()`` — one driver shared with
+the service scheduler.  The phase functions — ``dst_feature_columns``,
+``build_subset``, ``nf_test_eval`` — remain the shared units of work both
+paths run; ``phase_dst`` survives as a compatibility wrapper over the
+SubsetStrategy registry (``core/strategies.py``).
 """
 from __future__ import annotations
 
 import dataclasses
-import time
+import warnings
 from typing import Callable, Optional
 
 import jax
 import numpy as np
 
-from ..automl.engine import AutoMLConfig, AutoMLResult, automl_fit
-from .gen_dst import GenDSTConfig, gen_dst, default_dst_size
-from .measures import CodedDataset, factorize
+from ..automl.engine import AutoMLConfig, AutoMLResult
+from .gen_dst import GenDSTConfig
+from .measures import CodedDataset
 
 __all__ = [
     "SubStratResult", "substrat", "SubStratConfig",
@@ -98,6 +101,7 @@ class SubStratResult:
     dst_fitness: float
     times: dict                       # per-phase seconds
     total_time_s: float
+    strategy: str = "gen_dst"         # SubsetStrategy that found the subset
 
 
 # ---------------------------------------------------------------------------
@@ -113,15 +117,15 @@ def phase_dst(
 ):
     """Step 1: find the measure-preserving DST.
 
-    Returns ``(row_idx, col_mask, fitness)`` as host numpy/float — the
-    exact payload the service DST cache stores."""
-    if dst_fn is None:
-        dst = gen_dst(key, coded, config.n, config.m, config.resolved_gen())
-    else:
-        dst = dst_fn(key, coded, config.n, config.m)
-    row_idx = np.asarray(jax.device_get(dst.row_idx))
-    col_mask = np.asarray(jax.device_get(dst.col_mask))
-    return row_idx, col_mask, float(dst.fitness)
+    Compatibility wrapper over the SubsetStrategy registry: the config (and
+    optional ``dst_fn``) is converted to a ``Plan`` and the plan's strategy
+    runs.  Returns ``(row_idx, col_mask, fitness)`` as host numpy/float —
+    the exact payload the service DST cache stores."""
+    from .plan import plan_from_config
+    from .strategies import run_strategy
+    p = plan_from_config(config, dst_fn)
+    sub = run_strategy(p.strategy, key, coded, p.n, p.m, p.strategy_opts)
+    return sub.row_idx, sub.col_mask, sub.fitness
 
 
 def dst_feature_columns(col_mask: np.ndarray, target_col: int) -> np.ndarray:
@@ -148,7 +152,12 @@ def build_subset(
     If the row draw misses entire label classes (skewed labels), patch the
     subset by drawing explicitly from rows of each missing class — a fixed
     random draw can miss a rare minority class entirely — with the draw
-    seeded from the run ``key`` so repeat runs are deterministic per key."""
+    seeded from the run ``key`` so repeat runs are deterministic per key.
+    The per-class draw is capped at the subset size divided by the number
+    of missing classes (>= 1 each), so the degenerate case — a tiny subset
+    missing nearly *every* class (small ``n``, many classes) — patches with
+    one representative per class instead of over-drawing a patch many times
+    larger than the subset itself."""
     X, y = np.asarray(X), np.asarray(y)
     X_sub = X[row_idx][:, col_idx]
     y_sub = y[row_idx]
@@ -158,9 +167,11 @@ def build_subset(
         seed = int(np.asarray(jax.random.randint(
             jax.random.fold_in(key, 0x5AB5), (), 0, np.iinfo(np.int32).max)))
         rng = np.random.default_rng(seed)
+        per_class = max(1, len(row_idx) // len(missing))
         extra = np.concatenate([
             rng.choice(np.flatnonzero(y == cls),
-                       size=min(32, int((y == cls).sum())), replace=False)
+                       size=min(32, per_class, int((y == cls).sum())),
+                       replace=False)
             for cls in missing
         ])
         X_sub = np.concatenate([X_sub, X[extra][:, col_idx]])
@@ -203,48 +214,18 @@ def substrat(
     X_test: Optional[np.ndarray] = None,
     y_test: Optional[np.ndarray] = None,
 ) -> SubStratResult:
-    key = jax.random.key(0) if key is None else key
-    times = {}
+    """One-shot single-tenant SubStrat run — a thin client of the plan API.
 
-    # --- step 0: factorize (once; reusable across runs) ----------------------
-    t0 = time.perf_counter()
-    if coded is None:
-        coded = factorize(X, y)
-    times["factorize_s"] = time.perf_counter() - t0
-
-    # --- step 1: find the measure-preserving DST ------------------------------
-    t0 = time.perf_counter()
-    row_idx, col_mask, fitness = phase_dst(key, coded, config, dst_fn)
-    times["gen_dst_s"] = time.perf_counter() - t0
-    col_idx = dst_feature_columns(col_mask, coded.target_col)
-
-    # --- step 2: AutoML on the subset -----------------------------------------
-    t0 = time.perf_counter()
-    X_sub, y_sub = build_subset(X, y, row_idx, col_idx, key)
-    intermediate = automl_fit(X_sub, y_sub, config=config.resolved_sub_automl())
-    times["automl_sub_s"] = time.perf_counter() - t0
-
-    # --- step 3: restricted fine-tune on the full data -------------------------
-    if config.fine_tune:
-        t0 = time.perf_counter()
-        final = automl_fit(
-            X, y,
-            config=config.resolved_ft_automl(),
-            restrict_family=intermediate.spec.family,
-            X_test=X_test, y_test=y_test,
-        )
-        times["fine_tune_s"] = time.perf_counter() - t0
-    else:
-        final = intermediate
-        if X_test is not None:
-            final = nf_test_eval(intermediate, y_sub, col_idx, X_test, y_test)
-
-    return SubStratResult(
-        final=final,
-        intermediate=intermediate,
-        row_idx=row_idx,
-        col_idx=col_idx,
-        dst_fitness=fitness,
-        times=times,
-        total_time_s=sum(times.values()),
-    )
+    The config blob (and the deprecated ``dst_fn``) is converted to a
+    declarative ``Plan`` and executed by the one shared driver
+    (``core/plan.execute``); results are identical to building the plan
+    yourself."""
+    from .plan import execute, plan_from_config
+    if dst_fn is not None:
+        warnings.warn(
+            "substrat(dst_fn=...) is deprecated; pass the generator as a "
+            "Plan strategy instead: execute(plan(my_fn, ...), X, y) or "
+            "register it via repro.core.strategies.register_strategy",
+            DeprecationWarning, stacklevel=2)
+    return execute(plan_from_config(config, dst_fn), X, y, key=key,
+                   coded=coded, X_test=X_test, y_test=y_test)

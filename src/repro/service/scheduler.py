@@ -1,7 +1,9 @@
-"""Multi-tenant SubStrat job scheduler (DESIGN.md §11.3).
+"""Multi-tenant SubStrat job scheduler (DESIGN.md §11.3, §12.4).
 
-Turns the one-shot ``substrat()`` pipeline into a cooperative job queue.
-Every job moves through explicit resumable phases::
+Turns the plan-based pipeline (``core/plan.py``) into a cooperative job
+queue.  Every job carries a declarative ``Plan`` — legacy
+``SubStratConfig`` submissions are converted on admission — and moves
+through explicit resumable phases::
 
     factorize  ─►  dst  ─►  sub_automl  ─►  fine_tune  ─►  done
         │  cache hit │           │              ▲
@@ -19,44 +21,46 @@ leader disappears.
 
 ``step()`` advances every active job by exactly one unit of work — one
 phase transition, or one successive-halving rung of its current AutoML
-search.  The AutoML phases run on the resumable ``SearchState`` API
-(``engine.search_init``/``search_cohort``/``search_record``), which is what
-makes **cross-job batching** possible: jobs whose current rungs are
-compatible — batched backend, no wall-clock budget, same data shapes and
-class count, same ``(rung_i, epochs)`` — are merged into one vmapped
-dispatch of the batched engine (``batched.eval_rung_cohorts``) instead of
-running per-job.  Merging changes dispatch granularity only; per-trial math
-is identical to solo execution (parity argument: DESIGN.md §11.4), and the
-merged rung's wall time is attributed to the participating jobs in equal
-shares.
+search.  Work merges across jobs at two layers:
 
-The DST cache keys on ``(fingerprint, n, m, measure, gen config)``: a
-repeat submission
-of a seen dataset skips Gen-DST entirely (phase ``dst`` is bypassed), and —
-when the cache already knows the winning model family from a prior job's
-sub-AutoML pass and ``warm_start`` is on — skips the sub-AutoML pass too,
-jumping straight to the restricted fine-tune (its ``SubStratResult`` then
-reports ``intermediate is final``).  Jobs with a custom ``dst_fn`` bypass
-the cache: its entries are Gen-DST outputs.
+- **dst**: concurrent cache-miss jobs whose plans name the same *batchable*
+  strategy (``StrategySpec.batch_fn`` — Gen-DST and its island variant) on
+  same-shaped datasets run their searches in one vmapped dispatch
+  (``gen_dst_batch``), bit-identical per search to solo execution.
+- **sub_automl / fine_tune**: jobs at the same ``(rung_i, epochs)`` merge
+  their rung cohorts into one dispatch of the batched engine
+  (``batched.eval_rung_cohorts``).  Same-shaped jobs merge exactly
+  (DESIGN.md §11.4); differently-shaped jobs merge through maximal-shape
+  padding with row/class masks (§12.3) when ``hetero_merge`` is on and no
+  job would pad more than ``hetero_pad_limit``× its own row count.  Merged
+  wall time is attributed to participants in equal shares.
+
+The DST cache keys on the plan's subset identity —
+``(fingerprint, n, m, measure, (strategy, strategy_opts))`` — so *every*
+registered cacheable strategy (all the paper baselines, the ASP proxy
+scorer) is cached and warm-started exactly like Gen-DST.  Jobs with a bare
+callable strategy (the deprecated ``dst_fn``) bypass the cache.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Callable, Dict, List, Optional
 
 import jax
 import numpy as np
 
 from ..automl.engine import (
-    SearchState, search_cohort, search_eval_rung, search_init, search_record,
-    search_result,
+    SearchState, search_eval_rung, search_init, search_record, search_result,
+    search_trial_cohort,
 )
-from ..core.gen_dst import default_dst_size
 from ..core.measures import CodedDataset, factorize
+from ..core.plan import Plan, plan_from_config
+from ..core.strategies import run_strategy, run_strategy_batch
 from ..core.substrat import (
     SubStratConfig, SubStratResult, build_subset, dst_feature_columns,
-    nf_test_eval, phase_dst,
+    nf_test_eval,
 )
 from .cache import DSTCache, DSTCacheEntry, dst_cache_key
 from .fingerprint import dataset_fingerprint
@@ -70,6 +74,18 @@ PHASES = ("factorize", "dst", "warm_wait", "sub_automl", "fine_tune",
 _PHASE_TIME_KEY = {"sub_automl": "automl_sub_s", "fine_tune": "fine_tune_s"}
 
 
+def _plan_measure(plan: Plan) -> str:
+    """The preserved measure named by a plan's strategy options (the
+    ``measure`` field of a GenDSTConfig ``cfg`` option), defaulting to the
+    paper's entropy measure every baseline targets."""
+    for k, v in plan.strategy_opts:
+        if k == "cfg" and hasattr(v, "measure"):
+            return v.measure
+        if k == "measure":
+            return v
+    return "entropy"
+
+
 @dataclasses.dataclass
 class SubStratJob:
     """One submitted SubStrat run and its phase state."""
@@ -78,8 +94,7 @@ class SubStratJob:
     X: np.ndarray
     y: np.ndarray
     key: jax.Array
-    config: SubStratConfig
-    dst_fn: Optional[Callable] = None
+    plan: Plan
     coded: Optional[CodedDataset] = None
     X_test: Optional[np.ndarray] = None
     y_test: Optional[np.ndarray] = None
@@ -109,18 +124,34 @@ class SubStratJob:
     def cost_s(self) -> float:
         return sum(self.times.values())
 
+    @property
+    def strategy_name(self) -> str:
+        s = self.plan.strategy
+        return s if isinstance(s, str) else getattr(s, "__name__", "<callable>")
+
 
 class Scheduler:
     """Cooperative multi-job scheduler with DST caching and rung merging."""
 
-    def __init__(self, cache: Optional[DSTCache] = None, *, warm_start: bool = True):
+    def __init__(self, cache: Optional[DSTCache] = None, *,
+                 warm_start: bool = True, hetero_merge: bool = True,
+                 hetero_pad_limit: float = 4.0, batch_dst: bool = False):
         self.cache = cache if cache is not None else DSTCache()
         self.warm_start = warm_start
+        self.hetero_merge = hetero_merge
+        self.hetero_pad_limit = hetero_pad_limit
+        # vmap same-shaped concurrent cache-miss searches (gen_dst_batch).
+        # Bit-identical per search; a device-utilization play — fills
+        # parallel hardware, roughly neutral-to-negative on one CPU core
+        # (benchmarks hetero_merge section), hence opt-in.
+        self.batch_dst = batch_dst
         self.jobs: Dict[int, SubStratJob] = {}
         self._next_id = 0
         self.merged_rungs = 0   # merged dispatches issued
         self.merged_jobs = 0    # job-rungs that rode a merged dispatch
+        self.hetero_rungs = 0   # merged dispatches that needed shape padding
         self.solo_rungs = 0     # rungs evaluated per-job
+        self.merged_dst = 0     # subset searches that rode a batched dispatch
 
     # -- submission ---------------------------------------------------------
 
@@ -131,18 +162,32 @@ class Scheduler:
         *,
         tenant: str = "default",
         key: Optional[jax.Array] = None,
-        config: SubStratConfig = SubStratConfig(),
+        plan: Optional[Plan] = None,
+        config: Optional[SubStratConfig] = None,
         dst_fn: Optional[Callable] = None,
         coded: Optional[CodedDataset] = None,
         X_test: Optional[np.ndarray] = None,
         y_test: Optional[np.ndarray] = None,
     ) -> int:
-        """Admit a job; returns its id.  No work happens until ``step()``."""
+        """Admit a job; returns its id.  No work happens until ``step()``.
+
+        ``plan`` is the native submission payload; ``config`` (+ the
+        deprecated ``dst_fn``) is converted via ``plan_from_config`` for
+        legacy call sites and produces identical execution."""
+        if dst_fn is not None:
+            warnings.warn(
+                "submit(dst_fn=...) is deprecated; pass the generator as a "
+                "Plan strategy (plan(my_fn, ...)) or register it via "
+                "repro.core.strategies.register_strategy",
+                DeprecationWarning, stacklevel=2)
+        if plan is None:
+            plan = plan_from_config(config or SubStratConfig(), dst_fn)
+        elif config is not None or dst_fn is not None:
+            raise ValueError("pass either plan= or config=/dst_fn=, not both")
         job = SubStratJob(
             job_id=self._next_id, tenant=tenant, X=X, y=y,
             key=jax.random.key(0) if key is None else key,
-            config=config, dst_fn=dst_fn, coded=coded,
-            X_test=X_test, y_test=y_test,
+            plan=plan, coded=coded, X_test=X_test, y_test=y_test,
         )
         self.jobs[job.job_id] = job
         self._next_id += 1
@@ -160,39 +205,34 @@ class Scheduler:
         job.fingerprint = dataset_fingerprint(job.coded)
         job.times["factorize_s"] = time.perf_counter() - t0
 
-        # resolve the DST shape the same way gen_dst does, so the cache key
-        # is the actual search problem, not the (possibly None) config fields
-        N, M = job.coded.codes.shape
-        dn, dm = default_dst_size(N, M)
-        n = dn if job.config.n is None else min(job.config.n, N)
-        m = dm if job.config.m is None else min(job.config.m, M)
-        if job.dst_fn is None:
-            gen = job.config.resolved_gen()
+        # the cache key is the plan's resolved subset identity — the actual
+        # search problem, not the (possibly None) plan fields
+        if job.plan.cacheable:
+            n, m, strategy, opts = job.plan.subset_identity(job.coded)
             job.cache_key = dst_cache_key(
-                job.fingerprint, n, m, gen.measure, search_cfg=gen)
+                job.fingerprint, n, m, _plan_measure(job.plan),
+                search_cfg=(strategy, opts))
 
         if not self._try_cache_hit(job):
             job.phase = "dst"
 
     def _try_cache_hit(self, job: SubStratJob) -> bool:
         """Probe the DST cache; on a hit, install the stored subset and
-        advance the job past Gen-DST (and, when warm-startable, past the
-        sub-AutoML pass)."""
+        advance the job past the subset search (and, when warm-startable,
+        past the sub-AutoML pass)."""
         t0 = time.perf_counter()
         entry = self.cache.get(job.cache_key) if job.cache_key else None
         if entry is None:
             return False
-        # cache hit: the stored subset replaces the whole Gen-DST search;
+        # cache hit: the stored subset replaces the whole strategy search;
         # gen_dst_s records what the hit actually cost (the lookup)
         job.cache_hit = True
-        job.row_idx, job.col_mask = entry.row_idx, entry.col_mask
-        job.dst_fitness = entry.fitness
-        job.col_idx = dst_feature_columns(job.col_mask, job.coded.target_col)
+        self._install_subset(job, entry.row_idx, entry.col_mask, entry.fitness)
         job.times["gen_dst_s"] = time.perf_counter() - t0
-        if self.warm_start and job.config.fine_tune and entry.winner_family:
+        if self.warm_start and job.plan.fine_tune and entry.winner_family:
             job.warm_family = entry.winner_family
             job.phase = "fine_tune"
-        elif (self.warm_start and job.config.fine_tune
+        elif (self.warm_start and job.plan.fine_tune
               and self._family_leader(job) is not None):
             # a concurrent job on the same cache key is already running the
             # sub-AutoML pass: wait for its winner family instead of
@@ -201,6 +241,12 @@ class Scheduler:
         else:
             job.phase = "sub_automl"
         return True
+
+    def _install_subset(self, job: SubStratJob, row_idx, col_mask,
+                        fitness) -> None:
+        job.row_idx, job.col_mask = row_idx, col_mask
+        job.dst_fitness = fitness
+        job.col_idx = dst_feature_columns(col_mask, job.coded.target_col)
 
     def _family_leader(self, job: SubStratJob) -> Optional[SubStratJob]:
         """An active job on the same cache key whose sub-AutoML pass will
@@ -230,40 +276,129 @@ class Scheduler:
                 worked = True
         return worked
 
-    def _dst(self, job: SubStratJob) -> None:
-        # re-probe before searching: a same-fingerprint job earlier in the
-        # queue may have inserted the entry since this job's admission probe
-        # (concurrent duplicate submissions coalesce onto one Gen-DST run);
-        # peek first so an absent entry doesn't count a second miss
-        if (job.cache_key is not None
+    # -- subset search: batched where the strategy allows -------------------
+
+    def _reprobe(self, job: SubStratJob) -> bool:
+        """Re-probe the cache before searching: a same-identity job earlier
+        in the queue may have inserted the entry since this job's admission
+        probe (concurrent duplicate submissions coalesce onto one search);
+        peek first so an absent entry doesn't count a second miss."""
+        return (job.cache_key is not None
                 and self.cache.peek(job.cache_key) is not None
-                and self._try_cache_hit(job)):
-            return
-        t0 = time.perf_counter()
-        job.row_idx, job.col_mask, job.dst_fitness = phase_dst(
-            job.key, job.coded, job.config, job.dst_fn)
-        job.col_idx = dst_feature_columns(job.col_mask, job.coded.target_col)
-        job.times["gen_dst_s"] = time.perf_counter() - t0
+                and self._try_cache_hit(job))
+
+    def _record_subset(self, job: SubStratJob, subset, elapsed: float) -> None:
+        self._install_subset(job, subset.row_idx, subset.col_mask,
+                             subset.fitness)
+        job.times["gen_dst_s"] = elapsed
         if job.cache_key is not None:
             self.cache.put(job.cache_key, DSTCacheEntry(
                 row_idx=job.row_idx, col_mask=job.col_mask,
-                fitness=job.dst_fitness))
+                fitness=job.dst_fitness, cost_s=elapsed))
         job.phase = "sub_automl"
+
+    def _dst(self, job: SubStratJob) -> None:
+        if self._reprobe(job):
+            return
+        p = job.plan
+        t0 = time.perf_counter()
+        subset = run_strategy(p.strategy, job.key, job.coded, p.n, p.m,
+                              p.strategy_opts)
+        self._record_subset(job, subset, time.perf_counter() - t0)
+
+    def _dst_batch_key(self, job: SubStratJob):
+        """Hashable batch-compatibility class of a job's subset search, or
+        None if the search must run solo (callable strategy, no batch_fn,
+        or nothing to share)."""
+        p = job.plan
+        if not p.batchable:
+            return None
+        n, m, strategy, opts = p.subset_identity(job.coded)
+        return (strategy, opts, n, m, job.coded.codes.shape,
+                job.coded.max_bins, job.coded.target_col)
+
+    def _dispatch_dst(self, jobs: List[SubStratJob]) -> None:
+        """Run the queue's pending subset searches: group batchable jobs by
+        strategy/shape compatibility into one vmapped dispatch each
+        (identical-cache-key duplicates coalesce onto one search slot),
+        everything else solo."""
+        groups: Dict[object, List[SubStratJob]] = {}
+        solo: List[SubStratJob] = []
+        for job in jobs:
+            if self._reprobe(job):
+                continue
+            bkey = self._dst_batch_key(job) if self.batch_dst else None
+            if bkey is None:
+                solo.append(job)
+            else:
+                groups.setdefault(bkey, []).append(job)
+
+        for job in solo:
+            try:
+                self._dst(job)
+            except Exception as e:   # noqa: BLE001 — isolate job failures
+                self._fail(job, e)
+
+        for bkey, group in groups.items():
+            # duplicate submissions (same cache key) share one search slot
+            reps: List[SubStratJob] = []
+            seen_keys = set()
+            followers: List[SubStratJob] = []
+            for job in group:
+                if job.cache_key is not None and job.cache_key in seen_keys:
+                    followers.append(job)
+                else:
+                    seen_keys.add(job.cache_key)
+                    reps.append(job)
+            if len(reps) == 1:
+                try:
+                    self._dst(reps[0])
+                except Exception as e:   # noqa: BLE001
+                    self._fail(reps[0], e)
+            else:
+                strategy, opts, n, m = bkey[0], bkey[1], bkey[2], bkey[3]
+                t0 = time.perf_counter()
+                try:
+                    subsets = run_strategy_batch(
+                        strategy, [j.key for j in reps],
+                        [j.coded for j in reps], n, m, opts)
+                except Exception as e:   # noqa: BLE001
+                    # fail the reps only: followers fall through to the
+                    # solo retry below (a batch failure, e.g. OOM on the
+                    # K-wide stacked tensors, need not doom a search that
+                    # would succeed solo)
+                    for job in reps:
+                        self._fail(job, e)
+                    subsets = []
+                else:
+                    self.merged_dst += len(reps)
+                share = (time.perf_counter() - t0) / max(len(subsets), 1)
+                for job, subset in zip(reps, subsets):
+                    self._record_subset(job, subset, share)
+            for job in followers:   # their rep just populated the cache
+                if not self._reprobe(job):
+                    try:                      # rep failed / uncacheable
+                        self._dst(job)
+                    except Exception as e:   # noqa: BLE001
+                        self._fail(job, e)
+
+    # -- AutoML phases ------------------------------------------------------
 
     def _ensure_search(self, job: SubStratJob) -> None:
         if job.search is not None:
             return
         t0 = time.perf_counter()
+        p = job.plan
         if job.phase == "sub_automl":
             X_sub, y_sub = build_subset(job.X, job.y, job.row_idx, job.col_idx,
                                         job.key)
             job.y_sub = y_sub
             job.search = search_init(
-                X_sub, y_sub, config=job.config.resolved_sub_automl())
+                X_sub, y_sub, config=p.resolved_sub_automl())
         else:   # fine_tune: restricted to M''s (or the cache-known) family
             family = job.warm_family or job.intermediate.spec.family
             job.search = search_init(
-                job.X, job.y, config=job.config.resolved_ft_automl(),
+                job.X, job.y, config=p.resolved_ft_automl(),
                 restrict_family=family)
         key = _PHASE_TIME_KEY[job.phase]
         job.times[key] = job.times.get(key, 0.0) + (time.perf_counter() - t0)
@@ -275,7 +410,7 @@ class Scheduler:
             if job.cache_key is not None:
                 self.cache.note_winner(job.cache_key,
                                        job.intermediate.spec.family)
-            if job.config.fine_tune:
+            if job.plan.fine_tune:
                 job.phase = "fine_tune"
                 return
             final = job.intermediate
@@ -299,6 +434,7 @@ class Scheduler:
             dst_fitness=job.dst_fitness,
             times=dict(job.times),
             total_time_s=job.cost_s,
+            strategy=job.strategy_name,
         )
         job.phase = "done"
         self._release_data(job)
@@ -317,34 +453,65 @@ class Scheduler:
 
     # -- rung dispatch: merged where compatible -----------------------------
 
-    def _merge_key(self, job: SubStratJob):
-        """Hashable compatibility class of a job's current rung, or None if
-        the job must run solo (loop backend, or mid-rung time budget)."""
+    def _rung_key(self, job: SubStratJob):
+        """Hashable ``(rung_i, epochs)`` merge bucket of a job's current
+        rung, or None if the job must run solo (non-batched backend, or
+        mid-rung time budget)."""
         st = job.search
         cfg = st.config
         if cfg.backend != "batched" or cfg.time_budget_s is not None:
             return None
-        ctx = st.ctx
-        return (ctx["X_tr"].shape, ctx["X_val"].shape, ctx["n_classes"],
-                st.rung_i, int(cfg.rungs[st.rung_i]))
+        return (st.rung_i, int(cfg.rungs[st.rung_i]))
+
+    def _plan_bucket(self, bucket: List[SubStratJob]):
+        """Split one ``(rung_i, epochs)`` bucket into merged groups + solos.
+
+        Same-shaped jobs merge exactly.  Differently-shaped jobs merge into
+        one padded dispatch when ``hetero_merge`` is on and the bucket's
+        row-count spread stays within ``hetero_pad_limit`` (beyond that,
+        padding waste outweighs the saved dispatches); otherwise each shape
+        class merges separately."""
+        by_shape: Dict[tuple, List[SubStratJob]] = {}
+        for job in bucket:
+            by_shape.setdefault(search_trial_cohort(job.search).shape,
+                                []).append(job)
+        if len(by_shape) > 1 and self.hetero_merge:
+            # every padded axis — train rows, val rows, features — must stay
+            # within the waste limit (a d=6 job padded into a d=600 group
+            # would burn ~100x FLOPs per trial regardless of row counts)
+            within = all(
+                max(s[axis] for s in by_shape)
+                <= self.hetero_pad_limit * min(s[axis] for s in by_shape)
+                for axis in (0, 1, 2))
+            if within:
+                return [bucket], []
+        merged, solo = [], []
+        for group in by_shape.values():
+            if len(group) > 1:
+                merged.append(group)
+            else:
+                solo.append(group[0])
+        return merged, solo
 
     def _dispatch_rungs(self, ready: List[SubStratJob]) -> None:
         from ..automl.batched import eval_rung_cohorts
 
-        groups: Dict[object, List[SubStratJob]] = {}
+        buckets: Dict[object, List[SubStratJob]] = {}
         solo: List[SubStratJob] = []
         for job in ready:
-            mkey = self._merge_key(job)
-            if mkey is None:
+            rkey = self._rung_key(job)
+            if rkey is None:
                 solo.append(job)
             else:
-                groups.setdefault(mkey, []).append(job)
+                buckets.setdefault(rkey, []).append(job)
         merged = []
-        for group in groups.values():
-            if len(group) > 1:
-                merged.append(group)
-            else:
-                solo.append(group[0])   # a merge group of one runs solo
+        for bucket in buckets.values():
+            if len(bucket) == 1:
+                solo.append(bucket[0])
+                continue
+            groups, singles = self._plan_bucket(bucket)
+            merged.extend(groups)
+            solo.extend(singles)
 
         for job in solo:
             t0 = time.perf_counter()
@@ -358,15 +525,11 @@ class Scheduler:
             job.times[key] = job.times.get(key, 0.0) + (time.perf_counter() - t0)
 
         for group in merged:
-            cohorts = [search_cohort(j.search) for j in group]
-            rung_i = group[0].search.rung_i
-            epochs = cohorts[0][2]
-            collect = any(c[3] for c in cohorts)
+            cohorts = [search_trial_cohort(j.search) for j in group]
+            hetero = len({tc.shape for tc in cohorts}) > 1
             t0 = time.perf_counter()
             try:
-                outs = eval_rung_cohorts(
-                    [(c[0], c[1], j.search.ctx) for c, j in zip(cohorts, group)],
-                    rung_i, epochs, collect)
+                outs = eval_rung_cohorts(cohorts)
             except Exception as e:   # noqa: BLE001
                 for job in group:
                     self._fail(job, e)
@@ -375,6 +538,7 @@ class Scheduler:
             share = (time.perf_counter() - t0) / len(group)
             self.merged_rungs += 1
             self.merged_jobs += len(group)
+            self.hetero_rungs += int(hetero)
             for job, (scored, positions) in zip(group, outs):
                 search_record(job.search, scored, positions, share)
                 key = _PHASE_TIME_KEY[job.phase]
@@ -386,17 +550,20 @@ class Scheduler:
         """Advance every active job one phase unit.  Returns True iff any
         work was done (False means nothing is pending)."""
         worked = False
+        dst_ready: List[SubStratJob] = []
         for job in sorted(self.pending(), key=lambda j: j.job_id):
             try:
                 if job.phase == "factorize":
                     self._factorize(job)
                     worked = True
-                elif job.phase == "dst":
-                    self._dst(job)
-                    worked = True
             except Exception as e:   # noqa: BLE001 — isolate job failures
                 self._fail(job, e)
                 worked = True
+            if job.phase == "dst":
+                dst_ready.append(job)
+        if dst_ready:
+            self._dispatch_dst(dst_ready)
+            worked = True
 
         ready: List[SubStratJob] = []
         for job in sorted(self.pending(), key=lambda j: j.job_id):
@@ -439,5 +606,7 @@ class Scheduler:
             "cache": self.cache.stats(),
             "merged_rungs": self.merged_rungs,
             "merged_jobs": self.merged_jobs,
+            "hetero_rungs": self.hetero_rungs,
             "solo_rungs": self.solo_rungs,
+            "merged_dst": self.merged_dst,
         }

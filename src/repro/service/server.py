@@ -20,6 +20,7 @@ import jax
 import numpy as np
 
 from ..core.measures import CodedDataset
+from ..core.plan import Plan
 from ..core.substrat import SubStratConfig, SubStratResult
 from .cache import DSTCache
 from .scheduler import Scheduler
@@ -62,11 +63,18 @@ class SubStratServer:
         self,
         *,
         cache_capacity: int = 128,
+        cache_byte_budget: Optional[int] = None,
+        cache_policy: str = "lru",
         warm_start: bool = True,
+        hetero_merge: bool = True,
+        batch_dst: bool = False,
         tenant_budgets: Optional[Dict[str, float]] = None,
     ):
-        self.scheduler = Scheduler(DSTCache(cache_capacity),
-                                   warm_start=warm_start)
+        self.scheduler = Scheduler(
+            DSTCache(cache_capacity, byte_budget=cache_byte_budget,
+                     policy=cache_policy),
+            warm_start=warm_start, hetero_merge=hetero_merge,
+            batch_dst=batch_dst)
         self.tenants: Dict[str, TenantAccount] = {}
         for tenant, budget in (tenant_budgets or {}).items():
             self.tenants[tenant] = TenantAccount(budget_s=budget)
@@ -96,13 +104,17 @@ class SubStratServer:
         *,
         tenant: str = "default",
         key: Optional[jax.Array] = None,
-        config: SubStratConfig = SubStratConfig(),
+        plan: Optional[Plan] = None,
+        config: Optional[SubStratConfig] = None,
         dst_fn: Optional[Callable] = None,
         coded: Optional[CodedDataset] = None,
         X_test: Optional[np.ndarray] = None,
         y_test: Optional[np.ndarray] = None,
     ) -> int:
-        """Admit a job for ``tenant``; returns a job id for poll/result."""
+        """Admit a job for ``tenant``; returns a job id for poll/result.
+
+        ``plan`` is the native payload (DESIGN.md §12); ``config`` (+ the
+        deprecated ``dst_fn``) is converted on admission."""
         account = self._account(tenant)
         self._refresh_spend()
         if account.budget_s is not None and account.spent_s >= account.budget_s:
@@ -111,8 +123,8 @@ class SubStratServer:
                 f"{account.budget_s:.2f}s budget")
         account.jobs_submitted += 1
         return self.scheduler.submit(
-            X, y, tenant=tenant, key=key, config=config, dst_fn=dst_fn,
-            coded=coded, X_test=X_test, y_test=y_test)
+            X, y, tenant=tenant, key=key, plan=plan, config=config,
+            dst_fn=dst_fn, coded=coded, X_test=X_test, y_test=y_test)
 
     def poll(self, job_id: int) -> JobStatus:
         job = self.scheduler.jobs[job_id]

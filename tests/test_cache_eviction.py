@@ -1,0 +1,132 @@
+"""Cost-aware DST-cache eviction (DESIGN.md §12.5): GDSF priority scoring
+(production cost in strategy seconds, entry size in bytes) and the byte
+budget, closing the ROADMAP eviction item."""
+import numpy as np
+import pytest
+
+from repro.service import DSTCache, DSTCacheEntry
+from repro.service.cache import dst_cache_key
+
+
+def _entry(n_rows=8, cost_s=1.0):
+    return DSTCacheEntry(row_idx=np.zeros(n_rows, np.int64),
+                         col_mask=np.ones(4, bool), fitness=-0.1,
+                         cost_s=cost_s)
+
+
+def _key(tag):
+    return dst_cache_key(tag, 4, 2, "entropy")
+
+
+def test_entry_nbytes_counts_payload():
+    e = _entry(n_rows=16)
+    assert e.nbytes == 16 * 8 + 4
+
+
+def test_invalid_policy_and_budget_rejected():
+    with pytest.raises(ValueError, match="policy"):
+        DSTCache(policy="fifo")
+    with pytest.raises(ValueError, match="byte_budget"):
+        DSTCache(byte_budget=0)
+
+
+def test_gdsf_evicts_cheap_entry_first():
+    """Same size, same recency: the entry that took 100x longer to produce
+    survives — plain LRU would evict by age instead."""
+    cache = DSTCache(capacity=2, policy="gdsf")
+    cache.put(_key("expensive"), _entry(cost_s=10.0))
+    cache.put(_key("cheap"), _entry(cost_s=0.1))
+    cache.put(_key("new"), _entry(cost_s=1.0))       # forces one eviction
+    assert _key("expensive") in cache
+    assert _key("cheap") not in cache
+    assert cache.stats()["evictions"] == 1
+
+
+def test_gdsf_frequency_rescues_hot_cheap_entry():
+    """A cheap but frequently-hit entry outranks a cold expensive one when
+    hits * cost compensate — the F in GDSF."""
+    cache = DSTCache(capacity=2, policy="gdsf")
+    cache.put(_key("cold_costly"), _entry(cost_s=1.0))
+    cache.put(_key("hot_cheap"), _entry(cost_s=0.3))
+    for _ in range(10):
+        assert cache.get(_key("hot_cheap")) is not None
+    # 11 uses x 0.3s outrank 1 use x 1.0s; the 2.0s newcomer outranks both
+    cache.put(_key("new"), _entry(cost_s=2.0))
+    assert _key("hot_cheap") in cache
+    assert _key("cold_costly") not in cache
+
+
+def test_gdsf_size_term_prefers_small_entries():
+    """Equal cost and recency: the byte-heavy entry is the victim."""
+    cache = DSTCache(capacity=2, policy="gdsf")
+    cache.put(_key("huge"), _entry(n_rows=4096, cost_s=1.0))
+    cache.put(_key("small"), _entry(n_rows=8, cost_s=1.0))
+    cache.put(_key("new"), _entry(n_rows=8, cost_s=1.0))
+    assert _key("small") in cache and _key("huge") not in cache
+
+
+def test_gdsf_clock_ages_out_stale_priorities():
+    """Eviction advances the clock, so a fresh cheap entry eventually
+    outranks entries whose priority was set long ago (no permanent squatters)."""
+    cache = DSTCache(capacity=2, policy="gdsf")
+    cache.put(_key("old_costly"), _entry(cost_s=5.0))
+    cache.put(_key("other"), _entry(cost_s=4.0))
+    # stream of singles: each eviction raises the clock toward the old
+    # priorities until the un-hit "old_costly" entry is displaced
+    for i in range(200):
+        cache.put(_key(f"s{i}"), _entry(cost_s=0.5))
+        if _key("old_costly") not in cache:
+            break
+    assert _key("old_costly") not in cache
+
+
+def test_byte_budget_enforced_lru():
+    e = _entry(n_rows=8)          # 68 bytes each
+    cache = DSTCache(capacity=100, byte_budget=3 * e.nbytes)
+    for tag in "abcd":
+        cache.put(_key(tag), _entry(n_rows=8))
+    assert cache.total_bytes <= 3 * e.nbytes
+    assert len(cache) == 3
+    assert _key("a") not in cache                  # LRU victim
+    assert cache.stats()["bytes"] == cache.total_bytes
+
+
+def test_byte_budget_enforced_gdsf():
+    e = _entry(n_rows=8)
+    cache = DSTCache(capacity=100, byte_budget=2 * e.nbytes, policy="gdsf")
+    cache.put(_key("costly"), _entry(cost_s=10.0))
+    cache.put(_key("cheap1"), _entry(cost_s=0.1))
+    cache.put(_key("cheap2"), _entry(cost_s=0.2))
+    assert len(cache) == 2
+    assert _key("costly") in cache                 # cheap one was the victim
+
+
+def test_byte_budget_keeps_last_entry():
+    """An over-budget single entry is kept: the cache never evicts down to
+    empty (the entry was just paid for; serving it beats rerunning)."""
+    cache = DSTCache(capacity=4, byte_budget=8)
+    cache.put(_key("big"), _entry(n_rows=64))
+    assert len(cache) == 1
+
+
+def test_scheduler_records_production_cost():
+    """The scheduler stores each search's wall seconds on the entry — the
+    GDSF cost term."""
+    import jax
+    from repro.automl.engine import AutoMLConfig
+    from repro.core.gen_dst import GenDSTConfig
+    from repro.core.plan import plan
+    from repro.service import SubStratServer
+
+    r = np.random.default_rng(0)
+    y = r.integers(0, 2, 300)
+    X = np.column_stack([y + r.normal(0, 0.5, 300) for _ in range(5)]
+                        ).astype(np.float32)
+    srv = SubStratServer(cache_policy="gdsf")
+    p = plan("gen_dst", cfg=GenDSTConfig(psi=2, phi=4),
+             sub_automl=AutoMLConfig(n_trials=4, rungs=(10,)),
+             ft_automl=AutoMLConfig(n_trials=4, rungs=(10,)))
+    srv.submit(X, y, key=jax.random.key(0), plan=p)
+    srv.run()
+    entries = list(srv.scheduler.cache._entries.values())
+    assert len(entries) == 1 and entries[0].cost_s > 0

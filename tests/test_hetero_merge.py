@@ -1,0 +1,316 @@
+"""Heterogeneous-shape cohort merging + batched Gen-DST (DESIGN.md §12.3–4).
+
+The headline assertions are the PR's acceptance criteria: merging
+differently-shaped jobs' rung cohorts through maximal-shape padding is
+parity-exact with sequential per-job execution (same winner specs, trial
+accuracies within 1e-6), and vmapped Gen-DST batches are bit-identical to
+solo searches."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.automl.engine import (
+    AutoMLConfig, search_eval_rung, search_init, search_record, search_result,
+    search_trial_cohort,
+)
+from repro.automl.batched import eval_rung_cohorts
+from repro.automl.models import (
+    CLASS_MASK_NEG, FAMILIES, masked_accuracy, masked_fit, masked_loss,
+)
+from repro.core.gen_dst import GenDSTConfig, gen_dst, gen_dst_batch
+from repro.core.measures import factorize
+from repro.core.plan import plan
+from repro.service import SubStratServer
+
+
+def _make(seed, N, d, C):
+    r = np.random.default_rng(seed)
+    y = r.integers(0, C, N)
+    X = np.column_stack(
+        [y * 1.2 + r.normal(0, 0.8, N) for _ in range(d)]).astype(np.float32)
+    return X, y
+
+
+# three jobs with no two shapes equal: rows, features, AND classes differ
+HETERO_JOBS = [((400, 8, 2), 0), ((700, 9, 3), 1), ((250, 6, 2), 2)]
+
+
+def _solo_and_merged(jobs, n_trials=8, rungs=(10, 25)):
+    data = [_make(1 + i, *s) for i, (s, _seed) in enumerate(jobs)]
+    cfgs = [AutoMLConfig(n_trials=n_trials, rungs=rungs, seed=seed)
+            for (_s, seed) in jobs]
+
+    solos = []
+    for (X, y), cfg in zip(data, cfgs):
+        st = search_init(X, y, config=cfg)
+        while not st.done:
+            search_eval_rung(st)
+        solos.append(search_result(st))
+
+    states = [search_init(X, y, config=cfg) for (X, y), cfg in zip(data, cfgs)]
+    while not all(s.done for s in states):
+        live = [s for s in states if not s.done]
+        outs = eval_rung_cohorts([search_trial_cohort(s) for s in live])
+        for s, (scored, positions) in zip(live, outs):
+            search_record(s, scored, positions, 0.0)
+    merged = [search_result(s) for s in states]
+    return solos, merged
+
+
+@pytest.fixture(scope="module")
+def solo_merged():
+    return _solo_and_merged(HETERO_JOBS)
+
+
+def test_hetero_merge_same_winners(solo_merged):
+    solos, merged = solo_merged
+    for s, m in zip(solos, merged):
+        assert m.spec == s.spec
+        assert m.val_acc == pytest.approx(s.val_acc, abs=1e-6)
+
+
+def test_hetero_merge_trial_accs_within_tolerance(solo_merged):
+    """Acceptance: every trial's accuracy within 1e-6 of solo execution."""
+    solos, merged = solo_merged
+    for s, m in zip(solos, merged):
+        assert len(s.trials) == len(m.trials)
+        for (spec_s, acc_s), (spec_m, acc_m) in zip(
+                sorted(s.trials, key=repr), sorted(m.trials, key=repr)):
+            assert spec_s == spec_m
+            assert acc_m == pytest.approx(acc_s, abs=1e-6)
+
+
+def test_hetero_merge_winner_params_unpadded(solo_merged):
+    """Winner params come back at the job's own (d, n_classes) shapes."""
+    solos, merged = solo_merged
+    for (shape, _seed), m in zip(HETERO_JOBS, merged):
+        _N, _d, C = shape
+        fam = m.spec.family
+        leaves = jax.tree.leaves(m.params)
+        assert all(np.all(np.isfinite(np.asarray(l))) for l in leaves)
+        if fam in ("logreg", "linear_svm"):
+            assert m.params["w"].shape[1] == C
+        elif fam == "mlp":
+            assert m.params["layers"][-1]["w"].shape[1] == C
+        elif fam == "gnb":
+            assert m.params["mean"].shape[0] == C
+        elif fam == "centroid":
+            assert m.params["cent"].shape[0] == C
+
+
+def test_hetero_merge_rejects_mismatched_rungs():
+    data = [_make(i, 100, 6, 2) for i in range(2)]
+    states = [search_init(X, y, config=AutoMLConfig(n_trials=4, rungs=(10, 20)))
+              for X, y in data]
+    search_eval_rung(states[0])       # advance one job to rung 1
+    with pytest.raises(ValueError, match="rung_i"):
+        eval_rung_cohorts([search_trial_cohort(s) for s in states])
+
+
+# ---------------------------------------------------------------------------
+# masked model math: padding is inert
+# ---------------------------------------------------------------------------
+
+
+def _pad_case():
+    r = np.random.default_rng(3)
+    N, d, C = 40, 5, 3
+    X = jnp.asarray(r.normal(0, 1, (N, d)).astype(np.float32))
+    y = jnp.asarray(r.integers(0, C, N))
+    Xp = jnp.pad(X, ((0, 17), (0, 4)))
+    yp = jnp.pad(y, (0, 17))
+    w = jnp.pad(jnp.ones(N), (0, 17))
+    cmask = jnp.where(jnp.arange(C + 2) < C, 0.0, CLASS_MASK_NEG)
+    return X, y, Xp, yp, w, cmask, N, d, C
+
+
+@pytest.mark.parametrize("family", ["logreg", "linear_svm", "mlp"])
+def test_masked_loss_matches_unmasked_on_padded_data(family):
+    """Row/class-padded masked loss == unmasked loss on the unpadded data
+    (zero-weight rows and masked classes are exactly inert)."""
+    X, y, Xp, yp, w, cmask, N, d, C = _pad_case()
+    fam = FAMILIES[family]
+    hp = {k: v[0] for k, v in fam.hp_grid.items()}
+    params = fam.init(jax.random.key(0), d, C, hp)
+    # embed params into the padded layout (extra features/classes zero)
+    if family == "mlp":
+        layers = []
+        for i, lyr in enumerate(params["layers"]):
+            wpad = ((0, 4), (0, 0)) if i == 0 else ((0, 0), (0, 0))
+            if i == len(params["layers"]) - 1:
+                wpad = (wpad[0], (0, 2))
+            layers.append({"w": jnp.pad(lyr["w"], wpad),
+                           "b": jnp.pad(lyr["b"], (0, 2) if
+                                        i == len(params["layers"]) - 1 else (0, 0))})
+        params_p = {"layers": layers}
+    else:
+        params_p = {"w": jnp.pad(params["w"], ((0, 4), (0, 2))),
+                    "b": jnp.pad(params["b"], (0, 2))}
+    ref = fam.loss(params, X, y, C, hp)
+    got = masked_loss(family, params_p, Xp, yp, w, cmask, C + 2, hp)
+    assert float(got) == pytest.approx(float(ref), rel=1e-5, abs=1e-6)
+
+
+@pytest.mark.parametrize("family", ["gnb", "centroid"])
+def test_masked_fit_matches_unmasked_on_padded_data(family):
+    X, y, Xp, yp, w, cmask, N, d, C = _pad_case()
+    fam = FAMILIES[family]
+    hp = {k: v[0] for k, v in fam.hp_grid.items()}
+    ref = fam.fit_closed(None, X, y, C, hp)
+    got = masked_fit(family, Xp, yp, w, cmask, C + 2, hp)
+    if family == "gnb":
+        np.testing.assert_allclose(got["mean"][:C, :d], ref["mean"], atol=1e-5)
+        np.testing.assert_allclose(got["prior"][:C], ref["prior"], atol=1e-5)
+        assert np.all(np.asarray(got["prior"][C:]) < -1e29)   # masked out
+    else:
+        np.testing.assert_allclose(got["cent"][:C, :d], ref["cent"], atol=1e-5)
+    # masked accuracy on padded val data == plain accuracy on the original
+    acc_ref = float((jnp.argmax(fam.predict(ref, X), 1) == y).mean())
+    acc_got = float(masked_accuracy(family, got, Xp, yp, w, cmask))
+    assert acc_got == pytest.approx(acc_ref, abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# batched Gen-DST
+# ---------------------------------------------------------------------------
+
+
+def test_gen_dst_batch_bit_identical_to_solo():
+    codeds = [factorize(*_make(10 + i, 300, 6, 2)) for i in range(3)]
+    keys = [jax.random.key(i) for i in range(3)]
+    cfg = GenDSTConfig(psi=5, phi=8)
+    batched = gen_dst_batch(keys, codeds, 15, 3, cfg)
+    for k, c, b in zip(keys, codeds, batched):
+        solo = gen_dst(k, c, 15, 3, cfg)
+        np.testing.assert_array_equal(np.asarray(solo.row_idx),
+                                      np.asarray(b.row_idx))
+        np.testing.assert_array_equal(np.asarray(solo.col_mask),
+                                      np.asarray(b.col_mask))
+        assert float(solo.fitness) == float(b.fitness)
+
+
+def test_gen_dst_batch_rejects_mismatched_shapes():
+    a = factorize(*_make(1, 300, 6, 2))
+    b = factorize(*_make(2, 200, 6, 2))
+    with pytest.raises(ValueError, match="share"):
+        gen_dst_batch([jax.random.key(0), jax.random.key(1)], [a, b], 10, 3,
+                      GenDSTConfig(psi=2, phi=4))
+
+
+# ---------------------------------------------------------------------------
+# service integration: hetero jobs merge end to end
+# ---------------------------------------------------------------------------
+
+
+SERVE_PLAN = plan("gen_dst", cfg=GenDSTConfig(psi=3, phi=8),
+                  sub_automl=AutoMLConfig(n_trials=5, rungs=(15, 40)),
+                  ft_automl=AutoMLConfig(n_trials=4, rungs=(40,)))
+
+
+def test_server_merges_hetero_jobs():
+    """Differently-shaped concurrent jobs complete with shape-padded merged
+    dispatches, and their results match solo server runs."""
+    datasets = [_make(20 + i, *s) for i, (s, _x) in enumerate(HETERO_JOBS)]
+    srv = SubStratServer(warm_start=False)
+    ids = [srv.submit(X, y, key=jax.random.key(i), plan=SERVE_PLAN)
+           for i, (X, y) in enumerate(datasets)]
+    srv.run()
+    stats = srv.stats()
+    assert stats["hetero_rungs"] >= 1
+    assert stats["merged_rungs"] >= 1
+    for i, jid in enumerate(ids):
+        X, y = datasets[i]
+        ref_srv = SubStratServer(warm_start=False, hetero_merge=False)
+        ref = ref_srv.result(ref_srv.submit(X, y, key=jax.random.key(i),
+                                            plan=SERVE_PLAN))
+        got = srv.result(jid)
+        assert got.final.spec == ref.final.spec
+        assert got.final.val_acc == pytest.approx(ref.final.val_acc, abs=1e-6)
+
+
+def test_server_pad_limit_guards_waste():
+    """Jobs whose row counts differ beyond hetero_pad_limit do not pad-merge
+    (each shape class still merges/solos on its own)."""
+    small, big = _make(1, 120, 6, 2), _make(2, 4000, 6, 2)
+    srv = SubStratServer(warm_start=False)
+    assert srv.scheduler.hetero_pad_limit < 4000 / 120
+    for i, (X, y) in enumerate((small, big)):
+        srv.submit(X, y, key=jax.random.key(i), plan=SERVE_PLAN)
+    srv.run()
+    assert srv.stats()["hetero_rungs"] == 0
+
+
+def test_server_batched_dst_opt_in():
+    """batch_dst=True fuses same-shaped concurrent cache-miss searches and
+    produces the same subsets as solo scheduling."""
+    datasets = [_make(30 + i, 400, 6, 2) for i in range(3)]
+    on = SubStratServer(warm_start=False, batch_dst=True)
+    off = SubStratServer(warm_start=False)
+    ids_on = [on.submit(X, y, key=jax.random.key(i), plan=SERVE_PLAN)
+              for i, (X, y) in enumerate(datasets)]
+    ids_off = [off.submit(X, y, key=jax.random.key(i), plan=SERVE_PLAN)
+               for i, (X, y) in enumerate(datasets)]
+    on.run(), off.run()
+    assert on.stats()["merged_dst"] == 3
+    assert off.stats()["merged_dst"] == 0
+    for a, b in zip(ids_on, ids_off):
+        np.testing.assert_array_equal(on.result(a).row_idx,
+                                      off.result(b).row_idx)
+
+
+def test_batch_dst_failure_spares_followers():
+    """A failing batched dispatch fails only the searches it ran; duplicate
+    submissions (followers) fall back to solo execution and complete."""
+    from repro.core.gen_dst import gen_dst
+    from repro.core.strategies import STRATEGIES, register_strategy
+
+    def good_fn(key, coded, n, m):
+        return gen_dst(key, coded, n, m, GenDSTConfig(psi=2, phi=4))
+
+    def bad_batch(keys, codeds, n, m):
+        raise RuntimeError("batch boom")
+
+    register_strategy("fragile_batch", good_fn, batch_fn=bad_batch)
+    try:
+        p = dataclasses.replace(SERVE_PLAN, strategy="fragile_batch",
+                                strategy_opts=())
+        (XA, yA), (XB, yB) = _make(50, 300, 6, 2), _make(51, 300, 6, 2)
+        srv = SubStratServer(warm_start=False, batch_dst=True)
+        a = srv.submit(XA, yA, key=jax.random.key(0), plan=p)
+        b = srv.submit(XB, yB, key=jax.random.key(1), plan=p)
+        rep = srv.submit(XA, yA, key=jax.random.key(2), plan=p)
+        srv.run()
+        assert srv.poll(a).phase == "failed" and srv.poll(b).phase == "failed"
+        assert srv.poll(rep).done          # follower retried solo
+        assert srv.result(rep).final.val_acc is not None
+    finally:
+        STRATEGIES.pop("fragile_batch", None)
+
+
+def test_baseline_strategy_served_cached_and_merged():
+    """Acceptance: a core/baselines.py strategy runs through the service
+    layer with caching (repeat submission hits) and cross-job merging, with
+    parity against its direct plan execution."""
+    from repro.core.plan import execute
+    p = dataclasses.replace(SERVE_PLAN, strategy="ig_km", strategy_opts=())
+    X1, y1 = _make(40, 400, 6, 2)
+    X2, y2 = _make(41, 400, 6, 2)
+    srv = SubStratServer(warm_start=False)
+    a = srv.submit(X1, y1, key=jax.random.key(0), plan=p)
+    b = srv.submit(X2, y2, key=jax.random.key(1), plan=p)
+    rep = srv.submit(X1, y1, key=jax.random.key(2), plan=p)   # repeat of X1
+    srv.run()
+    stats = srv.stats()
+    assert stats["cache"]["hits"] >= 1
+    assert srv.poll(rep).cache_hit and not srv.poll(a).cache_hit
+    assert stats["merged_rungs"] >= 1
+    direct = execute(p, X1, y1, key=jax.random.key(0))
+    got = srv.result(a)
+    np.testing.assert_array_equal(got.row_idx, direct.row_idx)
+    assert got.final.spec == direct.final.spec
+    assert got.final.val_acc == pytest.approx(direct.final.val_acc, abs=1e-6)
+    assert got.strategy == "ig_km"

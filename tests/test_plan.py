@@ -1,0 +1,260 @@
+"""Plan-based pipeline API (DESIGN.md §12): SubsetStrategy / SearchBackend
+registries, plan()/execute() parity with the legacy entry points, the
+deprecation shims, and baselines-as-plans.
+
+The headline assertions are the PR's acceptance criteria: every baseline
+strategy runs through plan()/execute() with parity against its direct
+invocation, deprecation shims emit DeprecationWarning and produce identical
+results to the new API (winner spec equal, accs within 1e-6), and unknown
+registry names raise errors listing what exists."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.automl.engine import (
+    AutoMLConfig, automl_fit, available_backends, get_backend,
+    register_backend, BACKENDS, _eval_rung_loop,
+)
+from repro.core.gen_dst import DSTResult, GenDSTConfig, gen_dst
+from repro.core.measures import factorize
+from repro.core.plan import Plan, execute, plan, plan_from_config
+from repro.core.strategies import (
+    STRATEGIES, SubsetResult, available_strategies, get_strategy,
+    register_strategy, run_strategy,
+)
+from repro.core.substrat import (
+    SubStratConfig, build_subset, dst_feature_columns, substrat,
+)
+
+SMALL_AUTOML = AutoMLConfig(n_trials=5, rungs=(15, 40))
+SMALL_FT = AutoMLConfig(n_trials=4, rungs=(40,))
+SMALL_GEN = GenDSTConfig(psi=4, phi=8)
+SMALL_CFG = SubStratConfig(gen=SMALL_GEN, sub_automl=SMALL_AUTOML,
+                           ft_automl=SMALL_FT)
+
+
+@pytest.fixture(scope="module")
+def data():
+    r = np.random.default_rng(0)
+    y = r.integers(0, 2, 600)
+    X = np.column_stack(
+        [y * 1.5 + r.normal(0, 0.8, 600) for _ in range(6)]).astype(np.float32)
+    return X[:480], y[:480], X[480:], y[480:]
+
+
+# ---------------------------------------------------------------------------
+# registries: unknown names, listings, third-party round-trips
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_strategy_lists_available():
+    with pytest.raises(ValueError, match="available strategies"):
+        get_strategy("definitely_not_registered")
+    with pytest.raises(ValueError, match="gen_dst"):
+        get_strategy("nope")            # the listing names what exists
+
+
+def test_unknown_backend_lists_available():
+    with pytest.raises(ValueError, match="available backends"):
+        get_backend("definitely_not_registered")
+    with pytest.raises(ValueError, match="batched"):
+        get_backend("nope")
+
+
+def test_plan_validates_names_eagerly():
+    with pytest.raises(ValueError, match="available strategies"):
+        plan("no_such_strategy")
+    with pytest.raises(ValueError, match="available backends"):
+        plan("gen_dst", backend="no_such_backend")
+
+
+def test_builtin_registrations_cover_baselines():
+    names = available_strategies()
+    for expected in ("gen_dst", "gen_dst_islands", "mc", "mab", "greedy_seq",
+                     "greedy_mult", "km", "ig_rand", "ig_km", "asp_proxy",
+                     "random"):
+        assert expected in names
+    assert set(("batched", "loop")) <= set(available_backends())
+
+
+def test_third_party_strategy_roundtrip(data):
+    X, y, *_ = data
+
+    def fixed_dst(key, coded, n, m, *, rows=10):
+        M = coded.num_cols
+        mask = np.zeros(M, bool)
+        mask[[0, 1, M - 1]] = True
+        import jax.numpy as jnp
+        return DSTResult(jnp.arange(rows, dtype=jnp.int32), jnp.asarray(mask),
+                         jnp.float32(-0.5), jnp.zeros((0,)), jnp.float32(0.0))
+
+    try:
+        register_strategy("fixed_test_dst", fixed_dst)
+        assert "fixed_test_dst" in available_strategies()
+        with pytest.raises(ValueError, match="already registered"):
+            register_strategy("fixed_test_dst", fixed_dst)
+        res = execute(plan("fixed_test_dst", rows=12, sub_automl=SMALL_AUTOML,
+                           ft_automl=SMALL_FT), X, y, key=jax.random.key(0))
+        np.testing.assert_array_equal(res.row_idx, np.arange(12))
+        assert res.strategy == "fixed_test_dst"
+    finally:
+        STRATEGIES.pop("fixed_test_dst", None)
+
+
+def test_third_party_backend_roundtrip(data):
+    X, y, *_ = data
+    calls = []
+
+    def traced_loop(cohort, tids, rung_i, epochs, ctx, out_of_budget,
+                    collect_params=True):
+        calls.append(len(cohort))
+        return _eval_rung_loop(cohort, tids, rung_i, epochs, ctx,
+                               out_of_budget, collect_params)
+
+    try:
+        register_backend("traced_loop", traced_loop)
+        ref = automl_fit(X, y, config=dataclasses.replace(
+            SMALL_AUTOML, backend="loop"))
+        res = automl_fit(X, y, config=dataclasses.replace(
+            SMALL_AUTOML, backend="traced_loop"))
+        assert calls, "registered backend was never invoked"
+        assert res.spec == ref.spec
+        assert res.val_acc == pytest.approx(ref.val_acc, abs=1e-6)
+    finally:
+        BACKENDS.pop("traced_loop", None)
+
+
+# ---------------------------------------------------------------------------
+# plan()/execute() vs the legacy entry points (deprecation shims)
+# ---------------------------------------------------------------------------
+
+
+def test_plan_from_config_execute_matches_substrat(data):
+    X, y, Xte, yte = data
+    old = substrat(X, y, key=jax.random.key(3), config=SMALL_CFG,
+                   X_test=Xte, y_test=yte)
+    new = execute(plan_from_config(SMALL_CFG), X, y, key=jax.random.key(3),
+                  X_test=Xte, y_test=yte)
+    assert new.final.spec == old.final.spec
+    assert new.final.val_acc == pytest.approx(old.final.val_acc, abs=1e-6)
+    assert new.final.test_acc == pytest.approx(old.final.test_acc, abs=1e-6)
+    np.testing.assert_array_equal(new.row_idx, old.row_idx)
+    np.testing.assert_array_equal(new.col_idx, old.col_idx)
+
+
+def test_dst_fn_shim_warns_and_matches_plan(data):
+    """The deprecated dst_fn= signature still works, warns, and produces
+    exactly the callable-strategy plan's result."""
+    X, y, Xte, yte = data
+
+    def my_dst(key, coded, n, m):
+        M = coded.num_cols
+        mask = np.zeros(M, bool)
+        mask[[0, 2, M - 1]] = True
+        import jax.numpy as jnp
+        return DSTResult(jnp.arange(40, dtype=jnp.int32), jnp.asarray(mask),
+                         jnp.float32(-0.25), jnp.zeros((0,)), jnp.float32(0.0))
+
+    with pytest.deprecated_call():
+        old = substrat(X, y, key=jax.random.key(1), config=SMALL_CFG,
+                       dst_fn=my_dst, X_test=Xte, y_test=yte)
+    new = execute(plan(my_dst, sub_automl=SMALL_AUTOML, ft_automl=SMALL_FT),
+                  X, y, key=jax.random.key(1), X_test=Xte, y_test=yte)
+    assert old.final.spec == new.final.spec
+    assert old.final.val_acc == pytest.approx(new.final.val_acc, abs=1e-6)
+    assert old.final.test_acc == pytest.approx(new.final.test_acc, abs=1e-6)
+    np.testing.assert_array_equal(old.row_idx, new.row_idx)
+
+
+def test_service_dst_fn_shim_warns(data):
+    from repro.service import SubStratServer
+    from repro.core.gen_dst import random_dst
+    X, y, *_ = data
+    srv = SubStratServer()
+    with pytest.deprecated_call():
+        srv.submit(X, y, config=SMALL_CFG, dst_fn=random_dst)
+
+
+def test_plan_is_hashable_and_normalizes_opts():
+    a = plan("mc", budget=60, batch=20)
+    b = Plan(strategy="mc", strategy_opts=(("batch", 20), ("budget", 60)))
+    assert a == b and hash(a) == hash(b)
+    assert a.strategy_opts == (("batch", 20), ("budget", 60))
+
+
+def test_plan_backend_override_applies_to_both_passes():
+    p = plan("gen_dst", backend="loop", sub_automl=SMALL_AUTOML,
+             ft_automl=SMALL_FT)
+    assert p.resolved_sub_automl().backend == "loop"
+    assert p.resolved_ft_automl().backend == "loop"
+
+
+# ---------------------------------------------------------------------------
+# every baseline through plan()/execute(), parity with direct invocation
+# ---------------------------------------------------------------------------
+
+
+BASELINE_PLANS = [
+    ("mc", (("budget", 60), ("batch", 20))),
+    ("mab", (("rounds", 30),)),
+    ("greedy_seq", (("pool", 16),)),
+    ("greedy_mult", (("pool", 16),)),
+    ("km", ()),
+    ("ig_rand", ()),
+    ("ig_km", ()),
+    ("asp_proxy", ()),
+]
+
+
+@pytest.mark.parametrize("name,opts", BASELINE_PLANS,
+                         ids=[n for n, _ in BASELINE_PLANS])
+def test_baseline_through_plan_matches_direct(name, opts, data):
+    """Acceptance: each core/baselines.py method runs through the plan API
+    and selects exactly the subset its direct invocation selects."""
+    X, y, *_ = data
+    key = jax.random.key(5)
+    coded = factorize(X, y)
+
+    direct = run_strategy(name, key, coded, 20, 3, opts)
+    assert isinstance(direct, SubsetResult)
+
+    res = execute(
+        dataclasses.replace(plan(name, n=20, m=3, sub_automl=SMALL_AUTOML,
+                                 ft_automl=SMALL_FT), strategy_opts=opts),
+        X, y, key=key)
+    np.testing.assert_array_equal(res.row_idx, direct.row_idx)
+    assert res.dst_fitness == pytest.approx(direct.fitness, abs=1e-6)
+    assert res.strategy == name
+    # and the AutoML passes completed on that subset
+    assert res.final.val_acc is not None
+    np.testing.assert_array_equal(
+        res.col_idx, dst_feature_columns(direct.col_mask, coded.target_col))
+
+
+def test_gen_dst_plan_matches_direct(data):
+    X, y, *_ = data
+    key = jax.random.key(9)
+    coded = factorize(X, y)
+    direct = gen_dst(key, coded, 20, 3, SMALL_GEN)
+    res = execute(plan("gen_dst", n=20, m=3, cfg=SMALL_GEN,
+                       sub_automl=SMALL_AUTOML, ft_automl=SMALL_FT),
+                  X, y, key=key)
+    np.testing.assert_array_equal(res.row_idx, np.asarray(direct.row_idx))
+    assert res.dst_fitness == pytest.approx(float(direct.fitness), abs=1e-6)
+
+
+def test_asp_proxy_subset_is_valid(data):
+    """The ASP-style proxy scorer produces a valid, class-covering subset."""
+    X, y, *_ = data
+    coded = factorize(X, y)
+    res = run_strategy("asp_proxy", jax.random.key(0), coded, 24, 3)
+    assert res.row_idx.shape == (24,)
+    assert len(np.unique(res.row_idx)) == 24        # no duplicate rows
+    assert res.col_mask[coded.target_col]
+    assert 2 <= res.col_mask.sum() <= 3
+    assert np.isfinite(res.fitness)
+    # stratified selection keeps every class represented
+    assert set(np.unique(y[res.row_idx])) == set(np.unique(y))

@@ -82,6 +82,35 @@ def test_build_subset_multiclass_patch():
     assert set(np.unique(y_sub)) == {0, 1, 2}
 
 
+def test_build_subset_degenerate_many_missing_classes():
+    """Tiny subset, many classes: when nearly *every* class is missing the
+    patch must not over-draw — one representative per missing class, not 32
+    — so the patched subset stays subset-sized instead of ballooning into a
+    large fraction of the full data."""
+    rng = np.random.default_rng(0)
+    N, C = 640, 16
+    y = np.repeat(np.arange(C), N // C)       # 40 rows per class
+    X = rng.normal(0, 1, (N, 3)).astype(np.float32)
+    row_idx = np.arange(4)                    # covers only class 0
+    X_sub, y_sub = build_subset(X, y, row_idx, np.arange(2), jax.random.key(2))
+    assert set(np.unique(y_sub)) == set(range(C))     # every class present
+    # 15 missing classes x 1 row each — not 15 x 32 = 480 rows
+    assert len(y_sub) == len(row_idx) + (C - 1)
+    assert X_sub.shape == (len(y_sub), 2)
+
+
+def test_build_subset_empty_rows_still_covers_classes():
+    """The fully degenerate case — an empty row draw — patches one row per
+    class instead of looping or over-drawing."""
+    rng = np.random.default_rng(1)
+    y = np.repeat(np.arange(5), 50)
+    X = rng.normal(0, 1, (250, 4)).astype(np.float32)
+    X_sub, y_sub = build_subset(X, y, np.arange(0), np.arange(3),
+                                jax.random.key(0))
+    assert set(np.unique(y_sub)) == set(range(5))
+    assert len(y_sub) == 5                    # exactly one per missing class
+
+
 # ---------------------------------------------------------------------------
 # SubStrat-NF: DST-column-restricted test accuracy
 # ---------------------------------------------------------------------------
