@@ -1,0 +1,117 @@
+"""Continuous rung batching benchmark (DESIGN.md §13): throughput of the
+standing cross-rung megabatch vs lockstep ``(rung_i, epochs)`` bucketing.
+
+The workload is the ragged-traffic serving regime the megabatch targets:
+8 concurrent sub-AutoML searches on DST-sized data (~100 rows) whose rung
+ladders deliberately do *not* line up — eight distinct ``(rungs)`` tuples,
+so at every scheduler step the lockstep dispatcher fragments the fleet into
+singleton ``(rung_i, epochs)`` buckets (one program launch per live job)
+while the megabatch packs every ready cohort into one step-masked dispatch
+(``eval_trial_megabatch``) under the waste budget.  At this scale each
+dispatch costs far more in host round-trips and program launch than the
+padded scan slots cost in FLOPs, which is exactly the asymmetry continuous
+batching exploits (same argument as the §12.4 hetero merge, extended to the
+time axis).  Same-shaped jobs keep every merge bit-identical, so the
+speedup is pure scheduling — no accuracy trade.
+
+Acceptance target (ISSUE 6): >= 1.3x throughput at 8 jobs, mixed ladders.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.automl.engine import (
+    AutoMLConfig, search_init, search_record, search_trial_cohort,
+)
+from repro.automl.batched import eval_rung_cohorts, eval_trial_megabatch
+from repro.service.scheduler import CohortMeta, pack_megabatches
+
+# ragged rung mix: eight tenants, eight distinct ladders — no two jobs ever
+# share a lockstep (rung_i, epochs) bucket, so the pre-§13 dispatcher runs
+# one program launch per live job per rung while the megabatch runs one
+# total.  Budgets are distinct but close (8..15 then 16..30) so the step
+# padding the megabatch pays stays small next to the launches it saves.
+_LADDERS = ((8, 16), (9, 18), (10, 20), (11, 22),
+            (12, 24), (13, 26), (14, 28), (15, 30))
+
+
+def _make_data(seed: int, N: int, d: int, C: int):
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, C, N)
+    X = np.column_stack(
+        [y * 1.2 + rng.normal(0, 0.8, N) for _ in range(d)]).astype(np.float32)
+    return X, y
+
+
+def _measure(fn, reps: int = 9) -> float:
+    fn()                                  # warmup: pay jit compiles
+    return min(fn() for _ in range(reps))
+
+
+def continuous_rows(n_jobs: int = 8, waste_budget: float = 4.0,
+                    quick_tag: str = "quick"):
+    """Returns ``(name, us, derived)`` rows for ``continuous_batching``."""
+    ladders = _LADDERS[:n_jobs]
+    data = [_make_data(11 + i, 100, 8, 2) for i in range(n_jobs)]
+    cfgs = [AutoMLConfig(n_trials=4, rungs=ladders[i], seed=i)
+            for i in range(n_jobs)]
+    dispatches = {"lockstep": 0, "megabatch": 0}
+
+    def run_lockstep():
+        """The pre-§13 scheduler: merge only within (rung_i, epochs)."""
+        states = [search_init(X, y, config=cfg)
+                  for (X, y), cfg in zip(data, cfgs)]
+        t0 = time.perf_counter()      # time the dispatch loop, not job setup
+        n_disp = 0
+        while not all(s.done for s in states):
+            buckets = {}
+            for s in states:
+                if s.done:
+                    continue
+                buckets.setdefault(
+                    (s.rung_i, int(s.config.rungs[s.rung_i])), []).append(s)
+            for bucket in buckets.values():
+                outs = eval_rung_cohorts(
+                    [search_trial_cohort(s) for s in bucket])
+                n_disp += 1
+                for s, (scored, positions) in zip(bucket, outs):
+                    search_record(s, scored, positions, 0.0)
+        dispatches["lockstep"] = n_disp
+        return time.perf_counter() - t0
+
+    def run_megabatch():
+        """§13: every ready cohort joins one standing step-masked dispatch."""
+        states = [search_init(X, y, config=cfg)
+                  for (X, y), cfg in zip(data, cfgs)]
+        t0 = time.perf_counter()      # time the dispatch loop, not job setup
+        n_disp = 0
+        while not all(s.done for s in states):
+            live = [s for s in states if not s.done]
+            cohorts = [search_trial_cohort(s) for s in live]
+            metas = [CohortMeta(tc.shape, tc.trial_steps) for tc in cohorts]
+            for g in pack_megabatches(metas, waste_budget):
+                outs = eval_trial_megabatch([cohorts[i] for i in g])
+                n_disp += 1
+                for i, (scored, positions) in zip(g, outs):
+                    search_record(live[i], scored, positions, 0.0)
+        dispatches["megabatch"] = n_disp
+        return time.perf_counter() - t0
+
+    t_lock = _measure(run_lockstep)
+    t_mega = _measure(run_megabatch)
+    ladder_mix = "/".join("-".join(map(str, l)) for l in sorted(set(ladders)))
+    return [
+        (f"lockstep_{n_jobs}jobs_{quick_tag}", t_lock * 1e6,
+         f"dispatches={dispatches['lockstep']} ladders={ladder_mix}"),
+        (f"megabatch_{n_jobs}jobs_{quick_tag}", t_mega * 1e6,
+         f"speedup={t_lock / t_mega:.2f}x "
+         f"dispatches={dispatches['megabatch']} "
+         f"waste_budget={waste_budget} (target >=1.3x)"),
+    ]
+
+
+if __name__ == "__main__":
+    for name, us, derived in continuous_rows():
+        print(f"{name},{us:.1f},{derived}")

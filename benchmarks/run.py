@@ -72,7 +72,7 @@ def main() -> None:
     ap.add_argument("--skip", nargs="*", default=[],
                     help="section names to skip (table4 fig2 fig3 fig4 fig5 "
                          "kernels gen_dst automl service hetero_merge "
-                         "roofline)")
+                         "continuous_batching roofline)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write each section's rows to a machine-readable "
                          "JSON file (perf trajectory tracking across PRs)")
@@ -113,6 +113,8 @@ def main() -> None:
         sections.append(("service", lambda: _run_service(quick)))
     if "hetero_merge" not in args.skip:
         sections.append(("hetero_merge", lambda: _run_hetero(quick)))
+    if "continuous_batching" not in args.skip:
+        sections.append(("continuous_batching", lambda: _run_continuous(quick)))
     if "table4" not in args.skip:
         sections.append(("table4", lambda: _run_table4(quick)))
     if "fig2" not in args.skip:
@@ -220,6 +222,17 @@ def _run_hetero(quick):
              "batched Gen-DST (name,us,derived)")
     from .hetero_bench import hetero_rows
     rows = hetero_rows(n_jobs=4, quick_tag="quick" if quick else "full")
+    rows = [(name, round(us, 1), derived) for name, us, derived in rows]
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return _rowdicts(("name", "us", "derived"), rows)
+
+
+def _run_continuous(quick):
+    _section("Continuous rung batching: lockstep (rung_i, epochs) buckets vs "
+             "cross-rung step-masked megabatch (name,us,derived)")
+    from .continuous_bench import continuous_rows
+    rows = continuous_rows(n_jobs=8, quick_tag="quick" if quick else "full")
     rows = [(name, round(us, 1), derived) for name, us, derived in rows]
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

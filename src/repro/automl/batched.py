@@ -44,6 +44,20 @@ into one dispatch: sub-batches group by ``(family,) + shape_hps`` across
 jobs, so eight 6-trial jobs cost one program launch instead of eight.
 Merging changes dispatch granularity only — vmapped trials are independent,
 so per-trial math is identical to single-job execution.
+
+**Continuous rung batching** (DESIGN.md §13): ``eval_trial_megabatch``
+drops the last merge precondition — cohorts no longer need to sit at the
+same ``(rung_i, epochs)``.  Each trial additionally carries its rung cursor
+(MLP init keys fold in the trial's *own* rung) and its remaining epoch
+budget as a per-trial **step mask**: the shared Adam scan runs
+``max(steps)`` slots and a trial with ``n_steps`` remaining freezes its
+``(params, m, v)`` carry after ``n_steps`` of them
+(``models.adam_train(n_steps=...)``) — the same inert-padding trick as the
+row/class masks, applied to the time axis.  A 2-epoch trial and an 8-epoch
+neighbor therefore share one jitted dispatch, which is what lets the
+scheduler keep a single standing megabatch that trials join and leave as
+they are promoted or culled, instead of lockstep ``(rung_i, epochs)``
+buckets.
 """
 from __future__ import annotations
 
@@ -62,7 +76,7 @@ from .models import (
     masked_loss,
 )
 
-__all__ = ["eval_rung_batched", "eval_rung_cohorts"]
+__all__ = ["eval_rung_batched", "eval_rung_cohorts", "eval_trial_megabatch"]
 
 
 # ---------------------------------------------------------------------------
@@ -181,7 +195,7 @@ def _val_acc(fam, params, X, y):
 
 
 def _train_eval_cohort(fam, params0, Xall, Xall_val, Yall, Yall_val,
-                       vids, yids, hp, c, epochs, masks=None):
+                       vids, yids, hp, c, epochs, masks=None, steps=None):
     """Trace-level core: vmapped Adam ``lax.scan`` fused with the
     validation-accuracy eval.  The trajectory is ``models.adam_train`` — the
     same definition the sequential backend runs — with the learning rate and
@@ -191,9 +205,13 @@ def _train_eval_cohort(fam, params0, Xall, Xall_val, Yall, Yall_val,
 
     ``masks`` is None on exact-shape dispatches; a heterogeneous-shape merge
     passes ``(Wtr (J, N), Wval (J, Nval), Cmask (J, c))`` row/class padding
-    masks and the trial trains through the masked loss (DESIGN.md §12.3)."""
+    masks and the trial trains through the masked loss (DESIGN.md §12.3).
 
-    def one(p0, vid, yid, hp1):
+    ``steps`` is None on uniform-rung dispatches; a cross-rung megabatch
+    passes per-trial step budgets and each trial's scan carry freezes after
+    its own ``steps[i]`` of the ``epochs`` scan slots (DESIGN.md §13.1)."""
+
+    def one(p0, vid, yid, hp1, n_steps):
         X, y = Xall[vid], Yall[yid]
         if masks is None:
             grad_fn = jax.grad(lambda p: fam.loss(p, X, y, c, hp1))
@@ -201,37 +219,42 @@ def _train_eval_cohort(fam, params0, Xall, Xall_val, Yall, Yall_val,
             w, cm = masks[0][yid], masks[2][yid]
             grad_fn = jax.grad(
                 lambda p: masked_loss(fam.name, p, X, y, w, cm, c, hp1))
-        params = adam_train(grad_fn, p0, hp1["lr"], epochs)
+        params = adam_train(grad_fn, p0, hp1["lr"], epochs, n_steps=n_steps)
         if masks is None:
             return params, _val_acc(fam, params, Xall_val[vid], Yall_val[yid])
         return params, masked_accuracy(
             fam.name, params, Xall_val[vid], Yall_val[yid],
             masks[1][yid], masks[2][yid])
 
-    return jax.vmap(one)(params0, vids, yids, hp)
+    if steps is None:
+        # keep the unmasked scan trace: one() closes over n_steps=None
+        return jax.vmap(lambda p0, vid, yid, hp1: one(p0, vid, yid, hp1, None)
+                        )(params0, vids, yids, hp)
+    return jax.vmap(one)(params0, vids, yids, hp, steps)
 
 
 def _keyless_cohort(family, T, Xall, Xall_val, Yall, Yall_val, vids, yids,
-                    hp, c, epochs, masks=None):
+                    hp, c, epochs, masks=None, steps=None):
     """Zero-init families: the init happens inside the traced program."""
     fam = FAMILIES[family]
     p0 = fam.init(None, Xall.shape[2], c, {})
     params0 = jax.tree.map(lambda x: jnp.broadcast_to(x, (T,) + x.shape), p0)
     return _train_eval_cohort(fam, params0, Xall, Xall_val, Yall, Yall_val,
-                              vids, yids, hp, c, epochs, masks)
+                              vids, yids, hp, c, epochs, masks, steps)
 
 
-def _mlp_cohort(seeds, tids, rung_i, fidxs, shapes, depth, wmax, d,
+def _mlp_cohort(seeds, tids, rungs, fidxs, shapes, depth, wmax, d,
                 Xall, Xall_val, Yall, Yall_val, vids, yids, hp, c, epochs,
-                masks=None):
+                masks=None, steps=None):
     """MLP sub-batch: loop-identical per-trial init (same
     ``(seed, trial_id, rung)`` key, actual ``(k, width, c_job)`` shapes)
     scattered to the full-feature / ``wmax``-wide / ``c``-class layout,
     stacked, trained, and evaluated.  ``shapes[i] = (k, width, c_i)`` per
     trial; ``seeds`` is per-trial so merged cohorts derive each trial's key
-    from its own job's seed, and ``c_i`` is the trial's own class count so
-    a heterogeneous merge initializes exactly the solo shapes before
-    class-padding.
+    from its own job's seed, ``rungs`` is per-trial so a cross-rung
+    megabatch folds each trial's *own* rung cursor into its key (§13), and
+    ``c_i`` is the trial's own class count so a heterogeneous merge
+    initializes exactly the solo shapes before class-padding.
 
     Padded rows/columns are zero and stay zero under Adam (zero input
     columns, ``relu'(0) = 0``; padded class logits are masked out of the
@@ -240,7 +263,7 @@ def _mlp_cohort(seeds, tids, rung_i, fidxs, shapes, depth, wmax, d,
     fam = FAMILIES["mlp"]
     plist = []
     for i, (k, width, ci) in enumerate(shapes):
-        key = _trial_key(seeds[i], tids[i], rung_i)   # loop-identical derivation
+        key = _trial_key(seeds[i], tids[i], rungs[i])  # loop-identical derivation
         p0 = fam.init(key, k, ci, {"width": width, "depth": depth})
         layers, L = p0["layers"], len(p0["layers"])
         out = []
@@ -261,7 +284,7 @@ def _mlp_cohort(seeds, tids, rung_i, fidxs, shapes, depth, wmax, d,
         plist.append({"layers": out})
     params0 = jax.tree.map(lambda *xs: jnp.stack(xs), *plist)
     return _train_eval_cohort(fam, params0, Xall, Xall_val, Yall, Yall_val,
-                              vids, yids, hp, c, epochs, masks)
+                              vids, yids, hp, c, epochs, masks, steps)
 
 
 def _closed_cohort(family, Xall, Xall_val, Yall, Yall_val, vids, yids, hp, c,
@@ -292,25 +315,31 @@ class _GroupDesc(NamedTuple):
     shapes: tuple = ()   # mlp: ((k, width, c_trial), ...) per trial
 
 
-def _run_group(desc, gin, rung_i, Xall, Xall_val, Yall, Yall_val, c, d,
+def _run_group(desc, gin, Xall, Xall_val, Yall, Yall_val, c, d,
                epochs, masks=None):
     """Trace-level dispatch of one sub-batch; shared by the fused-rung and
-    per-group (budget) paths, so both run identical math."""
+    per-group (budget) paths, so both run identical math.
+
+    Per-trial rung cursors (MLP key derivation) and step budgets ride in
+    ``gin``: ``gin["rungs"]`` always for MLP sub-batches, ``gin["steps"]``
+    only when the sub-batch mixes step budgets (uniform dispatches keep the
+    unmasked scan trace — §13.1)."""
+    steps = gin.get("steps")
     if desc.kind == "closed":
         return _closed_cohort(desc.family, Xall, Xall_val, Yall, Yall_val,
                               gin["vids"], gin["yids"], gin["hp"], c, masks)
     if desc.kind == "keyless":
         return _keyless_cohort(desc.family, desc.T, Xall, Xall_val, Yall,
                                Yall_val, gin["vids"], gin["yids"], gin["hp"],
-                               c, epochs, masks)
-    return _mlp_cohort(gin["seeds"], gin["tids"], rung_i, gin["fidxs"],
+                               c, epochs, masks, steps)
+    return _mlp_cohort(gin["seeds"], gin["tids"], gin["rungs"], gin["fidxs"],
                        desc.shapes, desc.depth, desc.wmax, d, Xall, Xall_val,
                        Yall, Yall_val, gin["vids"], gin["yids"], gin["hp"],
-                       c, epochs, masks)
+                       c, epochs, masks, steps)
 
 
 @functools.partial(jax.jit, static_argnames=("descs", "c", "d", "epochs"))
-def _eval_rung_fused(rung_i, ginputs, Xparts, Xval_parts, Yall, Yall_val,
+def _eval_rung_fused(ginputs, Xparts, Xval_parts, Yall, Yall_val,
                      masks, *, descs, c: int, d: int, epochs: int):
     """One dispatch for the whole rung: every family sub-batch trains and
     evaluates inside a single jitted program (used when no wall-clock budget
@@ -321,21 +350,23 @@ def _eval_rung_fused(rung_i, ginputs, Xparts, Xval_parts, Yall, Yall_val,
     (and, when job shapes differ, zero-padded to the ``Yall`` row count /
     static ``d``) at trace level; ``masks`` is None for exact-shape
     dispatches, or the (Wtr, Wval, Cmask) padding tensors of a
-    heterogeneous-shape merge (DESIGN.md §12.3)."""
+    heterogeneous-shape merge (DESIGN.md §12.3).  ``epochs`` is the scan
+    length — the max step budget across the dispatch; trials with fewer
+    steps carry their budget in ``gin["steps"]`` (DESIGN.md §13.1)."""
     Xall = _concat_padded(Xparts, Yall.shape[1], d)
     Xall_val = _concat_padded(Xval_parts, Yall_val.shape[1], d)
     return tuple(
-        _run_group(desc, gin, rung_i, Xall, Xall_val, Yall, Yall_val, c, d,
+        _run_group(desc, gin, Xall, Xall_val, Yall, Yall_val, c, d,
                    epochs, masks)
         for desc, gin in zip(descs, ginputs))
 
 
 @functools.partial(jax.jit, static_argnames=("desc", "c", "d", "epochs"))
-def _eval_group(rung_i, gin, Xall, Xall_val, Yall, Yall_val,
+def _eval_group(gin, Xall, Xall_val, Yall, Yall_val,
                 *, desc, c: int, d: int, epochs: int):
     """Single sub-batch dispatch — the budget path, so the engine can check
     the wall clock between sub-batches."""
-    return _run_group(desc, gin, rung_i, Xall, Xall_val, Yall, Yall_val, c, d,
+    return _run_group(desc, gin, Xall, Xall_val, Yall, Yall_val, c, d,
                       epochs)
 
 
@@ -353,16 +384,24 @@ class _TaggedTrial(NamedTuple):
     seed: int        # its job's AutoMLConfig.seed
     vid: int         # index into the merged variant stack
     c: int           # its job's class count (class-padding axis, §12.3)
+    rung: int        # its own rung cursor (MLP key derivation, §13)
+    steps: int       # its own epoch budget at that rung (step mask, §13.1)
 
 
-def _group_subbatches(trials: List[_TaggedTrial], pad_widths: bool, variants):
+def _group_subbatches(trials: List[_TaggedTrial], pad_widths: bool, variants,
+                      epochs_max: int):
     """Group tagged trials by ``(family,) + shape_hps`` into dispatch jobs.
 
     Returns ``[(trial_indices, desc, gin)]`` — one static descriptor plus
     numpy inputs per sub-batch; numpy args are converted during the jit call,
     no eager dispatches.  Trials from different jobs land in the same
     sub-batch whenever family and shape HPs match — that is the cross-job
-    merge."""
+    merge.
+
+    ``epochs_max`` is the dispatch-wide scan length.  Gradient sub-batches
+    whose trials all train exactly ``epochs_max`` steps omit the ``steps``
+    array so uniform (lockstep) dispatches keep the unmasked scan trace;
+    mixed-budget sub-batches carry per-trial step masks (§13.1)."""
     groups: Dict[tuple, List[int]] = {}
     for t_i, t in enumerate(trials):
         hp = dict(t.spec.hp)
@@ -383,8 +422,14 @@ def _group_subbatches(trials: List[_TaggedTrial], pad_widths: bool, variants):
                    for k in fam.hp_grid if k not in fam.shape_hps},
         }
         if fam.fit_closed is not None:
+            # closed-form fits are epochs-independent: no step mask needed
             desc = _GroupDesc("closed", family, len(idxs))
-        elif fam.init_keyless:
+            subbatches.append((idxs, desc, gin))
+            continue
+        if any(trials[i].steps != epochs_max for i in idxs):
+            gin["steps"] = np.asarray([trials[i].steps for i in idxs],
+                                      np.int32)
+        if fam.init_keyless:
             desc = _GroupDesc("keyless", family, len(idxs))
         else:   # mlp
             hps = [dict(trials[i].spec.hp) for i in idxs]
@@ -394,6 +439,7 @@ def _group_subbatches(trials: List[_TaggedTrial], pad_widths: bool, variants):
                            for f, h, i in zip(fidxs, hps, idxs))
             gin["tids"] = np.asarray([trials[i].tid for i in idxs], np.int32)
             gin["seeds"] = np.asarray([trials[i].seed for i in idxs], np.int32)
+            gin["rungs"] = np.asarray([trials[i].rung for i in idxs], np.int32)
             gin["fidxs"] = fidxs
             desc = _GroupDesc("mlp", family, len(idxs),
                               depth=int(hps[0]["depth"]),
@@ -444,12 +490,13 @@ def eval_rung_batched(cohort, tids, rung_i: int, epochs: int, ctx,
 
     trials = [
         _TaggedTrial(0, pos, spec, int(tids[pos]), int(ctx["seed"]),
-                     _variant(ctx, spec.preproc, spec.feature_frac), c)
+                     _variant(ctx, spec.preproc, spec.feature_frac), c,
+                     rung_i, epochs)
         for pos, spec in enumerate(cohort)
     ]
     Xall_tr, Xall_val = _variant_stack(ctx)
     variants = {v["id"]: v for v in ctx["variant_cache"].values()}
-    subbatches = _group_subbatches(trials, pad_widths, variants)
+    subbatches = _group_subbatches(trials, pad_widths, variants, epochs)
     budget_active = ctx.get("budget_active", False)
 
     common = (Xall_tr, Xall_val, ctx["y_tr_j"][None], ctx["y_val_j"][None])
@@ -460,14 +507,13 @@ def eval_rung_batched(cohort, tids, rung_i: int, epochs: int, ctx,
         for idxs, desc, gin in subbatches:
             if out_of_budget() and evaluated:
                 break
-            params_b, vaccs = _eval_group(rung_i, gin, *common,
+            params_b, vaccs = _eval_group(gin, *common,
                                           desc=desc, c=c, d=d, epochs=epochs)
             jax.block_until_ready(vaccs)
             evaluated.append((idxs, vaccs, desc.family, params_b))
     else:
         # the whole rung is one jitted program
-        outs = _eval_rung_fused(rung_i,
-                                tuple(gin for (_i, _d, gin) in subbatches),
+        outs = _eval_rung_fused(tuple(gin for (_i, _d, gin) in subbatches),
                                 (Xall_tr,), (Xall_val,),
                                 ctx["y_tr_j"][None], ctx["y_val_j"][None], None,
                                 descs=tuple(d_ for (_i, d_, _g) in subbatches),
@@ -511,13 +557,46 @@ def eval_rung_cohorts(cohorts: List[TrialCohort],
     No mid-rung time-budget support: the scheduler only merges jobs without
     ``time_budget_s`` (budgeted jobs run solo via ``eval_rung_batched``).
     """
-    if collect_params is None:
-        collect_params = any(tc.collect for tc in cohorts)
     rung_i, epochs = cohorts[0].rung_i, cohorts[0].epochs
     for tc in cohorts[1:]:
         if tc.rung_i != rung_i or tc.epochs != epochs:
             raise ValueError("eval_rung_cohorts: cohorts must share "
                              "(rung_i, epochs)")
+    return _eval_cohorts(cohorts, collect_params)
+
+
+def eval_trial_megabatch(cohorts: List[TrialCohort],
+                         collect_params=None) -> List[Tuple[list, list]]:
+    """Continuous rung batching (DESIGN.md §13): one fused dispatch for
+    cohorts at *different* rungs.
+
+    Same merge semantics as ``eval_rung_cohorts`` — trials tag their job
+    slot, data variant, labels, and (for MLP) init key — plus two per-trial
+    degrees of freedom from ``TrialCohort.trial_rungs`` / ``trial_steps``:
+
+    - each MLP trial folds its *own* rung cursor into its init key, so a
+      rung-0 trial and a rung-2 trial in the same dispatch derive exactly
+      the keys their solo runs would;
+    - each gradient trial carries its own step budget; the shared Adam scan
+      runs ``max(steps)`` slots and shorter trials freeze their carry after
+      their own budget (``models.adam_train(n_steps=...)``).
+
+    Both are inert-padding tricks: for the steps a trial actually takes the
+    update math is bitwise the sequential path, so an exact-shape megabatch
+    is bit-identical to lockstep dispatch and a hetero-shape one matches to
+    ~1e-6 (the §12.3 reduction-order caveat).  Returns per-job
+    ``(scored, positions)`` pairs in input order."""
+    return _eval_cohorts(cohorts, collect_params)
+
+
+def _eval_cohorts(cohorts: List[TrialCohort],
+                  collect_params=None) -> List[Tuple[list, list]]:
+    """Shared merge core for ``eval_rung_cohorts``/``eval_trial_megabatch``:
+    tags trials (with their own rung cursor and step budget), pads shapes,
+    groups sub-batches, and runs the fused dispatch."""
+    if collect_params is None:
+        collect_params = any(tc.collect for tc in cohorts)
+    epochs = max(max(tc.trial_steps) for tc in cohorts)   # scan length
     shapes = [tc.shape for tc in cohorts]
     hetero = len(set(shapes)) > 1
     N_max = max(s[0] for s in shapes)
@@ -531,16 +610,19 @@ def eval_rung_cohorts(cohorts: List[TrialCohort],
     # stack: merged vid = job's offset + local vid
     local = []
     for slot, tc in enumerate(cohorts):
+        rungs, steps = tc.trial_rungs, tc.trial_steps
         for pos, spec in enumerate(tc.specs):
             lvid = _variant(tc.ctx, spec.preproc, spec.feature_frac)
             local.append((slot, pos, spec, int(tc.tids[pos]),
-                          int(tc.ctx["seed"]), lvid))
+                          int(tc.ctx["seed"]), lvid,
+                          int(rungs[pos]), int(steps[pos])))
     offsets = np.concatenate([[0], np.cumsum(
         [len(tc.ctx["variant_cache"]) for tc in cohorts])])
     trials = [_TaggedTrial(slot, pos, spec, tid, seed,
                            int(offsets[slot]) + lvid,
-                           int(cohorts[slot].ctx["n_classes"]))
-              for (slot, pos, spec, tid, seed, lvid) in local]
+                           int(cohorts[slot].ctx["n_classes"]),
+                           rung, nsteps)
+              for (slot, pos, spec, tid, seed, lvid, rung, nsteps) in local]
 
     stacks = [_variant_stack(tc.ctx) for tc in cohorts]
     if hetero:
@@ -571,9 +653,8 @@ def eval_rung_cohorts(cohorts: List[TrialCohort],
         for v in tc.ctx["variant_cache"].values():
             variants[int(offsets[slot]) + v["id"]] = v
 
-    subbatches = _group_subbatches(trials, pad_widths, variants)
-    outs = _eval_rung_fused(rung_i,
-                            tuple(gin for (_i, _d, gin) in subbatches),
+    subbatches = _group_subbatches(trials, pad_widths, variants, epochs)
+    outs = _eval_rung_fused(tuple(gin for (_i, _d, gin) in subbatches),
                             tuple(s[0] for s in stacks),
                             tuple(s[1] for s in stacks),
                             Yall_tr, Yall_val, masks,

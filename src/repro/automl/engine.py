@@ -274,6 +274,14 @@ class SearchState:
     rung_times: List[float] = dataclasses.field(default_factory=list)
     n_done: int = 0
     stopped: bool = False              # budget cutoff fired after a rung
+    # per-trial rung cursors (DESIGN.md §13.2): ``trial_rung[tid]`` is the
+    # rung the trial trains *next*.  Within one search every live trial sits
+    # at ``rung_i`` (SH promotion needs the whole cohort scored before
+    # anyone advances), but the cursors are what a megabatch dispatch reads:
+    # trials from *different* searches carry different cursors into one
+    # standing dispatch (``batched.eval_trial_megabatch``), and a culled
+    # trial's cursor simply stops advancing — it has left the megabatch.
+    trial_rung: Dict[int, int] = dataclasses.field(default_factory=dict)
 
     @property
     def done(self) -> bool:
@@ -325,6 +333,7 @@ def search_init(
     return SearchState(
         config=config, classes=classes, ctx=ctx, specs=specs,
         alive_ids=list(range(len(specs))), t_start=t_start,
+        trial_rung={i: 0 for i in range(len(specs))},
     )
 
 
@@ -346,15 +355,23 @@ class TrialCohort(NamedTuple):
 
     Every search emits ``TrialCohort``s regardless of which strategy found
     its subset or which backend evaluates it — this is the currency the
-    scheduler's cross-job merge layers trade in (``batched.
-    eval_rung_cohorts``): same-shaped cohorts fuse exactly, differently-
-    shaped ones fuse through maximal-shape padding (DESIGN.md §12.3)."""
+    scheduler's cross-job merge layers trade in: same-shaped cohorts fuse
+    exactly, differently-shaped ones fuse through maximal-shape padding
+    (DESIGN.md §12.3), and cohorts sitting at *different* rungs fuse through
+    per-trial step masks (``batched.eval_trial_megabatch``, §13).
+
+    ``rungs``/``steps`` carry each trial's rung cursor and remaining epoch
+    budget (from ``SearchState.trial_rung``); the scalar ``rung_i``/
+    ``epochs`` remain the uniform-rung view used by the same-rung merge
+    entry (``eval_rung_cohorts``) and the lockstep scheduler buckets."""
     specs: list            # PipelineSpec per live trial
     tids: list             # trial ids (PRNG key derivation)
     rung_i: int
     epochs: int
     collect: bool          # params wanted (final rung / budget active)
     ctx: dict              # the SearchState evaluation context
+    rungs: tuple = ()      # per-trial rung cursors (§13.2)
+    steps: tuple = ()      # per-trial epoch budgets at those cursors
 
     @property
     def shape(self):
@@ -362,11 +379,24 @@ class TrialCohort(NamedTuple):
         return (self.ctx["X_tr"].shape[0], self.ctx["X_val"].shape[0],
                 self.ctx["X_tr"].shape[1], self.ctx["n_classes"])
 
+    @property
+    def trial_rungs(self):
+        """Per-trial rungs, defaulting to the uniform ``rung_i``."""
+        return self.rungs if self.rungs else (self.rung_i,) * len(self.specs)
+
+    @property
+    def trial_steps(self):
+        """Per-trial step budgets, defaulting to the uniform ``epochs``."""
+        return self.steps if self.steps else (self.epochs,) * len(self.specs)
+
 
 def search_trial_cohort(state: SearchState) -> TrialCohort:
     """The current rung of ``state`` as a ``TrialCohort``."""
     cohort, tids, epochs, collect = search_cohort(state)
-    return TrialCohort(cohort, tids, state.rung_i, epochs, collect, state.ctx)
+    rungs = tuple(state.trial_rung.get(t, state.rung_i) for t in tids)
+    steps = tuple(int(state.config.rungs[r]) for r in rungs)
+    return TrialCohort(cohort, tids, state.rung_i, epochs, collect, state.ctx,
+                       rungs, steps)
 
 
 def search_record(state: SearchState, scored, positions, rung_time: float) -> None:
@@ -391,6 +421,10 @@ def search_record(state: SearchState, scored, positions, rung_time: float) -> No
         surv.sort(key=lambda i: (-scored[i][1], i))
     state.alive_ids = [state.alive_ids[positions[i]] for i in surv]
     state.rung_i += 1
+    # survivors' cursors advance to the next rung; culled trials keep their
+    # last cursor — they have left the standing megabatch (DESIGN.md §13.2)
+    for tid in state.alive_ids:
+        state.trial_rung[tid] = state.rung_i
     if state.out_of_budget():
         state.stopped = True
 

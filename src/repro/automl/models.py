@@ -265,14 +265,24 @@ def masked_accuracy(family: str, params, X, y, w, cmask):
 # ---------------------------------------------------------------------------
 
 
-def adam_train(grad_fn, params0, lr, epochs: int):
+def adam_train(grad_fn, params0, lr, epochs: int, n_steps=None):
     """Full-batch Adam ``lax.scan`` shared by both engine backends.
 
     This is the single definition of the training trajectory: the sequential
     path (``_train_gd``) and the batched cohort path
     (``batched._train_eval_cohort``) both call it, which is what keeps
     same-seed loop/batched parity bit-for-bit (DESIGN.md §10.4).  Works at
-    trace level; ``lr`` may be a static float or a traced scalar."""
+    trace level; ``lr`` may be a static float or a traced scalar.
+
+    ``n_steps`` is the per-trial **step mask** of continuous rung batching
+    (DESIGN.md §13.1): a traced scalar bounding how many of the ``epochs``
+    scan steps actually update this trial.  Steps ``t >= n_steps`` compute
+    (and discard) a gradient but select the previous ``(params, m, v)``
+    carry unchanged, so a trial with 2 remaining epochs trains exactly 2
+    steps inside a neighbor's 8-step scan — bit-identical to a solo
+    ``epochs=n_steps`` run, since ``where(True, new, old)`` is exact and the
+    bias-correction index ``t`` advances with the scan slot either way.
+    ``n_steps=None`` keeps the unmasked trace (every step active)."""
     flat0, tree = jax.tree.flatten(params0)
     m0 = [jnp.zeros_like(x) for x in flat0]
     v0 = [jnp.zeros_like(x) for x in flat0]
@@ -280,14 +290,18 @@ def adam_train(grad_fn, params0, lr, epochs: int):
     def step(carry, t):
         flat, m, v = carry
         g = jax.tree.leaves(grad_fn(jax.tree.unflatten(tree, flat)))
-        m = [0.9 * mi + 0.1 * gi for mi, gi in zip(m, g)]
-        v = [0.999 * vi + 0.001 * gi ** 2 for vi, gi in zip(v, g)]
+        m_n = [0.9 * mi + 0.1 * gi for mi, gi in zip(m, g)]
+        v_n = [0.999 * vi + 0.001 * gi ** 2 for vi, gi in zip(v, g)]
         tcorr = t + 1
-        flat = [
+        flat_n = [
             fi - lr * (mi / (1 - 0.9 ** tcorr)) / (jnp.sqrt(vi / (1 - 0.999 ** tcorr)) + 1e-8)
-            for fi, mi, vi in zip(flat, m, v)
+            for fi, mi, vi in zip(flat, m_n, v_n)
         ]
-        return (flat, m, v), None
+        if n_steps is None:
+            return (flat_n, m_n, v_n), None
+        active = t < n_steps
+        sel = lambda new, old: [jnp.where(active, a, b) for a, b in zip(new, old)]
+        return (sel(flat_n, flat), sel(m_n, m), sel(v_n, v)), None
 
     (flat, _, _), _ = jax.lax.scan(step, (flat0, m0, v0), jnp.arange(epochs),
                                    unroll=8)

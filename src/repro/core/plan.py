@@ -71,6 +71,10 @@ class Plan:
     sub_automl: AutoMLConfig = AutoMLConfig()
     ft_automl: AutoMLConfig = AutoMLConfig(n_trials=6, rungs=(60,))
     backend: Optional[str] = None
+    # opt into the scheduler's standing cross-rung megabatch (DESIGN.md §13).
+    # Off, the job still merges, but only with cohorts at its exact
+    # (rung_i, epochs) — the pre-§13 lockstep behavior.
+    continuous_batching: bool = True
 
     def __post_init__(self):
         if not callable(self.strategy):
@@ -122,6 +126,7 @@ def plan(
     sub_automl: Optional[AutoMLConfig] = None,
     ft_automl: Optional[AutoMLConfig] = None,
     backend: Optional[str] = None,
+    continuous_batching: bool = True,
     **strategy_opts,
 ) -> Plan:
     """Build a ``Plan``; extra keyword arguments become strategy options.
@@ -134,7 +139,8 @@ def plan(
     if ft_automl is not None:
         kw["ft_automl"] = ft_automl
     return Plan(strategy=strategy, strategy_opts=_norm_opts(strategy_opts),
-                n=n, m=m, fine_tune=fine_tune, backend=backend, **kw)
+                n=n, m=m, fine_tune=fine_tune, backend=backend,
+                continuous_batching=continuous_batching, **kw)
 
 
 def plan_from_config(config, dst_fn: Optional[Callable] = None) -> Plan:

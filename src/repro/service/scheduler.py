@@ -27,13 +27,22 @@ search.  Work merges across jobs at two layers:
   strategy (``StrategySpec.batch_fn`` — Gen-DST and its island variant) on
   same-shaped datasets run their searches in one vmapped dispatch
   (``gen_dst_batch``), bit-identical per search to solo execution.
-- **sub_automl / fine_tune**: jobs at the same ``(rung_i, epochs)`` merge
-  their rung cohorts into one dispatch of the batched engine
-  (``batched.eval_rung_cohorts``).  Same-shaped jobs merge exactly
-  (DESIGN.md §11.4); differently-shaped jobs merge through maximal-shape
-  padding with row/class masks (§12.3) when ``hetero_merge`` is on and no
-  job would pad more than ``hetero_pad_limit``× its own row count.  Merged
-  wall time is attributed to participants in equal shares.
+- **sub_automl / fine_tune**: ready rung cohorts pack into one standing
+  **megabatch** per step — continuous rung batching (DESIGN.md §13).  A
+  cohort joins the dispatch at *any* rung: each trial carries its own rung
+  cursor and epoch budget into the batched engine
+  (``batched.eval_trial_megabatch``), which runs shorter trials as
+  step-masked passengers of the longest scan.  Admission is governed by a
+  single **waste budget**: a group is packed only while its padded compute
+  (every trial priced at the group-maximal rows × features × classes ×
+  steps) stays within ``waste_budget``× the useful compute
+  (``merge_waste``) — one policy across row, class, *and* step padding,
+  subsuming the per-axis ``hetero_pad_limit`` heuristic (deprecated).
+  Same-shaped cohorts merge exactly regardless of rung (bit-identical per
+  trial — §13.3); differently-shaped ones merge through maximal-shape
+  padding with row/class masks (§12.3) when ``hetero_merge`` is on.
+  ``megabatch=False`` restores lockstep ``(rung_i, epochs)`` bucketing.
+  Merged wall time is attributed to participants in equal shares.
 
 The DST cache keys on the plan's subset identity —
 ``(fingerprint, n, m, measure, (strategy, strategy_opts))`` — so *every*
@@ -46,7 +55,7 @@ from __future__ import annotations
 import dataclasses
 import time
 import warnings
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -65,7 +74,8 @@ from ..core.substrat import (
 from .cache import DSTCache, DSTCacheEntry, dst_cache_key
 from .fingerprint import dataset_fingerprint
 
-__all__ = ["Scheduler", "SubStratJob", "PHASES"]
+__all__ = ["CohortMeta", "Scheduler", "SubStratJob", "PHASES",
+           "merge_waste", "pack_megabatches"]
 
 PHASES = ("factorize", "dst", "warm_wait", "sub_automl", "fine_tune",
           "done", "failed")
@@ -84,6 +94,78 @@ def _plan_measure(plan: Plan) -> str:
         if k == "measure":
             return v
     return "entropy"
+
+
+# ---------------------------------------------------------------------------
+# megabatch packing policy (DESIGN.md §13.2) — pure, host-side, testable
+# ---------------------------------------------------------------------------
+
+
+class CohortMeta(NamedTuple):
+    """The packing-relevant summary of one ready rung cohort."""
+    shape: Tuple[int, int, int, int]   # (N_tr, N_val, d, n_classes)
+    steps: Tuple[int, ...]             # per-trial epoch budgets this rung
+
+
+def _padded_unit(metas: Sequence[CohortMeta]) -> float:
+    """Per-trial padded cost under the group-maximal shape and scan length:
+    ``(steps_max · Ntr_max + Nval_max) · d_max · c_max``.  Train cost scales
+    with steps; the fused validation eval is one pass."""
+    ntr = max(m.shape[0] for m in metas)
+    nval = max(m.shape[1] for m in metas)
+    d = max(m.shape[2] for m in metas)
+    c = max(m.shape[3] for m in metas)
+    smax = max(max(m.steps) for m in metas)
+    return float((smax * ntr + nval) * d * c)
+
+
+def merge_waste(metas: Sequence[CohortMeta]) -> float:
+    """Padded-to-useful compute ratio of merging ``metas`` into one dispatch.
+
+    Every trial in the merged dispatch costs the group-maximal padded unit;
+    its useful compute is its *own* ``(steps·N_tr + N_val)·d·c``.  The ratio
+    is a single waste measure across all padding axes — rows, features,
+    classes, *and* scan steps — so a cohort narrow in rows but wide in
+    classes (or short in steps) is priced correctly, which the old per-axis
+    ``hetero_pad_limit`` check was not (it ignored classes and steps).
+    A singleton uniform cohort scores exactly 1.0."""
+    total = sum(len(m.steps) for m in metas) * _padded_unit(metas)
+    useful = sum((st * m.shape[0] + m.shape[1]) * m.shape[2] * m.shape[3]
+                 for m in metas for st in m.steps)
+    return total / useful
+
+
+def pack_megabatches(metas: Sequence[CohortMeta], waste_budget: float,
+                     same_shape_only: bool = False) -> List[List[int]]:
+    """Pack ready cohorts into megabatch groups under the waste budget.
+
+    Deterministic first-fit-decreasing: cohorts are visited in descending
+    per-cohort padded cost (stable on input order), and each joins the first
+    group whose combined ``merge_waste`` stays ``<= waste_budget`` — big
+    cohorts seed groups, small ones ride along only where the padding they
+    would absorb is paid for by the dispatches they save.
+    ``same_shape_only`` (the ``hetero_merge=False`` regime) additionally
+    requires exact data-shape equality, so every group stays a bit-identical
+    merge regardless of rung mix.  Returns groups of indices into ``metas``;
+    every index appears in exactly one group (singletons allowed — a lone
+    cohort always fits its own group)."""
+    order = sorted(range(len(metas)),
+                   key=lambda i: (-_padded_unit([metas[i]]), i))
+    groups: List[List[int]] = []
+    for i in order:
+        placed = False
+        for g in groups:
+            if same_shape_only and metas[g[0]].shape != metas[i].shape:
+                continue
+            if merge_waste([metas[j] for j in g + [i]]) <= waste_budget:
+                g.append(i)
+                placed = True
+                break
+        if not placed:
+            groups.append([i])
+    for g in groups:
+        g.sort()   # job order within a dispatch follows submission order
+    return groups
 
 
 @dataclasses.dataclass
@@ -135,11 +217,23 @@ class Scheduler:
 
     def __init__(self, cache: Optional[DSTCache] = None, *,
                  warm_start: bool = True, hetero_merge: bool = True,
-                 hetero_pad_limit: float = 4.0, batch_dst: bool = False):
+                 megabatch: bool = True, waste_budget: float = 4.0,
+                 hetero_pad_limit: Optional[float] = None,
+                 batch_dst: bool = False):
         self.cache = cache if cache is not None else DSTCache()
         self.warm_start = warm_start
         self.hetero_merge = hetero_merge
-        self.hetero_pad_limit = hetero_pad_limit
+        # continuous rung batching (DESIGN.md §13): one standing cross-rung
+        # dispatch per step instead of lockstep (rung_i, epochs) buckets
+        self.megabatch = megabatch
+        if hetero_pad_limit is not None:
+            warnings.warn(
+                "hetero_pad_limit is deprecated: row/class/step padding is "
+                "now governed by the single waste_budget policy "
+                "(merge_waste <= waste_budget); the passed value is used as "
+                "waste_budget", DeprecationWarning, stacklevel=2)
+            waste_budget = hetero_pad_limit
+        self.waste_budget = waste_budget
         # vmap same-shaped concurrent cache-miss searches (gen_dst_batch).
         # Bit-identical per search; a device-utilization play — fills
         # parallel hardware, roughly neutral-to-negative on one CPU core
@@ -150,8 +244,14 @@ class Scheduler:
         self.merged_rungs = 0   # merged dispatches issued
         self.merged_jobs = 0    # job-rungs that rode a merged dispatch
         self.hetero_rungs = 0   # merged dispatches that needed shape padding
+        self.mixed_rungs = 0    # merged dispatches spanning >1 (rung, epochs)
         self.solo_rungs = 0     # rungs evaluated per-job
         self.merged_dst = 0     # subset searches that rode a batched dispatch
+
+    @property
+    def hetero_pad_limit(self) -> float:
+        """Deprecated alias of ``waste_budget`` (kept for introspection)."""
+        return self.waste_budget
 
     # -- submission ---------------------------------------------------------
 
@@ -464,26 +564,22 @@ class Scheduler:
         return (st.rung_i, int(cfg.rungs[st.rung_i]))
 
     def _plan_bucket(self, bucket: List[SubStratJob]):
-        """Split one ``(rung_i, epochs)`` bucket into merged groups + solos.
+        """Split one ``(rung_i, epochs)`` bucket into merged groups + solos
+        (the lockstep ``megabatch=False`` regime).
 
         Same-shaped jobs merge exactly.  Differently-shaped jobs merge into
         one padded dispatch when ``hetero_merge`` is on and the bucket's
-        row-count spread stays within ``hetero_pad_limit`` (beyond that,
-        padding waste outweighs the saved dispatches); otherwise each shape
+        aggregate ``merge_waste`` — one measure across row, feature, *and*
+        class padding — stays within ``waste_budget``; otherwise each shape
         class merges separately."""
+        cohorts = {id(job): search_trial_cohort(job.search) for job in bucket}
         by_shape: Dict[tuple, List[SubStratJob]] = {}
         for job in bucket:
-            by_shape.setdefault(search_trial_cohort(job.search).shape,
-                                []).append(job)
+            by_shape.setdefault(cohorts[id(job)].shape, []).append(job)
         if len(by_shape) > 1 and self.hetero_merge:
-            # every padded axis — train rows, val rows, features — must stay
-            # within the waste limit (a d=6 job padded into a d=600 group
-            # would burn ~100x FLOPs per trial regardless of row counts)
-            within = all(
-                max(s[axis] for s in by_shape)
-                <= self.hetero_pad_limit * min(s[axis] for s in by_shape)
-                for axis in (0, 1, 2))
-            if within:
+            metas = [CohortMeta(tc.shape, tc.trial_steps)
+                     for tc in cohorts.values()]
+            if merge_waste(metas) <= self.waste_budget:
                 return [bucket], []
         merged, solo = [], []
         for group in by_shape.values():
@@ -493,15 +589,42 @@ class Scheduler:
                 solo.append(group[0])
         return merged, solo
 
-    def _dispatch_rungs(self, ready: List[SubStratJob]) -> None:
-        from ..automl.batched import eval_rung_cohorts
+    def _run_merged(self, group: List[SubStratJob], cohorts, eval_fn) -> None:
+        """Dispatch one packed group through ``eval_fn`` and record every
+        job's rung; merged wall time is shared equally by participants."""
+        t0 = time.perf_counter()
+        try:
+            outs = eval_fn(cohorts)
+        except Exception as e:   # noqa: BLE001 — isolate job failures
+            for job in group:
+                self._fail(job, e)
+            return
+        share = (time.perf_counter() - t0) / len(group)
+        if len(group) > 1:
+            self.merged_rungs += 1
+            self.merged_jobs += len(group)
+            self.hetero_rungs += int(len({tc.shape for tc in cohorts}) > 1)
+            self.mixed_rungs += int(
+                len({(tc.rung_i, tc.epochs) for tc in cohorts}) > 1)
+        else:
+            self.solo_rungs += 1
+        for job, (scored, positions) in zip(group, outs):
+            search_record(job.search, scored, positions, share)
+            key = _PHASE_TIME_KEY[job.phase]
+            job.times[key] = job.times.get(key, 0.0) + share
 
+    def _dispatch_rungs(self, ready: List[SubStratJob]) -> None:
+        from ..automl.batched import eval_rung_cohorts, eval_trial_megabatch
+
+        mega: List[SubStratJob] = []
         buckets: Dict[object, List[SubStratJob]] = {}
         solo: List[SubStratJob] = []
         for job in ready:
             rkey = self._rung_key(job)
             if rkey is None:
                 solo.append(job)
+            elif self.megabatch and job.plan.continuous_batching:
+                mega.append(job)
             else:
                 buckets.setdefault(rkey, []).append(job)
         merged = []
@@ -524,25 +647,22 @@ class Scheduler:
             key = _PHASE_TIME_KEY[job.phase]
             job.times[key] = job.times.get(key, 0.0) + (time.perf_counter() - t0)
 
+        if mega:
+            # the standing megabatch (§13): every ready cohort, any rung,
+            # packed under the waste budget; hetero_merge=False restricts
+            # groups to exact shapes so every merge stays bit-identical
+            cohorts = [search_trial_cohort(j.search) for j in mega]
+            metas = [CohortMeta(tc.shape, tc.trial_steps) for tc in cohorts]
+            for gidx in pack_megabatches(metas, self.waste_budget,
+                                         same_shape_only=not self.hetero_merge):
+                self._run_merged([mega[i] for i in gidx],
+                                 [cohorts[i] for i in gidx],
+                                 eval_trial_megabatch)
+
         for group in merged:
-            cohorts = [search_trial_cohort(j.search) for j in group]
-            hetero = len({tc.shape for tc in cohorts}) > 1
-            t0 = time.perf_counter()
-            try:
-                outs = eval_rung_cohorts(cohorts)
-            except Exception as e:   # noqa: BLE001
-                for job in group:
-                    self._fail(job, e)
-                continue
-            # the merged rung's wall time is shared equally by its jobs
-            share = (time.perf_counter() - t0) / len(group)
-            self.merged_rungs += 1
-            self.merged_jobs += len(group)
-            self.hetero_rungs += int(hetero)
-            for job, (scored, positions) in zip(group, outs):
-                search_record(job.search, scored, positions, share)
-                key = _PHASE_TIME_KEY[job.phase]
-                job.times[key] = job.times.get(key, 0.0) + share
+            self._run_merged(group,
+                             [search_trial_cohort(j.search) for j in group],
+                             eval_rung_cohorts)
 
     # -- the cooperative loop ----------------------------------------------
 
@@ -607,6 +727,7 @@ class Scheduler:
             "merged_rungs": self.merged_rungs,
             "merged_jobs": self.merged_jobs,
             "hetero_rungs": self.hetero_rungs,
+            "mixed_rungs": self.mixed_rungs,
             "solo_rungs": self.solo_rungs,
             "merged_dst": self.merged_dst,
         }

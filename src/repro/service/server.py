@@ -67,6 +67,9 @@ class SubStratServer:
         cache_policy: str = "lru",
         warm_start: bool = True,
         hetero_merge: bool = True,
+        megabatch: bool = True,
+        waste_budget: float = 4.0,
+        hetero_pad_limit: Optional[float] = None,   # deprecated: waste_budget
         batch_dst: bool = False,
         tenant_budgets: Optional[Dict[str, float]] = None,
     ):
@@ -74,6 +77,8 @@ class SubStratServer:
             DSTCache(cache_capacity, byte_budget=cache_byte_budget,
                      policy=cache_policy),
             warm_start=warm_start, hetero_merge=hetero_merge,
+            megabatch=megabatch, waste_budget=waste_budget,
+            hetero_pad_limit=hetero_pad_limit,
             batch_dst=batch_dst)
         self.tenants: Dict[str, TenantAccount] = {}
         for tenant, budget in (tenant_budgets or {}).items():

@@ -1,0 +1,424 @@
+"""Continuous rung batching (DESIGN.md §13): step-masked fits, the
+scheduler-wide megabatch packing policy, and property-test hardening of the
+scheduler's dispatch invariants.
+
+Layers under test, bottom up:
+
+- ``models.adam_train(n_steps=...)`` — a step-masked trial inside a longer
+  scan must be bit-identical to a solo run of its own length (§13.1);
+- ``batched.eval_trial_megabatch`` — cross-rung same-shape merges are
+  bit-identical to solo execution, and resuming a search across a rung
+  boundary into a megabatch changes nothing (§13.3);
+- ``scheduler.merge_waste`` / ``pack_megabatches`` — packing is an exact
+  partition, respects the waste budget, is deterministic, and prices class
+  padding (the axis the old per-axis ``hetero_pad_limit`` guard ignored);
+- the ``Scheduler`` dispatch loop — property-based: random job fleets must
+  dispatch every trial exactly once per rung, never train a trial past its
+  rung's epoch budget, and never pack a group beyond the waste budget.
+
+Property tests use ``hypothesis`` when installed and fall back to the
+deterministic ``_hyp_fallback`` shim otherwise (CI runs both legs).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                    # minimal environments
+    from _hyp_fallback import given, settings, strategies as st
+
+from repro.automl.engine import (
+    AutoMLConfig, automl_fit, search_init, search_record, search_result,
+    search_trial_cohort,
+)
+from repro.automl.models import adam_train
+from repro.core.plan import plan
+from repro.service import SubStratServer
+from repro.service.scheduler import (
+    CohortMeta, Scheduler, merge_waste, pack_megabatches,
+)
+
+
+def _make(seed, N=240, d=6, c=2):
+    r = np.random.default_rng(seed)
+    y = r.integers(0, c, N)
+    X = np.column_stack(
+        [y * 1.4 + r.normal(0, 0.9, N) for _ in range(d)]).astype(np.float32)
+    return X, y
+
+
+# ---------------------------------------------------------------------------
+# §13.1 step mask: a short trial inside a long scan is bitwise its solo run
+# ---------------------------------------------------------------------------
+
+
+def _quad_grad(target):
+    return jax.grad(lambda p: sum(jnp.sum((x - t) ** 2)
+                                  for x, t in zip(p, target)))
+
+
+def test_adam_step_mask_bit_identical():
+    p0 = [jnp.asarray([0.0, 1.0, -2.0]), jnp.asarray([[3.0, -1.0]])]
+    target = [jnp.asarray([1.0, -1.0, 0.5]), jnp.asarray([[0.0, 2.0]])]
+    grad_fn = _quad_grad(target)
+    for k in (0, 1, 3, 8):
+        solo = adam_train(grad_fn, p0, 0.05, k)
+        masked = adam_train(grad_fn, p0, 0.05, 8, n_steps=jnp.asarray(k))
+        for a, b in zip(solo, masked):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_adam_step_mask_vmapped_mixed_budgets():
+    """One vmapped scan, per-trial budgets — each row equals its solo run."""
+    p0 = [jnp.asarray([0.0, 1.0, -2.0])]
+    grad_fn = _quad_grad([jnp.asarray([1.0, -1.0, 0.5])])
+    budgets = jnp.asarray([2, 8, 5, 0])
+    stacked = [jnp.broadcast_to(p0[0], (4,) + p0[0].shape)]
+    out = jax.vmap(
+        lambda p, n: adam_train(grad_fn, [p[0]], 0.05, 8, n_steps=n)
+    )(stacked, budgets)
+    for row, k in enumerate(np.asarray(budgets)):
+        solo = adam_train(grad_fn, p0, 0.05, int(k))
+        np.testing.assert_array_equal(np.asarray(out[0][row]),
+                                      np.asarray(solo[0]))
+
+
+# ---------------------------------------------------------------------------
+# §13.3 engine-level parity: cross-rung megabatch == solo, bit for bit
+# ---------------------------------------------------------------------------
+
+
+def _run_megabatched_pair(stA, stB):
+    """Drive A one rung ahead, then dispatch A(rung 1) with B(rung 0) in one
+    cross-rung megabatch, then finish B solo.  Exercises per-trial rung
+    cursors and step masks on the real batched engine."""
+    from repro.automl.batched import eval_trial_megabatch
+
+    (outA,) = eval_trial_megabatch([search_trial_cohort(stA)])
+    search_record(stA, *outA, 0.0)
+    tcA, tcB = search_trial_cohort(stA), search_trial_cohort(stB)
+    assert set(tcA.trial_rungs) == {1} and set(tcB.trial_rungs) == {0}
+    assert tcA.trial_steps != tcB.trial_steps    # genuinely mixed budgets
+    outA, outB = eval_trial_megabatch([tcA, tcB])
+    search_record(stA, *outA, 0.0)
+    search_record(stB, *outB, 0.0)
+    (outB,) = eval_trial_megabatch([search_trial_cohort(stB)])
+    search_record(stB, *outB, 0.0)
+    assert stA.done and stB.done
+
+
+@pytest.fixture(scope="module")
+def megabatch_parity():
+    cfg = lambda s: AutoMLConfig(n_trials=6, rungs=(5, 12), seed=s,
+                                 backend="batched")
+    XA, yA = _make(0)
+    XB, yB = _make(1)
+    solo = (automl_fit(XA, yA, config=cfg(0)),
+            automl_fit(XB, yB, config=cfg(1)))
+    stA = search_init(XA, yA, config=cfg(0))
+    stB = search_init(XB, yB, config=cfg(1))
+    _run_megabatched_pair(stA, stB)
+    return solo, (search_result(stA), search_result(stB))
+
+
+def test_cross_rung_megabatch_bit_identical(megabatch_parity):
+    solo, mega = megabatch_parity
+    for ref, got in zip(solo, mega):
+        assert got.spec == ref.spec
+        assert [s for s, _ in got.trials] == [s for s, _ in ref.trials]
+        np.testing.assert_array_equal([v for _, v in got.trials],
+                                      [v for _, v in ref.trials])
+
+
+def test_resume_across_rung_boundary(megabatch_parity):
+    """A search advanced solo past a rung boundary and then merged into a
+    megabatch is bit-identical to its uninterrupted run — the per-trial
+    cursors carry exactly the state the next rung needs."""
+    (refA, _), (gotA, _) = megabatch_parity
+    assert gotA.val_acc == refA.val_acc
+    np.testing.assert_array_equal(
+        np.asarray(jax.tree.leaves(gotA.params)[0]),
+        np.asarray(jax.tree.leaves(refA.params)[0]))
+
+
+def test_cursors_advance_only_for_survivors():
+    """Promotion advances exactly the surviving trials' cursors; culled
+    trials leave the megabatch with their cursor frozen."""
+    from repro.automl.batched import eval_trial_megabatch
+
+    X, y = _make(3)
+    st_ = search_init(X, y, config=AutoMLConfig(
+        n_trials=8, rungs=(4, 9), keep_frac=0.5, backend="batched"))
+    assert st_.trial_rung == {i: 0 for i in range(8)}
+    (out,) = eval_trial_megabatch([search_trial_cohort(st_)])
+    search_record(st_, *out, 0.0)
+    survivors = set(st_.alive_ids)
+    assert 0 < len(survivors) < 8
+    for tid, rung in st_.trial_rung.items():
+        assert rung == (1 if tid in survivors else 0)
+
+
+# ---------------------------------------------------------------------------
+# packing policy: waste pricing + the class-padding regression
+# ---------------------------------------------------------------------------
+
+
+def test_merge_waste_prices_class_padding():
+    """Satellite regression: a cohort narrow in rows but wide in classes.
+    The old guard compared axes (rows, val rows, features) only, so seven
+    c=2 jobs padded 12x across the class axis slipped through; the unified
+    waste measure prices it."""
+    narrow = [CohortMeta((200, 70, 6, 2), (15,) * 6) for _ in range(7)]
+    wide = CohortMeta((180, 60, 6, 24), (15,) * 6)
+    # the old per-axis row/feature check would admit this bucket
+    shapes = [m.shape for m in narrow + [wide]]
+    assert all(max(s[a] for s in shapes) <= 4.0 * min(s[a] for s in shapes)
+               for a in (0, 1, 2))
+    assert merge_waste(narrow + [wide]) > 4.0
+    metas = narrow + [wide]
+    groups = pack_megabatches(metas, 4.0)
+    # the all-in-one merge is refused; whatever does share a dispatch with
+    # the wide cohort stays within the budget
+    assert len(groups) > 1
+    wide_group = next(g for g in groups if 7 in g)
+    assert merge_waste([metas[i] for i in wide_group]) <= 4.0
+
+
+def test_merge_waste_prices_step_padding():
+    """Scan-length padding counts at identical data shapes.  A single
+    1-epoch cohort rides a 60-epoch scan almost for free (that asymmetry is
+    the point of continuous batching), but a *fleet* of short cohorts
+    padded to one long scan is priced and split."""
+    short = CohortMeta((200, 70, 6, 2), (1,) * 6)
+    long_ = CohortMeta((200, 70, 6, 2), (60,) * 6)
+    assert merge_waste([short]) == pytest.approx(1.0)
+    assert merge_waste([short, long_]) < 4.0          # lone passenger: cheap
+    fleet = [short] * 7 + [long_]
+    assert merge_waste(fleet) > 4.0
+    for g in pack_megabatches(fleet, 4.0):
+        assert merge_waste([fleet[i] for i in g]) <= 4.0
+    assert len(pack_megabatches(fleet, 4.0)) > 1
+
+
+def test_lockstep_plan_bucket_rejects_class_padding():
+    """The fixed lockstep guard (megabatch=False) refuses the narrow-rows/
+    wide-classes bucket end to end: no dispatched group mixes class counts."""
+    from repro.automl import batched
+
+    log = []
+    real = batched.eval_rung_cohorts
+
+    def spy(cohorts, collect_params=None):
+        log.append([tc.shape for tc in cohorts])
+        return real(cohorts, collect_params)
+
+    sched = Scheduler(megabatch=False)
+    pl = plan("random", fine_tune=False,
+              sub_automl=AutoMLConfig(n_trials=4, rungs=(4,)))
+    for i in range(7):
+        X, y = _make(10 + i, 150, 5, 2)
+        sched.submit(X, y, key=jax.random.key(i), plan=pl)
+    Xw, yw = _make(20, 400, 5, 20)
+    sched.submit(Xw, yw, key=jax.random.key(9), plan=pl)
+    batched.eval_rung_cohorts = spy
+    try:
+        sched.run()
+    finally:
+        batched.eval_rung_cohorts = real
+    assert all(j.phase == "done" for j in sched.jobs.values())
+    for shapes in log:
+        assert len({s[3] for s in shapes}) == 1   # never mixes class counts
+
+
+# ---------------------------------------------------------------------------
+# property tests: pack_megabatches invariants
+# ---------------------------------------------------------------------------
+
+
+def _random_metas(rng):
+    metas = []
+    for _ in range(int(rng.integers(1, 11))):
+        shape = (int(rng.integers(20, 3000)), int(rng.integers(8, 1000)),
+                 int(rng.integers(2, 30)), int(rng.integers(2, 13)))
+        steps = tuple(int(rng.integers(1, 61))
+                      for _ in range(int(rng.integers(1, 9))))
+        metas.append(CohortMeta(shape, steps))
+    return metas
+
+
+@settings(max_examples=40)
+@given(st.integers(0, 10**6), st.floats(1.2, 10.0))
+def test_pack_megabatches_invariants(seed, budget):
+    rng = np.random.default_rng(seed)
+    metas = _random_metas(rng)
+    groups = pack_megabatches(metas, budget)
+    # exact partition: every cohort in exactly one group
+    flat = sorted(i for g in groups for i in g)
+    assert flat == list(range(len(metas)))
+    # every multi-cohort group respects the waste budget
+    for g in groups:
+        if len(g) > 1:
+            assert merge_waste([metas[i] for i in g]) <= budget + 1e-9
+    # deterministic
+    assert pack_megabatches(metas, budget) == groups
+    # same_shape_only groups never mix shapes and never mask rows/classes
+    for g in pack_megabatches(metas, budget, same_shape_only=True):
+        assert len({metas[i].shape for i in g}) == 1
+
+
+@settings(max_examples=20)
+@given(st.integers(0, 10**6))
+def test_merge_waste_bounds(seed):
+    rng = np.random.default_rng(seed)
+    metas = _random_metas(rng)
+    for m in metas:
+        if len(set(m.steps)) == 1:
+            assert merge_waste([m]) == pytest.approx(1.0)
+        else:
+            assert merge_waste([m]) >= 1.0
+    # merging can only add padding: waste >= any member's solo waste
+    assert merge_waste(metas) >= max(merge_waste([m]) for m in metas) - 1e-12
+
+
+# ---------------------------------------------------------------------------
+# property tests: scheduler dispatch invariants under random job fleets
+# ---------------------------------------------------------------------------
+
+_RUNG_MENU = ((4,), (2, 5), (3, 8), (5,), (2, 4, 7))
+
+
+def _fake_eval(log):
+    """Stand-in for ``eval_trial_megabatch``: deterministic accuracies keyed
+    by (job seed, trial id), no device work.  Records every dispatch."""
+    def fake(cohorts, collect_params=None):
+        log.append(cohorts)
+        outs = []
+        for tc in cohorts:
+            scored = []
+            for pos, spec in enumerate(tc.specs):
+                tid = int(tc.tids[pos])
+                vacc = ((int(tc.ctx["seed"]) * 31 + tid * 7) % 97) / 97.0
+                scored.append((spec, vacc, {}, np.arange(2), {}))
+            outs.append((scored, list(range(len(tc.specs)))))
+        return outs
+    return fake
+
+
+@settings(max_examples=15)
+@given(st.integers(0, 10**6), st.floats(1.5, 8.0))
+def test_scheduler_dispatch_invariants(seed, budget):
+    """Random fleets of jobs (random shapes, rung ladders, trial counts):
+
+    - every submitted trial is dispatched exactly once per rung it survives,
+    - a trial never trains past its rung's epoch budget,
+    - no dispatched group exceeds the configured waste budget,
+    - every job completes."""
+    from repro.automl import batched
+
+    rng = np.random.default_rng(seed)
+    n_jobs = int(rng.integers(2, 7))
+    sched = Scheduler(megabatch=True, waste_budget=budget)
+    rungs_of = {}
+    for i in range(n_jobs):
+        rungs = _RUNG_MENU[int(rng.integers(0, len(_RUNG_MENU)))]
+        n_trials = int(rng.integers(2, 7))
+        X, y = _make(100 + i, int(rng.integers(40, 400)),
+                     int(rng.integers(3, 9)), int(rng.integers(2, 5)))
+        pl = plan("random", fine_tune=False,
+                  sub_automl=AutoMLConfig(n_trials=n_trials, rungs=rungs,
+                                          seed=i, backend="batched"))
+        jid = sched.submit(X, y, key=jax.random.key(i), plan=pl)
+        rungs_of[i] = rungs
+        assert jid == i
+    log = []
+    real = batched.eval_trial_megabatch
+    batched.eval_trial_megabatch = _fake_eval(log)
+    try:
+        sched.run()
+    finally:
+        batched.eval_trial_megabatch = real
+
+    assert all(j.phase == "done" for j in sched.jobs.values())
+    dispatched = {}                       # (job seed, tid, rung) -> count
+    for group in log:
+        if len(group) > 1:
+            metas = [CohortMeta(tc.shape, tc.trial_steps) for tc in group]
+            assert merge_waste(metas) <= budget + 1e-9
+        for tc in group:
+            job_seed = int(tc.ctx["seed"])
+            for pos, tid in enumerate(tc.tids):
+                rung = tc.trial_rungs[pos]
+                steps = tc.trial_steps[pos]
+                # budget: exactly this rung's epochs, never beyond
+                assert steps == rungs_of[job_seed][rung]
+                key = (job_seed, int(tid), rung)
+                dispatched[key] = dispatched.get(key, 0) + 1
+    # exactly-once per (job, trial, rung)
+    assert dispatched and set(dispatched.values()) == {1}
+    # every job's rung 0 dispatched its full population
+    for i, rungs in rungs_of.items():
+        n0 = sum(1 for (j, _t, r) in dispatched if j == i and r == 0)
+        assert n0 == sched.jobs[i].plan.sub_automl.n_trials
+
+
+# ---------------------------------------------------------------------------
+# server-level parity: megabatch vs lockstep bucketing on identical seeds
+# ---------------------------------------------------------------------------
+
+
+def test_server_megabatch_matches_lockstep():
+    """Acceptance: continuous megabatch and lockstep bucketed dispatch agree
+    on winner specs, with trial accuracies within 1e-6, across a fleet with
+    mixed rung ladders and mixed shapes."""
+    from repro.core.gen_dst import GenDSTConfig
+
+    ladders = ((10, 25), (20,), (10, 25), (15,))
+    dims = ((300, 6, 2), (300, 6, 2), (240, 7, 3), (300, 6, 2))
+    datasets = [_make(50 + i, *dims[i]) for i in range(4)]
+    results = {}
+    for mode in (True, False):
+        srv = SubStratServer(warm_start=False, megabatch=mode)
+        ids = []
+        for i, (X, y) in enumerate(datasets):
+            pl = plan("gen_dst", cfg=GenDSTConfig(psi=3, phi=8),
+                      fine_tune=False,
+                      sub_automl=AutoMLConfig(n_trials=5, rungs=ladders[i],
+                                              backend="batched"))
+            ids.append(srv.submit(X, y, key=jax.random.key(i), plan=pl))
+        srv.run()
+        results[mode] = [srv.result(j) for j in ids]
+        if mode:
+            stats = srv.stats()
+            assert stats["merged_rungs"] >= 1
+            assert stats["mixed_rungs"] >= 1    # genuinely out of lockstep
+    for mega, lock in zip(results[True], results[False]):
+        assert mega.final.spec == lock.final.spec
+        np.testing.assert_array_equal(mega.row_idx, lock.row_idx)
+        got = [v for _s, v in mega.final.trials]
+        ref = [v for _s, v in lock.final.trials]
+        np.testing.assert_allclose(got, ref, atol=1e-6)
+
+
+def test_plan_opt_out_keeps_lockstep():
+    """continuous_batching=False jobs never enter a mixed-rung dispatch."""
+    from repro.automl import batched
+
+    log = []
+    real = batched.eval_trial_megabatch
+    sched = Scheduler()
+    for i, ladder in enumerate(((3,), (2, 5))):
+        X, y = _make(70 + i, 120, 5, 2)
+        pl = plan("random", fine_tune=False, continuous_batching=False,
+                  sub_automl=AutoMLConfig(n_trials=3, rungs=ladder,
+                                          seed=i, backend="batched"))
+        sched.submit(X, y, key=jax.random.key(i), plan=pl)
+    batched.eval_trial_megabatch = _fake_eval(log)
+    try:
+        sched.run()
+    finally:
+        batched.eval_trial_megabatch = real
+    assert log == []                    # nothing rode the megabatch path
+    assert all(j.phase == "done" for j in sched.jobs.values())

@@ -232,16 +232,37 @@ def test_server_merges_hetero_jobs():
         assert got.final.val_acc == pytest.approx(ref.final.val_acc, abs=1e-6)
 
 
-def test_server_pad_limit_guards_waste():
-    """Jobs whose row counts differ beyond hetero_pad_limit do not pad-merge
-    (each shape class still merges/solos on its own)."""
-    small, big = _make(1, 120, 6, 2), _make(2, 4000, 6, 2)
+def test_server_waste_budget_guards_padding():
+    """A fleet of small jobs does not all pad-merge into one big job's
+    dispatch: aggregate merge_waste caps each packed group, so most small
+    cohorts group among themselves instead of burning ~25x padded compute
+    as passengers of the big one."""
+    from repro.service.scheduler import CohortMeta, merge_waste
+
+    small = [_make(1 + i, 150, 6, 2) for i in range(7)]
+    big = _make(40, 4000, 6, 2)
     srv = SubStratServer(warm_start=False)
-    assert srv.scheduler.hetero_pad_limit < 4000 / 120
-    for i, (X, y) in enumerate((small, big)):
+    # the all-in-one merge would exceed the budget the scheduler enforces
+    metas = [CohortMeta((112, 38, 6, 2), (15,) * 5) for _ in small]
+    metas.append(CohortMeta((3000, 1000, 6, 2), (15,) * 5))
+    assert merge_waste(metas) > srv.scheduler.waste_budget
+    for i, (X, y) in enumerate(small + [big]):
         srv.submit(X, y, key=jax.random.key(i), plan=SERVE_PLAN)
     srv.run()
-    assert srv.stats()["hetero_rungs"] == 0
+    stats = srv.stats()
+    # the small jobs still merge with each other (same shape, no padding)
+    assert stats["merged_rungs"] >= 1
+    # but at least one packed group had to exclude the oversized job: with
+    # 8 jobs and a respected budget there is more than one dispatch per step
+    assert stats["merged_jobs"] < 8 * stats["merged_rungs"]
+
+
+def test_server_hetero_pad_limit_deprecated():
+    """The legacy knob still works but warns, and maps onto waste_budget."""
+    with pytest.warns(DeprecationWarning, match="hetero_pad_limit"):
+        srv = SubStratServer(hetero_pad_limit=2.5)
+    assert srv.scheduler.waste_budget == 2.5
+    assert srv.scheduler.hetero_pad_limit == 2.5
 
 
 def test_server_batched_dst_opt_in():
