@@ -71,8 +71,8 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--skip", nargs="*", default=[],
                     help="section names to skip (table4 fig2 fig3 fig4 fig5 "
-                         "kernels gen_dst automl service hetero_merge "
-                         "continuous_batching roofline)")
+                         "kernels gen_dst automl service service_transport "
+                         "hetero_merge continuous_batching roofline)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write each section's rows to a machine-readable "
                          "JSON file (perf trajectory tracking across PRs)")
@@ -111,6 +111,8 @@ def main() -> None:
         sections.append(("automl", lambda: _run_automl(quick)))
     if "service" not in args.skip:
         sections.append(("service", lambda: _run_service(quick)))
+    if "service_transport" not in args.skip:
+        sections.append(("service_transport", lambda: _run_transport(quick)))
     if "hetero_merge" not in args.skip:
         sections.append(("hetero_merge", lambda: _run_hetero(quick)))
     if "continuous_batching" not in args.skip:
@@ -211,6 +213,18 @@ def _run_service(quick):
         rows = service_rows(n_jobs=8, N=2_000, d=10, quick_tag="2k")
     else:
         rows = service_rows(n_jobs=8, N=10_000, d=14, quick_tag="10k")
+    rows = [(name, round(us, 1), derived) for name, us, derived in rows]
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return _rowdicts(("name", "us", "derived"), rows)
+
+
+def _run_transport(quick):
+    _section("Cross-process serving tier: in-process vs 1 vs 2 worker "
+             "subprocesses + crash recovery overhead (name,us,derived)")
+    from .transport_bench import transport_rows
+    rows = transport_rows(n_jobs=4, N=512 if quick else 2_000,
+                          quick_tag="quick" if quick else "full")
     rows = [(name, round(us, 1), derived) for name, us, derived in rows]
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,109 @@
+"""Cross-process serving-tier benchmark (DESIGN.md §14): what the wire +
+worker-subprocess transport costs relative to the in-process scheduler, how
+throughput moves from 1 to 2 workers, and what recovering from a killed
+worker adds on top.
+
+The workload is ``n_jobs`` jobs over two synthetic datasets with *distinct
+feature counts*, scheduled with ``hetero_merge=False`` so the two shape
+groups stay separate dispatches — that gives the pool two concurrent tasks
+per step, which is what a second worker can actually absorb.  Budgets are
+deliberately tiny: the section measures transport overhead (serialization,
+queue hops, worker boot, re-dispatch), not engine throughput, and every
+worker subprocess pays its own jit compiles — a real deployment amortizes
+those across jobs, so the 1-worker row is dominated by that one-time cost
+on this smoke-sized workload.
+
+Rows:
+
+- ``transport_inprocess``   in-process ``Scheduler`` baseline
+- ``transport_workers1``    ``ProcessWorkerPool(1)`` — pure wire overhead
+- ``transport_workers2``    ``ProcessWorkerPool(2)`` — 2 concurrent tasks
+- ``transport_recovery``    ``ProcessWorkerPool(2)`` with worker 0 killed at
+  its first task: the front end re-dispatches the orphaned cohorts; derived
+  shows the recovery overhead vs the fault-free 2-worker run
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.automl.engine import AutoMLConfig
+from repro.core.plan import plan
+from repro.service import DistributedScheduler, ProcessWorkerPool, Scheduler
+
+PLAN = plan(
+    "gen_dst", n=24, m=4,
+    sub_automl=AutoMLConfig(n_trials=6, rungs=(2, 4)),
+    ft_automl=AutoMLConfig(n_trials=2, rungs=(2,)),
+    psi=4, phi=10,
+)
+
+
+def _make_data(seed: int, N: int, d: int, c: int = 3):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(N, d)).astype(np.float32)
+    y = (np.arange(N) % c).astype(np.int64)
+    return X, y
+
+
+def _workload(n_jobs: int, N: int):
+    # two distinct feature counts -> two shape groups -> two tasks per step
+    datasets = [_make_data(11, N, 6), _make_data(23, N, 10)]
+    return [datasets[i % 2] for i in range(n_jobs)]
+
+
+def _run(jobs, make_scheduler):
+    sched = make_scheduler()
+    try:
+        t0 = time.perf_counter()
+        for i, (X, y) in enumerate(jobs):
+            sched.submit(X, y, key=jax.random.key(i), plan=PLAN)
+        sched.run()
+        dt = time.perf_counter() - t0
+        return dt, sched.stats()
+    finally:
+        if hasattr(sched, "close"):
+            sched.close()
+
+
+def transport_rows(n_jobs: int = 4, N: int = 512, quick_tag: str = "quick"):
+    """Returns ``(name, us, derived)`` rows for the ``service_transport``
+    bench section."""
+    jobs = _workload(n_jobs, N)
+
+    # warmup: pay the front end's jit compiles once (workers always pay
+    # their own — that cost is part of what this section measures)
+    _run(jobs, lambda: Scheduler(hetero_merge=False))
+    t_local, _ = _run(jobs, lambda: Scheduler(hetero_merge=False))
+
+    def distributed(n_workers, fault_events=()):
+        pool = ProcessWorkerPool(n_workers, fault_events=fault_events)
+        return DistributedScheduler(pool, stall_timeout_s=120.0,
+                                    hetero_merge=False)
+
+    t_w1, s_w1 = _run(jobs, lambda: distributed(1))
+    t_w2, s_w2 = _run(jobs, lambda: distributed(2))
+    t_rec, s_rec = _run(jobs, lambda: distributed(2, ((0, 0, "kill", 0.0),)))
+
+    rows = [
+        (f"transport_inprocess_{n_jobs}jobs_{quick_tag}", t_local * 1e6,
+         f"jobs={n_jobs}"),
+        (f"transport_workers1_{n_jobs}jobs_{quick_tag}", t_w1 * 1e6,
+         f"overhead={t_w1 / max(t_local, 1e-9):.2f}x "
+         f"remote_tasks={s_w1['transport']['remote_tasks']}"),
+        (f"transport_workers2_{n_jobs}jobs_{quick_tag}", t_w2 * 1e6,
+         f"speedup_vs_1w={t_w1 / max(t_w2, 1e-9):.2f}x "
+         f"remote_tasks={s_w2['transport']['remote_tasks']}"),
+        (f"transport_recovery_{n_jobs}jobs_{quick_tag}", t_rec * 1e6,
+         f"recovery_overhead_s={t_rec - t_w2:.2f} "
+         f"worker_failures={s_rec['transport']['worker_failures']} "
+         f"redispatched={s_rec['transport']['redispatched_tasks']}"),
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in transport_rows():
+        print(f"{name},{us:.1f},{derived}")

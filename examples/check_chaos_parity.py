@@ -1,0 +1,43 @@
+"""Diff two ``serve_tabular.py --json`` artifacts for result parity.
+
+    python examples/check_chaos_parity.py BASELINE.json CHAOS.json
+
+Used by the CI chaos gate: a run with ``--workers 2 --kill-worker 0`` must
+produce the same winner family/preproc and the same trial accuracies
+(within 1e-6) as the fault-free in-process run — crash recovery may cost
+time, never answers.  When the second artifact ran on the cross-process
+tier, also asserts its transport stats actually saw the injected failure
+(so the gate can't silently pass because the kill never fired).
+"""
+import json
+import sys
+
+
+def main(baseline_path: str, chaos_path: str) -> None:
+    base = json.load(open(baseline_path))
+    chaos = json.load(open(chaos_path))
+    a, b = base["jobs"], chaos["jobs"]
+    assert len(a) == len(b), f"job count differs: {len(a)} vs {len(b)}"
+    for ja, jb in zip(a, b):
+        ctx = f"job {ja['job']} ({ja['dataset']})"
+        assert ja["family"] == jb["family"], \
+            f"{ctx}: family {ja['family']} vs {jb['family']}"
+        assert ja["preproc"] == jb["preproc"], \
+            f"{ctx}: preproc {ja['preproc']} vs {jb['preproc']}"
+        assert abs(ja["test_acc"] - jb["test_acc"]) <= 1e-6, \
+            f"{ctx}: test_acc {ja['test_acc']} vs {jb['test_acc']}"
+        for kind in ("trials", "sub_trials"):
+            assert len(ja[kind]) == len(jb[kind]), f"{ctx}: {kind} length"
+            for x, y in zip(ja[kind], jb[kind]):
+                assert abs(x - y) <= 1e-6, f"{ctx}: {kind} {x} vs {y}"
+    tr = chaos.get("transport")
+    if tr is not None and tr["workers_total"] > tr["workers_alive"]:
+        assert tr["worker_failures"] >= 1, tr
+        assert tr["redispatched_tasks"] >= 1, tr
+        print(f"transport saw {tr['worker_failures']} worker failure(s), "
+              f"{tr['redispatched_tasks']} re-dispatched task(s)")
+    print(f"chaos parity OK: {len(a)} jobs identical within 1e-6")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1], sys.argv[2])

@@ -1,7 +1,9 @@
 """Serving walkthrough: the multi-tenant SubStrat job server.
 
     PYTHONPATH=src python examples/serve_tabular.py [--jobs 4] [--scale 0.3]
-                                                    [--trials 8]
+                                                    [--trials 8] [--workers 2]
+                                                    [--kill-worker 0]
+                                                    [--json out.json]
 
 Submits ``--jobs`` AutoML jobs in same-dataset pairs over two tabular
 datasets — so every odd job is a repeat submission — from two tenants,
@@ -13,8 +15,19 @@ and how rung cohorts from concurrent jobs merged into shared batched
 dispatches.  Ends with the per-tenant accounting and a budget-rejection
 demo.  ``--jobs 2 --scale 0.1 --trials 4`` is the CI smoke configuration
 (job 1 is a cache-hit repeat of job 0).
+
+With ``--workers N`` the same jobs run on the cross-process serving tier
+instead: rung evaluations ship over the versioned wire format to ``N``
+worker subprocesses (DESIGN.md §14).  ``--kill-worker W [--kill-task T]``
+injects a deterministic crash — worker ``W`` exits hard when it dequeues
+its ``T``-th task — and the front end detects the loss, re-dispatches the
+orphaned cohorts to the survivors, and still produces the fault-free
+answer.  ``--json PATH`` writes per-job results (winner family, test
+accuracy, trial accuracies) so a chaos run can be diffed against a
+fault-free run; the CI chaos gate does exactly that.
 """
 import argparse
+import json
 import sys
 from pathlib import Path
 
@@ -26,7 +39,9 @@ from repro.automl.engine import AutoMLConfig  # noqa: E402
 from repro.core.gen_dst import GenDSTConfig  # noqa: E402
 from repro.core.plan import plan  # noqa: E402
 from repro.data.tabular import PAPER_DATASETS, make_dataset, train_test_split  # noqa: E402
-from repro.service import BudgetExceeded, SubStratServer  # noqa: E402
+from repro.service import (  # noqa: E402
+    BudgetExceeded, DistributedScheduler, ProcessWorkerPool, SubStratServer,
+)
 
 
 def main():
@@ -38,7 +53,22 @@ def main():
                     help="dataset row-count scale (0.1 = smoke size)")
     ap.add_argument("--trials", type=int, default=8,
                     help="AutoML trial budget of the sub pass")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="run rung evaluation on N worker subprocesses "
+                         "(0 = in-process scheduler, the default)")
+    ap.add_argument("--kill-worker", type=int, default=None, metavar="W",
+                    help="chaos: worker W exits hard when it dequeues its "
+                         "--kill-task'th task (requires --workers)")
+    ap.add_argument("--kill-task", type=int, default=0, metavar="T",
+                    help="which dequeue of worker W triggers the kill "
+                         "(default 0 = its first task)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write per-job results (family, test acc, trial "
+                         "accuracies) + transport stats as JSON for parity "
+                         "diffs between chaos and fault-free runs")
     args = ap.parse_args()
+    if args.kill_worker is not None and args.workers <= 0:
+        ap.error("--kill-worker requires --workers >= 1")
 
     datasets = []
     for name in ("D3", "D6"):
@@ -52,7 +82,21 @@ def main():
         ft_automl=AutoMLConfig(n_trials=4, rungs=(80,)),
     )
 
-    srv = SubStratServer()
+    if args.workers > 0:
+        # fault events are primitive tuples (worker, task, action, seconds) —
+        # the same shape tests/harness/faultsim.py compiles FaultPlans to
+        events = ()
+        if args.kill_worker is not None:
+            events = ((args.kill_worker, args.kill_task, "kill", 0.0),)
+            print(f"chaos: worker {args.kill_worker} will exit at its "
+                  f"task #{args.kill_task}")
+        print(f"starting {args.workers} worker subprocess(es)...", flush=True)
+        pool = ProcessWorkerPool(args.workers, fault_events=events)
+        srv = SubStratServer(
+            scheduler=DistributedScheduler(pool, stall_timeout_s=120.0))
+    else:
+        srv = SubStratServer()
+
     ids = []
     for i in range(args.jobs):
         name, Xtr, ytr, Xte, yte = datasets[(i // 2) % len(datasets)]
@@ -63,30 +107,55 @@ def main():
         print(f"submitted job {jid} ({name}, tenant "
               f"{'acme' if i % 2 == 0 else 'globex'})")
 
-    srv.run()
+    try:
+        srv.run()
 
-    print("\njob  dataset  phase  dst      sub-automl  result")
-    for jid, name in ids:
-        st = srv.poll(jid)
-        res = srv.result(jid)
-        dst = ("cache-hit" if st.cache_hit else
-               f"{st.times['gen_dst_s']:.2f}s")
-        sub = ("warm-start" if st.warm_started else
-               f"{st.times.get('automl_sub_s', 0.0):.2f}s")
-        print(f"{jid:>3}  {name:>7}  {st.phase:>5}  {dst:>8}  {sub:>10}  "
-              f"{res.final.spec.family}, test-acc "
-              f"{res.final.test_acc:.3f}, {res.total_time_s:.2f}s")
+        print("\njob  dataset  phase  dst      sub-automl  result")
+        records = []
+        for jid, name in ids:
+            st = srv.poll(jid)
+            res = srv.result(jid)
+            dst = ("cache-hit" if st.cache_hit else
+                   f"{st.times['gen_dst_s']:.2f}s")
+            sub = ("warm-start" if st.warm_started else
+                   f"{st.times.get('automl_sub_s', 0.0):.2f}s")
+            print(f"{jid:>3}  {name:>7}  {st.phase:>5}  {dst:>8}  {sub:>10}  "
+                  f"{res.final.spec.family}, test-acc "
+                  f"{res.final.test_acc:.3f}, {res.total_time_s:.2f}s")
+            records.append({
+                "job": jid, "dataset": name,
+                "family": res.final.spec.family,
+                "preproc": res.final.spec.preproc,
+                "test_acc": float(res.final.test_acc),
+                "trials": [float(v) for _, v in res.final.trials],
+                "sub_trials": [float(v) for _, v in res.intermediate.trials],
+            })
 
-    stats = srv.stats()
-    print(f"\ncache: {stats['cache']['hits']} hits / "
-          f"{stats['cache']['misses']} misses, {stats['cache']['size']} DSTs")
-    print(f"rung dispatches: {stats['merged_rungs']} merged "
-          f"(covering {stats['merged_jobs']} job-rungs, "
-          f"{stats['hetero_rungs']} shape-padded), "
-          f"{stats['solo_rungs']} solo")
-    for tenant, acc in stats["tenants"].items():
-        print(f"tenant {tenant}: {acc['jobs_submitted']} jobs, "
-              f"{acc['spent_s']:.2f}s compute")
+        stats = srv.stats()
+        print(f"\ncache: {stats['cache']['hits']} hits / "
+              f"{stats['cache']['misses']} misses, {stats['cache']['size']} DSTs")
+        print(f"rung dispatches: {stats['merged_rungs']} merged "
+              f"(covering {stats['merged_jobs']} job-rungs, "
+              f"{stats['hetero_rungs']} shape-padded), "
+              f"{stats['solo_rungs']} solo")
+        if "transport" in stats:
+            tr = stats["transport"]
+            print(f"transport: {tr['remote_tasks']} remote tasks, "
+                  f"{tr['worker_failures']} worker failures, "
+                  f"{tr['redispatched_tasks']} re-dispatched, "
+                  f"{tr['workers_alive']}/{tr['workers_total']} workers alive")
+        for tenant, acc in stats["tenants"].items():
+            print(f"tenant {tenant}: {acc['jobs_submitted']} jobs, "
+                  f"{acc['spent_s']:.2f}s compute")
+
+        if args.json:
+            payload = {"jobs": records,
+                       "transport": stats.get("transport")}
+            Path(args.json).write_text(json.dumps(payload, indent=2))
+            print(f"wrote {args.json}")
+    finally:
+        if hasattr(srv.scheduler, "close"):
+            srv.scheduler.close()
 
     # budget accounting: a tenant over its budget is refused at submit
     srv.set_budget("acme", 1e-6)

@@ -43,7 +43,7 @@ __all__ = [
     "apply_pipeline", "sh_promote", "SearchState", "search_init",
     "search_cohort", "search_record", "search_result", "search_eval_rung",
     "TrialCohort", "search_trial_cohort", "register_backend", "get_backend",
-    "available_backends", "BACKENDS",
+    "available_backends", "BACKENDS", "search_snapshot", "search_restore",
 ]
 
 # preprocessor and feature-fraction axes of the pipeline search space
@@ -458,6 +458,87 @@ def search_result(
         trials=state.trials_log,
         rung_times=state.rung_times,
         backend=state.config.backend,
+    )
+
+
+# context keys that cross process boundaries; the jnp mirrors and the
+# per-backend caches are derived state, rebuilt on restore
+_CTX_SNAPSHOT_KEYS = ("X_tr", "y_tr", "X_val", "y_val", "n_classes", "seed",
+                      "budget_active")
+
+
+def _materialize_scored(scored):
+    """Resolve the batched backend's lazy param thunks into real pytrees so
+    a scored rung can cross a process boundary (DESIGN.md §14.2)."""
+    out = []
+    for spec, vacc, params, fidx, stats in scored:
+        if callable(params):
+            params = params()
+        out.append((spec, float(vacc), params, fidx, stats))
+    return out
+
+
+def search_snapshot(state: SearchState) -> dict:
+    """A wire-serializable snapshot of one search (DESIGN.md §14.4).
+
+    Captures exactly the state ``search_restore`` needs to continue the
+    search bit-identically in another process: the config, the sampled
+    population and survivor cursors, the trial log, and the raw evaluation
+    data.  Derived device state (jnp label mirrors, the pipe/variant
+    caches) is dropped and rebuilt — it is a pure function of the data, so
+    resuming reproduces the uninterrupted run exactly.  Lazy param thunks
+    in the last scored rung are materialized (wire refuses callables)."""
+    ctx = state.ctx
+    return {
+        "config": state.config,
+        "classes": np.asarray(state.classes),
+        "specs": list(state.specs),
+        "alive_ids": [int(i) for i in state.alive_ids],
+        "rung_i": int(state.rung_i),
+        "live": _materialize_scored(state.live),
+        "trials_log": [(s, float(v)) for s, v in state.trials_log],
+        "rung_times": [float(t) for t in state.rung_times],
+        "n_done": int(state.n_done),
+        "stopped": bool(state.stopped),
+        "trial_rung": {int(k): int(v) for k, v in state.trial_rung.items()},
+        "elapsed_s": time.perf_counter() - state.t_start,
+        "ctx": {k: ctx[k] for k in _CTX_SNAPSHOT_KEYS},
+    }
+
+
+def search_restore(snap: dict) -> SearchState:
+    """Rebuild a ``SearchState`` from a ``search_snapshot`` payload.
+
+    The restored search continues from the exact rung boundary the
+    snapshot captured; finishing it produces the same winner spec and the
+    same trial accuracies as the uninterrupted run (tested across a real
+    process boundary in tests/test_wire.py)."""
+    ctx = dict(snap["ctx"])
+    ctx["X_tr"] = np.asarray(ctx["X_tr"], np.float32)
+    ctx["X_val"] = np.asarray(ctx["X_val"], np.float32)
+    ctx["y_tr"] = np.asarray(ctx["y_tr"])
+    ctx["y_val"] = np.asarray(ctx["y_val"])
+    ctx["y_tr_j"] = jnp.asarray(ctx["y_tr"])
+    ctx["y_val_j"] = jnp.asarray(ctx["y_val"])
+    ctx["n_classes"] = int(ctx["n_classes"])
+    ctx["seed"] = int(ctx["seed"])
+    ctx["budget_active"] = bool(ctx["budget_active"])
+    ctx["pipe_cache"] = {}
+    ctx["variant_cache"] = {}
+    return SearchState(
+        config=snap["config"],
+        classes=np.asarray(snap["classes"]),
+        ctx=ctx,
+        specs=list(snap["specs"]),
+        alive_ids=[int(i) for i in snap["alive_ids"]],
+        t_start=time.perf_counter() - float(snap["elapsed_s"]),
+        rung_i=int(snap["rung_i"]),
+        live=[tuple(t) for t in snap["live"]],
+        trials_log=[tuple(t) for t in snap["trials_log"]],
+        rung_times=list(snap["rung_times"]),
+        n_done=int(snap["n_done"]),
+        stopped=bool(snap["stopped"]),
+        trial_rung={int(k): int(v) for k, v in snap["trial_rung"].items()},
     )
 
 

@@ -26,8 +26,8 @@ from typing import Any, Optional, Tuple
 import jax
 import numpy as np
 
-__all__ = ["save_checkpoint", "restore_latest", "restore_resharded",
-           "latest_step", "CheckpointManager"]
+__all__ = ["save_checkpoint", "restore_latest", "restore_latest_untyped",
+           "restore_resharded", "latest_step", "CheckpointManager"]
 
 
 def _tree_paths(tree):
@@ -136,6 +136,45 @@ def restore_latest(ckpt_dir, template: Any, *, verify: bool = True) -> Optional[
                 lambda arr, t: jax.numpy.asarray(arr, t.dtype), tree, template
             ), step
         except (IOError, ValueError):
+            continue
+    return None
+
+
+def restore_latest_untyped(ckpt_dir, *, verify: bool = True):
+    """Restore the newest complete checkpoint *without* a pytree template.
+
+    Returns ``(leaves, step)`` with the leaves as host arrays in manifest
+    order — for callers whose checkpointed state is an opaque blob whose
+    shape cannot be known before reading it (the serving tier checkpoints
+    its wire-encoded scheduler state as one variable-length uint8 leaf, so
+    the template-shape contract of ``restore_latest`` cannot apply).
+    Corrupt checkpoints are skipped in favour of older complete ones."""
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = sorted(
+        (int(p.name.split("_")[1]) for p in ckpt_dir.glob("step_????????")
+         if (p / "COMMIT").exists()),
+        reverse=True,
+    )
+    for s in steps:
+        path = ckpt_dir / f"step_{s:08d}"
+        try:
+            manifest = json.loads((path / "manifest.json").read_text())
+            leaves = []
+            for rec in manifest["leaves"]:
+                f = path / rec["file"]
+                if verify:
+                    digest = hashlib.sha256(f.read_bytes()).hexdigest()
+                    if digest != rec["sha256"]:
+                        raise IOError(f"hash mismatch in {f}")
+                arr = _restore_dtype(np.load(f), rec["dtype"], rec["shape"])
+                if list(arr.shape) != list(rec["shape"]):
+                    raise ValueError(
+                        f"shape mismatch {arr.shape} vs {rec['shape']}")
+                leaves.append(arr)
+            return leaves, manifest["step"]
+        except (IOError, ValueError, KeyError, json.JSONDecodeError):
             continue
     return None
 

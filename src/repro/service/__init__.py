@@ -1,5 +1,5 @@
-"""SubStrat service layer (DESIGN.md §11): a multi-tenant job server over
-the one-shot ``substrat()`` pipeline.
+"""SubStrat service layer (DESIGN.md §11, §14): a multi-tenant job server
+over the one-shot ``substrat()`` pipeline.
 
 - ``fingerprint`` — stable content hash of a factorized dataset.
 - ``cache``       — LRU DST cache keyed by (fingerprint, n, m, measure,
@@ -7,17 +7,30 @@ the one-shot ``substrat()`` pipeline.
                     warm-start the restricted fine-tune.
 - ``scheduler``   — async job queue running jobs through explicit resumable
                     phases, merging compatible rung cohorts from different
-                    jobs into one batched-engine dispatch.
+                    jobs into one batched-engine dispatch; snapshottable.
 - ``server``      — in-process submit/poll/result front end with per-tenant
-                    budget accounting.
+                    budget accounting and streamed rung leaderboards.
+- ``wire``        — versioned binary serialization for everything the
+                    transport ships (cohorts, results, scheduler state).
+- ``worker``      — per-device worker-process loop (pull task, eval, push).
+- ``transport``   — cross-process tier: worker pools, the crash-recovering
+                    ``DistributedScheduler``, and the HTTP front end.
 """
 from .cache import DSTCache, DSTCacheEntry
 from .fingerprint import dataset_fingerprint
 from .scheduler import Scheduler, SubStratJob
 from .server import BudgetExceeded, JobStatus, SubStratServer
+from .transport import (
+    DistributedScheduler, ProcessWorkerPool, SimWorkerPool,
+    SubStratHTTPClient, SubStratHTTPServer,
+)
+from .wire import WireError, WireVersionError
 
 __all__ = [
     "DSTCache", "DSTCacheEntry", "dataset_fingerprint",
     "Scheduler", "SubStratJob",
     "BudgetExceeded", "JobStatus", "SubStratServer",
+    "DistributedScheduler", "ProcessWorkerPool", "SimWorkerPool",
+    "SubStratHTTPClient", "SubStratHTTPServer",
+    "WireError", "WireVersionError",
 ]

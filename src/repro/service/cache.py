@@ -31,7 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -124,6 +124,11 @@ class DSTCache:
             else:
                 victim, _ = self._entries.popitem(last=False)
             self.evictions += 1
+
+    def items(self) -> List[Tuple[tuple, DSTCacheEntry]]:
+        """Entries in recency order, oldest first — checkpoint iteration
+        (re-``put``ting them in this order reproduces the LRU order)."""
+        return list(self._entries.items())
 
     def peek(self, key) -> Optional[DSTCacheEntry]:
         """Look up without touching recency/priority or hit/miss stats (used

@@ -61,8 +61,8 @@ import jax
 import numpy as np
 
 from ..automl.engine import (
-    SearchState, search_eval_rung, search_init, search_record, search_result,
-    search_trial_cohort,
+    SearchState, search_eval_rung, search_init, search_record, search_restore,
+    search_result, search_snapshot, search_trial_cohort,
 )
 from ..core.measures import CodedDataset, factorize
 from ..core.plan import Plan, plan_from_config
@@ -197,6 +197,8 @@ class SubStratJob:
     final: Optional[object] = None         # AutoMLResult M_sub
     result: Optional[SubStratResult] = None
     error: Optional[BaseException] = None
+    # streamed partial results: one entry per recorded rung (DESIGN.md §14.4)
+    leaderboard: List[dict] = dataclasses.field(default_factory=list)
 
     @property
     def active(self) -> bool:
@@ -247,6 +249,7 @@ class Scheduler:
         self.mixed_rungs = 0    # merged dispatches spanning >1 (rung, epochs)
         self.solo_rungs = 0     # rungs evaluated per-job
         self.merged_dst = 0     # subset searches that rode a batched dispatch
+        self.poisoned_packs = 0  # failed packs re-run solo to isolate blame
 
     @property
     def hetero_pad_limit(self) -> float:
@@ -589,17 +592,31 @@ class Scheduler:
                 solo.append(group[0])
         return merged, solo
 
-    def _run_merged(self, group: List[SubStratJob], cohorts, eval_fn) -> None:
-        """Dispatch one packed group through ``eval_fn`` and record every
-        job's rung; merged wall time is shared equally by participants."""
-        t0 = time.perf_counter()
-        try:
-            outs = eval_fn(cohorts)
-        except Exception as e:   # noqa: BLE001 — isolate job failures
-            for job in group:
-                self._fail(job, e)
+    def _note_rung(self, job: SubStratJob, top_k: int = 5) -> None:
+        """Append a leaderboard entry for the rung just recorded — the
+        streamed partial result ``poll(since=...)`` hands back rung by rung
+        (DESIGN.md §14.4)."""
+        st = job.search
+        if st is None or not st.live:
             return
-        share = (time.perf_counter() - t0) / len(group)
+        ranked = sorted(((float(v), i) for i, (s, v, *_) in enumerate(st.live)),
+                        key=lambda t: -t[0])
+        job.leaderboard.append({
+            "phase": job.phase,
+            "rung": st.rung_i - 1,          # rung_i already advanced past it
+            "alive": len(st.alive_ids),
+            "trials_done": st.n_done,
+            "top": [{"family": st.live[i][0].family,
+                     "preproc": st.live[i][0].preproc,
+                     "feature_frac": float(st.live[i][0].feature_frac),
+                     "val_acc": v}
+                    for v, i in ranked[:top_k]],
+        })
+
+    def _record_group(self, group: List[SubStratJob], cohorts, outs,
+                      share: float) -> None:
+        """Record one successful dispatch: merge counters, per-job rung
+        results, equal-share wall-time attribution, leaderboard entries."""
         if len(group) > 1:
             self.merged_rungs += 1
             self.merged_jobs += len(group)
@@ -612,6 +629,41 @@ class Scheduler:
             search_record(job.search, scored, positions, share)
             key = _PHASE_TIME_KEY[job.phase]
             job.times[key] = job.times.get(key, 0.0) + share
+            self._note_rung(job)
+
+    def _isolate_failure(self, group: List[SubStratJob], cohorts,
+                         eval_fn, error: BaseException) -> None:
+        """A failed packed dispatch must not doom its innocent co-riders:
+        re-run each member solo so only the job(s) that actually fail alone
+        are marked failed (the rest lose one dispatch, not their search)."""
+        if len(group) == 1:
+            self._fail(group[0], error)
+            return
+        self.poisoned_packs += 1
+        for job, tc in zip(group, cohorts):
+            self._run_merged([job], [tc], eval_fn)
+
+    def _run_merged(self, group: List[SubStratJob], cohorts, eval_fn) -> None:
+        """Dispatch one packed group through ``eval_fn`` and record every
+        job's rung; merged wall time is shared equally by participants."""
+        t0 = time.perf_counter()
+        try:
+            outs = eval_fn(cohorts)
+        except Exception as e:   # noqa: BLE001 — isolate job failures
+            self._isolate_failure(group, cohorts, eval_fn, e)
+            return
+        self._record_group(group, cohorts, outs,
+                           (time.perf_counter() - t0) / len(group))
+
+    def _eval_groups(self, packed, eval_fn) -> None:
+        """Execute packed rung groups — the transport hook (DESIGN.md §14.3).
+
+        ``packed`` is ``[(jobs, cohorts), ...]``; the in-process default
+        evaluates each group synchronously.  ``transport.DistributedScheduler``
+        overrides this to ship groups to worker processes and fold the
+        wire-decoded results back through ``_record_group``."""
+        for group, cohorts in packed:
+            self._run_merged(group, cohorts, eval_fn)
 
     def _dispatch_rungs(self, ready: List[SubStratJob]) -> None:
         from ..automl.batched import eval_rung_cohorts, eval_trial_megabatch
@@ -646,6 +698,7 @@ class Scheduler:
             self.solo_rungs += 1
             key = _PHASE_TIME_KEY[job.phase]
             job.times[key] = job.times.get(key, 0.0) + (time.perf_counter() - t0)
+            self._note_rung(job)
 
         if mega:
             # the standing megabatch (§13): every ready cohort, any rung,
@@ -653,16 +706,18 @@ class Scheduler:
             # groups to exact shapes so every merge stays bit-identical
             cohorts = [search_trial_cohort(j.search) for j in mega]
             metas = [CohortMeta(tc.shape, tc.trial_steps) for tc in cohorts]
-            for gidx in pack_megabatches(metas, self.waste_budget,
-                                         same_shape_only=not self.hetero_merge):
-                self._run_merged([mega[i] for i in gidx],
-                                 [cohorts[i] for i in gidx],
-                                 eval_trial_megabatch)
+            self._eval_groups(
+                [([mega[i] for i in gidx], [cohorts[i] for i in gidx])
+                 for gidx in pack_megabatches(
+                     metas, self.waste_budget,
+                     same_shape_only=not self.hetero_merge)],
+                eval_trial_megabatch)
 
-        for group in merged:
-            self._run_merged(group,
-                             [search_trial_cohort(j.search) for j in group],
-                             eval_rung_cohorts)
+        if merged:
+            self._eval_groups(
+                [(group, [search_trial_cohort(j.search) for j in group])
+                 for group in merged],
+                eval_rung_cohorts)
 
     # -- the cooperative loop ----------------------------------------------
 
@@ -730,4 +785,87 @@ class Scheduler:
             "mixed_rungs": self.mixed_rungs,
             "solo_rungs": self.solo_rungs,
             "merged_dst": self.merged_dst,
+            "poisoned_packs": self.poisoned_packs,
         }
+
+    # -- checkpoint / restore (DESIGN.md §14.5) ------------------------------
+
+    _COUNTER_FIELDS = ("merged_rungs", "merged_jobs", "hetero_rungs",
+                       "mixed_rungs", "solo_rungs", "merged_dst",
+                       "poisoned_packs")
+    _JOB_PLAIN_FIELDS = ("job_id", "tenant", "X", "y", "X_test", "y_test",
+                         "phase", "cache_hit", "warm_family", "fingerprint",
+                         "cache_key", "row_idx", "col_mask", "col_idx",
+                         "dst_fitness", "y_sub", "intermediate", "final",
+                         "result")
+
+    def snapshot(self) -> bytes:
+        """Serialize the whole scheduler — every job (including mid-search
+        ``SearchState``s), the DST cache, and the merge counters — to one
+        versioned wire payload.  A fresh scheduler that ``load_snapshot``s
+        it resumes in-progress jobs bit-identically (rung-boundary
+        granularity: ``step()`` snapshots land between rungs)."""
+        from . import wire
+        jobs = []
+        for job in self.jobs.values():
+            d = {f: getattr(job, f) for f in self._JOB_PLAIN_FIELDS}
+            d["key"] = job.key
+            d["plan"] = job.plan
+            d["coded"] = job.coded
+            d["times"] = dict(job.times)
+            d["leaderboard"] = list(job.leaderboard)
+            d["search"] = (search_snapshot(job.search)
+                           if job.search is not None else None)
+            d["error"] = None if job.error is None else repr(job.error)
+            jobs.append(d)
+        payload = {
+            "jobs": jobs,
+            "next_id": self._next_id,
+            "counters": {k: getattr(self, k) for k in self._COUNTER_FIELDS},
+            "cache": self.cache.items(),
+        }
+        return wire.dumps(payload, kind="scheduler")
+
+    def load_snapshot(self, data: bytes) -> None:
+        """Restore state captured by ``snapshot`` (replaces current state)."""
+        from . import wire
+        payload = wire.loads(data)
+        self.jobs.clear()
+        for d in payload["jobs"]:
+            job = SubStratJob(
+                job_id=d["job_id"], tenant=d["tenant"], X=d["X"], y=d["y"],
+                key=d["key"], plan=d["plan"], coded=d["coded"],
+                X_test=d["X_test"], y_test=d["y_test"])
+            for f in self._JOB_PLAIN_FIELDS:
+                setattr(job, f, d[f])
+            job.times = dict(d["times"])
+            job.leaderboard = list(d["leaderboard"])
+            job.search = (search_restore(d["search"])
+                          if d["search"] is not None else None)
+            # the original exception class is gone; keep its repr visible
+            job.error = (None if d["error"] is None
+                         else RuntimeError(d["error"]))
+            self.jobs[job.job_id] = job
+        self._next_id = payload["next_id"]
+        for k, v in payload["counters"].items():
+            setattr(self, k, v)
+        for key, entry in payload["cache"]:
+            self.cache.put(key, entry)
+
+    def save_checkpoint_to(self, ckpt_dir, step: int, *, keep: int = 3) -> None:
+        """Write ``snapshot()`` as an atomic on-disk checkpoint
+        (``distributed/checkpoint.py`` manifest + COMMIT protocol)."""
+        from ..distributed.checkpoint import save_checkpoint
+        blob = np.frombuffer(self.snapshot(), dtype=np.uint8)
+        save_checkpoint(ckpt_dir, step, {"wire": blob}, keep=keep)
+
+    def restore_checkpoint(self, ckpt_dir) -> Optional[int]:
+        """Restore the newest complete checkpoint under ``ckpt_dir``;
+        returns its step, or None if no commit exists."""
+        from ..distributed.checkpoint import restore_latest_untyped
+        found = restore_latest_untyped(ckpt_dir)
+        if found is None:
+            return None
+        leaves, step = found
+        self.load_snapshot(leaves[0].tobytes())
+        return step

@@ -50,6 +50,11 @@ class JobStatus:
     warm_started: bool         # cache knew the winner family: sub pass skipped
     times: Dict[str, float]    # per-phase seconds so far
     error: Optional[str] = None
+    # streamed partial results (DESIGN.md §14.4): the rung-by-rung
+    # leaderboard entries recorded since the caller's cursor, plus the
+    # total count to use as the next ``poll(since=...)`` cursor
+    leaderboard: tuple = ()
+    leaderboard_total: int = 0
 
     @property
     def done(self) -> bool:
@@ -72,8 +77,11 @@ class SubStratServer:
         hetero_pad_limit: Optional[float] = None,   # deprecated: waste_budget
         batch_dst: bool = False,
         tenant_budgets: Optional[Dict[str, float]] = None,
+        scheduler: Optional[Scheduler] = None,
     ):
-        self.scheduler = Scheduler(
+        # an injected scheduler (e.g. transport.DistributedScheduler) wins;
+        # the cache/merge kwargs then belong to its constructor, not ours
+        self.scheduler = scheduler if scheduler is not None else Scheduler(
             DSTCache(cache_capacity, byte_budget=cache_byte_budget,
                      policy=cache_policy),
             warm_start=warm_start, hetero_merge=hetero_merge,
@@ -131,7 +139,11 @@ class SubStratServer:
             X, y, tenant=tenant, key=key, plan=plan, config=config,
             dst_fn=dst_fn, coded=coded, X_test=X_test, y_test=y_test)
 
-    def poll(self, job_id: int) -> JobStatus:
+    def poll(self, job_id: int, since: int = 0) -> JobStatus:
+        """Job status snapshot.  ``since`` is a leaderboard cursor: only
+        entries recorded at index >= ``since`` are returned, so a client
+        polling with ``since=last.leaderboard_total`` streams each rung's
+        standings exactly once instead of poll-until-done."""
         job = self.scheduler.jobs[job_id]
         return JobStatus(
             job_id=job.job_id,
@@ -141,6 +153,8 @@ class SubStratServer:
             warm_started=job.warm_family is not None,
             times=dict(job.times),
             error=None if job.error is None else repr(job.error),
+            leaderboard=tuple(job.leaderboard[since:]),
+            leaderboard_total=len(job.leaderboard),
         )
 
     def run(self) -> None:

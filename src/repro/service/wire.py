@@ -1,0 +1,234 @@
+"""Versioned wire serialization for the cross-process serving tier
+(DESIGN.md §14.2).
+
+One self-describing binary format carries everything the transport ships
+between the front end and its workers — ``TrialCohort`` payloads, scored
+rung results, ``SearchState`` snapshots, whole-scheduler checkpoints::
+
+    blob = dumps(obj)          # bytes
+    obj2 = loads(blob)         # round-trips exactly
+
+Layout::
+
+    b"SBWR" | u32 version | u32 header_len | header JSON | buffer bytes...
+
+The header is a JSON tree in which every value is either a JSON primitive
+or a tagged node (``{"__a__": i}`` array buffer reference, ``{"__t__":
+[...]}`` tuple, ``{"__d__": [[k, v], ...]}`` dict, ``{"__dc__": "module:
+Class", ...}`` dataclass, ``{"__key__": ...}`` JAX PRNG key).  Array data
+travels as raw little-endian buffers after the header, so **every** tensor —
+index/int tensors included — round-trips bit-exactly (the float "tolerance"
+allowed by the format contract is never actually spent by this codec; it is
+reserved for future codecs that compress).
+
+Versioning: ``loads`` rejects any payload whose version differs from
+``WIRE_VERSION`` with a ``WireVersionError`` naming both versions — a
+front end never silently misparses a newer worker's reply (or vice versa).
+
+Dataclasses are encoded by qualified name and re-imported on decode;
+decoding is restricted to ``repro.*`` modules so a wire payload can only
+instantiate this package's own types.  Callables (e.g. the batched
+backend's lazy param thunks) are deliberately not serializable — holders
+must materialize them first (``engine.search_snapshot`` does).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import json
+import struct
+from typing import Any, List, Tuple
+
+import numpy as np
+
+__all__ = ["WIRE_VERSION", "WireError", "WireVersionError", "dumps", "loads"]
+
+MAGIC = b"SBWR"
+WIRE_VERSION = 1
+
+# dataclass decoding is restricted to this package's own modules
+_DC_MODULE_PREFIX = "repro."
+
+
+class WireError(ValueError):
+    """Malformed or unserializable wire payload."""
+
+
+class WireVersionError(WireError):
+    """Payload speaks a wire version this build does not."""
+
+
+def _is_jax_array(obj) -> bool:
+    # deferred: keep wire importable without touching jax at module load
+    import jax
+    return isinstance(obj, jax.Array)
+
+
+def _is_prng_key(obj) -> bool:
+    import jax
+    return (isinstance(obj, jax.Array)
+            and jax.dtypes.issubdtype(obj.dtype, jax.dtypes.prng_key))
+
+
+def _enc(obj: Any, bufs: List[np.ndarray], path: str) -> Any:
+    """Encode ``obj`` into a JSON-safe node, appending array buffers."""
+    if obj is None or isinstance(obj, (bool, int, float, str)):
+        return obj
+    if isinstance(obj, np.ndarray):
+        bufs.append(np.ascontiguousarray(obj))
+        return {"__a__": len(bufs) - 1}
+    if isinstance(obj, np.generic):           # numpy scalar: keep its dtype
+        # np.asarray keeps the 0-d shape (ascontiguousarray would force 1-d)
+        bufs.append(np.asarray(obj))
+        return {"__a__": len(bufs) - 1, "scalar": True}
+    if _is_jax_array(obj):
+        if _is_prng_key(obj):
+            import jax
+            data = np.asarray(jax.random.key_data(obj))
+            bufs.append(np.ascontiguousarray(data))
+            return {"__key__": len(bufs) - 1}
+        bufs.append(np.ascontiguousarray(np.asarray(obj)))
+        return {"__a__": len(bufs) - 1}
+    if isinstance(obj, bytes):
+        bufs.append(np.frombuffer(obj, dtype=np.uint8))
+        return {"__b__": len(bufs) - 1}
+    if isinstance(obj, tuple):
+        if hasattr(obj, "_fields"):        # typed NamedTuple, by qualname
+            cls = type(obj)
+            if not cls.__module__.startswith(_DC_MODULE_PREFIX):
+                raise WireError(
+                    f"refusing to wire-encode non-repro namedtuple "
+                    f"{cls.__module__}:{cls.__qualname__} at {path}")
+            return {"__nt__": f"{cls.__module__}:{cls.__qualname__}",
+                    "f": [_enc(v, bufs, f"{path}.{name}")
+                          for name, v in zip(obj._fields, obj)]}
+        return {"__t__": [_enc(v, bufs, f"{path}[{i}]")
+                          for i, v in enumerate(obj)]}
+    if isinstance(obj, list):
+        return {"__l__": [_enc(v, bufs, f"{path}[{i}]")
+                          for i, v in enumerate(obj)]}
+    if isinstance(obj, dict):
+        return {"__d__": [[_enc(k, bufs, f"{path}.key"),
+                           _enc(v, bufs, f"{path}[{k!r}]")]
+                          for k, v in obj.items()]}
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        cls = type(obj)
+        if not cls.__module__.startswith(_DC_MODULE_PREFIX):
+            raise WireError(
+                f"refusing to wire-encode non-repro dataclass "
+                f"{cls.__module__}:{cls.__qualname__} at {path}")
+        fields = [[f.name, _enc(getattr(obj, f.name), bufs,
+                                f"{path}.{f.name}")]
+                  for f in dataclasses.fields(obj)]
+        return {"__dc__": f"{cls.__module__}:{cls.__qualname__}", "f": fields}
+    raise WireError(
+        f"not wire-serializable at {path}: {type(obj).__module__}."
+        f"{type(obj).__qualname__} (materialize callables / convert to "
+        f"arrays before shipping)")
+
+
+def _resolve_dataclass(tag: str):
+    modname, _, qualname = tag.partition(":")
+    if not modname.startswith(_DC_MODULE_PREFIX):
+        raise WireError(f"wire payload names non-repro dataclass {tag!r}")
+    obj = importlib.import_module(modname)
+    for part in qualname.split("."):
+        obj = getattr(obj, part)
+    if not dataclasses.is_dataclass(obj):
+        raise WireError(f"{tag!r} is not a dataclass")
+    return obj
+
+
+def _dec(node: Any, bufs: List[np.ndarray]):
+    if node is None or isinstance(node, (bool, int, float, str)):
+        return node
+    if not isinstance(node, dict):
+        raise WireError(f"malformed wire node: {node!r}")
+    if "__a__" in node:
+        arr = bufs[node["__a__"]]
+        return arr[()] if node.get("scalar") else arr
+    if "__key__" in node:
+        import jax
+        return jax.random.wrap_key_data(
+            jax.numpy.asarray(bufs[node["__key__"]]))
+    if "__b__" in node:
+        return bufs[node["__b__"]].tobytes()
+    if "__t__" in node:
+        return tuple(_dec(v, bufs) for v in node["__t__"])
+    if "__nt__" in node:
+        modname, _, qualname = node["__nt__"].partition(":")
+        if not modname.startswith(_DC_MODULE_PREFIX):
+            raise WireError(
+                f"wire payload names non-repro namedtuple {node['__nt__']!r}")
+        cls = importlib.import_module(modname)
+        for part in qualname.split("."):
+            cls = getattr(cls, part)
+        return cls(*(_dec(v, bufs) for v in node["f"]))
+    if "__l__" in node:
+        return [_dec(v, bufs) for v in node["__l__"]]
+    if "__d__" in node:
+        return {_dec(k, bufs): _dec(v, bufs) for k, v in node["__d__"]}
+    if "__dc__" in node:
+        cls = _resolve_dataclass(node["__dc__"])
+        return cls(**{name: _dec(v, bufs) for name, v in node["f"]})
+    raise WireError(f"unknown wire node tags: {sorted(node)}")
+
+
+def dumps(obj: Any, *, kind: str = "") -> bytes:
+    """Serialize ``obj`` to a versioned wire payload."""
+    bufs: List[np.ndarray] = []
+    tree = _enc(obj, bufs, "$")
+    header = {
+        "v": WIRE_VERSION,
+        "kind": kind,
+        "obj": tree,
+        "bufs": [{"d": a.dtype.str, "s": list(a.shape)} for a in bufs],
+    }
+    hbytes = json.dumps(header, separators=(",", ":")).encode("utf-8")
+    parts = [MAGIC, struct.pack("<II", WIRE_VERSION, len(hbytes)), hbytes]
+    parts.extend(a.tobytes() for a in bufs)
+    return b"".join(parts)
+
+
+def _read_header(data: bytes) -> Tuple[dict, int]:
+    if len(data) < 12 or data[:4] != MAGIC:
+        raise WireError("not a SubStrat wire payload (bad magic)")
+    version, hlen = struct.unpack_from("<II", data, 4)
+    if version != WIRE_VERSION:
+        raise WireVersionError(
+            f"unsupported wire version {version}; this build speaks "
+            f"version {WIRE_VERSION} — upgrade the older endpoint")
+    if len(data) < 12 + hlen:
+        raise WireError("truncated wire payload (header)")
+    try:
+        header = json.loads(data[12:12 + hlen].decode("utf-8"))
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise WireError(f"corrupt wire header: {e}") from None
+    return header, 12 + hlen
+
+
+def kind_of(data: bytes) -> str:
+    """Peek a payload's ``kind`` tag without decoding its buffers."""
+    header, _ = _read_header(data)
+    return header.get("kind", "")
+
+
+def loads(data: bytes) -> Any:
+    """Decode a wire payload produced by ``dumps``.
+
+    Arrays come back as fresh writable host ``np.ndarray``s with the exact
+    dtype, shape, and bytes they were encoded with."""
+    header, off = _read_header(data)
+    bufs: List[np.ndarray] = []
+    for spec in header["bufs"]:
+        dtype = np.dtype(spec["d"])
+        shape = tuple(spec["s"])
+        n_elem = int(np.prod(shape, dtype=np.int64))
+        nbytes = dtype.itemsize * n_elem
+        if off + nbytes > len(data):
+            raise WireError("truncated wire payload (buffers)")
+        arr = (np.frombuffer(data, dtype=dtype, count=n_elem, offset=off)
+               .reshape(shape).copy())
+        bufs.append(arr)
+        off += nbytes
+    return _dec(header["obj"], bufs)

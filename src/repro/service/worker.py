@@ -1,0 +1,174 @@
+"""Worker-process loop of the cross-process serving tier (DESIGN.md §14.3).
+
+A worker is one process pinned to one device: it pulls packed megabatch
+tasks from its queue, evaluates them through the same batched engine the
+in-process scheduler uses (``eval_trial_megabatch`` /
+``eval_rung_cohorts``), and pushes wire-encoded scored results back on the
+shared result queue.  Because the evaluation entry points are pure
+functions of the cohort payloads, a task re-dispatched to a different
+worker after a crash produces bit-identical results — the whole recovery
+story rests on that.
+
+Message protocol (queue values are small tuples; large payloads are wire
+bytes — see ``service/wire.py``):
+
+  front end -> worker
+      ("eval", task_id, wire_bytes)   evaluate one packed group
+      ("stop",)                       drain and exit
+
+  worker -> front end
+      ("hello", worker_id, t)              ready (jax imported, loop live)
+      ("beat", worker_id, t)               heartbeat: task accepted
+      ("done", task_id, worker_id, wire_bytes, dt)
+      ("error", task_id, worker_id, repr, traceback, dt)
+
+Fault injection: ``worker_main`` takes ``fault_events`` — a tuple of
+``(worker_id, task_index, action, seconds)`` primitives (the picklable
+compilation target of ``tests/harness/faultsim.FaultPlan``).  When this
+worker dequeues its ``task_index``-th task it applies the action first:
+
+- ``"kill"``  — ``os._exit`` before any reply: exactly what a crashed or
+  OOM-killed process looks like to the front end;
+- ``"stall"`` — sleep ``seconds`` *before* the heartbeat, so the front end
+  sees a dispatched task with no beat (the straggler signature);
+- ``"delay"`` — sleep ``seconds`` and then run normally (a slow worker,
+  not a lost one).
+
+The hook sits at the dequeue point so every recovery path is exercised at
+a deterministic step rather than by racing timers.
+"""
+from __future__ import annotations
+
+import os
+import time
+import traceback
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..automl.engine import TrialCohort, _materialize_scored
+from . import wire
+
+__all__ = ["cohort_payload", "cohort_restore", "eval_task", "worker_main",
+           "KILLED_EXIT_CODE"]
+
+KILLED_EXIT_CODE = 17     # distinguishes injected kills from real crashes
+
+
+# ---------------------------------------------------------------------------
+# cohort <-> wire payload
+# ---------------------------------------------------------------------------
+
+# the evaluation-context keys a worker needs; jnp mirrors + caches rebuilt
+_CTX_KEYS = ("X_tr", "y_tr", "X_val", "y_val", "n_classes", "seed")
+
+
+def cohort_payload(tc: TrialCohort) -> dict:
+    """The wire-encodable projection of one ``TrialCohort``.
+
+    Ships the raw evaluation data and the per-trial cursors; the worker
+    rebuilds the derived context (jnp label mirrors, variant caches) on its
+    own device."""
+    return {
+        "specs": list(tc.specs),
+        "tids": [int(t) for t in tc.tids],
+        "rung_i": int(tc.rung_i),
+        "epochs": int(tc.epochs),
+        "collect": bool(tc.collect),
+        "rungs": tuple(int(r) for r in tc.trial_rungs),
+        "steps": tuple(int(s) for s in tc.trial_steps),
+        "ctx": {k: tc.ctx[k] for k in _CTX_KEYS},
+    }
+
+
+def cohort_restore(payload: dict) -> TrialCohort:
+    """Rebuild an evaluable ``TrialCohort`` from its wire projection."""
+    import jax.numpy as jnp
+    ctx = dict(payload["ctx"])
+    ctx["X_tr"] = np.asarray(ctx["X_tr"], np.float32)
+    ctx["X_val"] = np.asarray(ctx["X_val"], np.float32)
+    ctx["y_tr"] = np.asarray(ctx["y_tr"])
+    ctx["y_val"] = np.asarray(ctx["y_val"])
+    ctx["y_tr_j"] = jnp.asarray(ctx["y_tr"])
+    ctx["y_val_j"] = jnp.asarray(ctx["y_val"])
+    ctx["n_classes"] = int(ctx["n_classes"])
+    ctx["seed"] = int(ctx["seed"])
+    ctx["budget_active"] = False   # merged dispatches are never time-budgeted
+    ctx["pipe_cache"] = {}
+    ctx["variant_cache"] = {}
+    return TrialCohort(
+        specs=list(payload["specs"]),
+        tids=[int(t) for t in payload["tids"]],
+        rung_i=int(payload["rung_i"]),
+        epochs=int(payload["epochs"]),
+        collect=bool(payload["collect"]),
+        ctx=ctx,
+        rungs=tuple(payload["rungs"]),
+        steps=tuple(payload["steps"]),
+    )
+
+
+def eval_task(payload: dict) -> list:
+    """Evaluate one packed task: ``{"kind", "cohorts"}`` -> per-job
+    ``(scored, positions)`` with lazy params materialized (wire-safe)."""
+    from ..automl.batched import eval_rung_cohorts, eval_trial_megabatch
+    cohorts = [cohort_restore(c) for c in payload["cohorts"]]
+    fn = eval_rung_cohorts if payload["kind"] == "rung" else eval_trial_megabatch
+    outs = fn(cohorts)
+    return [(_materialize_scored(scored), list(positions))
+            for scored, positions in outs]
+
+
+# ---------------------------------------------------------------------------
+# the worker loop
+# ---------------------------------------------------------------------------
+
+
+def _my_faults(worker_id: int,
+               fault_events: Sequence[Tuple[int, int, str, float]],
+               ) -> Dict[int, Tuple[str, float]]:
+    return {int(t): (str(action), float(seconds))
+            for (w, t, action, seconds) in fault_events
+            if int(w) == int(worker_id)}
+
+
+def apply_fault(action: Optional[Tuple[str, float]]) -> None:
+    """Execute one fault action at the dequeue point (see module doc)."""
+    if action is None:
+        return
+    what, seconds = action
+    if what == "kill":
+        os._exit(KILLED_EXIT_CODE)
+    elif what in ("stall", "delay"):
+        time.sleep(seconds)
+    else:
+        raise ValueError(f"unknown fault action {what!r}")
+
+
+def worker_main(worker_id: int, task_q, result_q,
+                fault_events: Sequence[Tuple[int, int, str, float]] = ()):
+    """Entry point of one worker process (see module docstring)."""
+    faults = _my_faults(worker_id, fault_events)
+    result_q.put(("hello", worker_id, time.monotonic()))
+    n_dequeued = 0
+    while True:
+        msg = task_q.get()
+        if msg is None or msg[0] == "stop":
+            break
+        _op, task_id, payload_bytes = msg
+        fault = faults.get(n_dequeued)
+        n_dequeued += 1
+        if fault is not None and fault[0] in ("kill", "stall"):
+            apply_fault(fault)   # kill exits; stall sleeps pre-heartbeat
+        result_q.put(("beat", worker_id, time.monotonic()))
+        if fault is not None and fault[0] == "delay":
+            apply_fault(fault)
+        t0 = time.perf_counter()
+        try:
+            outs = eval_task(wire.loads(payload_bytes))
+            result_q.put(("done", task_id, worker_id, wire.dumps(outs),
+                          time.perf_counter() - t0))
+        except BaseException as e:   # noqa: BLE001 — report, keep serving
+            result_q.put(("error", task_id, worker_id, repr(e),
+                          traceback.format_exc(),
+                          time.perf_counter() - t0))

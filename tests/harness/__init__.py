@@ -1,0 +1,2 @@
+"""Test harnesses shared across the suite (importable as ``harness.*``
+because pytest puts ``tests/`` on ``sys.path`` for test modules)."""

@@ -1,0 +1,111 @@
+"""Deterministic fault-injection harness for the serving tier (DESIGN.md
+§14.7).
+
+A ``FaultPlan`` names exactly *which worker* fails *at which task* and
+*how* — no sleeping and hoping a timer races the scheduler.  Plans compile
+to primitive ``(worker, task, action, seconds)`` tuples, the only thing the
+runtime layers accept, so workers and examples never import this module:
+
+- ``SimWorkerPool(n, fault_events=plan.compile())`` applies the plan
+  in-process, at the same dequeue point as a real worker, with zero timing
+  dependence (kills and stalls are bookkeeping, not signals);
+- ``ProcessWorkerPool(n, fault_events=plan.compile())`` ships the plan to
+  real subprocesses, where ``worker.worker_main`` applies it — ``kill`` is
+  a genuine ``os._exit`` mid-protocol;
+- ``examples/serve_tabular.py --kill-worker W --kill-task T`` builds the
+  same primitives from the CLI for the end-to-end chaos gate in CI.
+
+Actions (see ``repro.service.worker`` for the exact injection point):
+
+- ``kill``  — the worker dies before replying: crash recovery path;
+- ``stall`` — the worker goes silent but stays alive: no-beat timeout path;
+- ``delay`` — the worker is slow but healthy: must NOT trigger recovery.
+
+``FaultPlan.random(seed, ...)`` derives a reproducible plan from a seed —
+the same seed always produces the same kills, which is what makes "chaos
+test passes 5/5 runs" a meaningful statement.
+
+This harness is also the supported way for third-party strategies/backends
+to test their own code under faults: run your jobs through a
+``DistributedScheduler`` over a ``SimWorkerPool`` armed with a plan, and
+assert parity against the fault-free run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Tuple
+
+__all__ = ["FaultEvent", "FaultPlan", "ACTIONS"]
+
+ACTIONS = ("kill", "stall", "delay")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One injected fault: ``worker`` misbehaves at its ``task``-th dequeue."""
+    worker: int
+    task: int
+    action: str
+    seconds: float = 0.0      # sleep length for stall/delay; unused by kill
+
+    def __post_init__(self):
+        if self.action not in ACTIONS:
+            raise ValueError(
+                f"unknown fault action {self.action!r}; one of {ACTIONS}")
+        if self.worker < 0 or self.task < 0:
+            raise ValueError("worker and task indices must be >= 0")
+
+    def compile(self) -> Tuple[int, int, str, float]:
+        return (self.worker, self.task, self.action, self.seconds)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """An ordered set of fault events, compiled for the worker pools."""
+    events: Tuple[FaultEvent, ...] = ()
+    seed: int = 0             # provenance of random plans (reproducibility)
+
+    def compile(self) -> Tuple[Tuple[int, int, str, float], ...]:
+        """The primitive tuples ``ProcessWorkerPool``/``SimWorkerPool``
+        (and ``worker.worker_main``) accept as ``fault_events``."""
+        return tuple(e.compile() for e in self.events)
+
+    def __add__(self, other: "FaultPlan") -> "FaultPlan":
+        return FaultPlan(self.events + other.events, seed=self.seed)
+
+    # -- canned plans --------------------------------------------------------
+
+    @classmethod
+    def kill(cls, worker: int, task: int = 0) -> "FaultPlan":
+        """Kill ``worker`` the moment it dequeues its ``task``-th task."""
+        return cls((FaultEvent(worker, task, "kill"),))
+
+    @classmethod
+    def stall(cls, worker: int, task: int = 0,
+              seconds: float = 3600.0) -> "FaultPlan":
+        """Silence ``worker`` at its ``task``-th task (no beat, no reply)."""
+        return cls((FaultEvent(worker, task, "stall", seconds),))
+
+    @classmethod
+    def delay(cls, worker: int, task: int = 0,
+              seconds: float = 0.1) -> "FaultPlan":
+        """Slow ``worker`` down at its ``task``-th task (beats, then runs)."""
+        return cls((FaultEvent(worker, task, "delay", seconds),))
+
+    @classmethod
+    def random(cls, seed: int, n_workers: int, *, n_events: int = 1,
+               max_task: int = 2, actions: Tuple[str, ...] = ("kill",),
+               ) -> "FaultPlan":
+        """A reproducible plan: the same seed always yields the same faults.
+
+        Each event picks a worker, a task index in ``[0, max_task]``, and
+        an action uniformly from ``actions`` using a private ``Random(seed)``
+        stream — independent of global RNG state."""
+        rng = random.Random(seed)
+        events = tuple(
+            FaultEvent(rng.randrange(n_workers), rng.randint(0, max_task),
+                       rng.choice(list(actions)),
+                       seconds=3600.0)
+            for _ in range(n_events))
+        return cls(events, seed=seed)

@@ -46,6 +46,74 @@ def test_assign_shards_properties(n_shards, n_hosts, alive_bits):
         n_shards // max(len(alive), 1)
 
 
+def _alive_from_bits(n_hosts, alive_bits):
+    alive = [h for h in range(n_hosts) if alive_bits & (1 << h)]
+    return alive or [0]
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 48), st.integers(1, 8), st.integers(0, 2 ** 8 - 1))
+def test_survivors_keep_home_shards(n_shards, n_hosts, alive_bits):
+    """A host that stays alive never loses a shard it already owned —
+    re-dispatch after a fault only moves the dead host's work."""
+    alive = _alive_from_bits(n_hosts, alive_bits)
+    a = assign_shards(n_shards, alive, n_hosts)
+    for s in range(n_shards):
+        if s % n_hosts in alive:
+            assert a[s] == s % n_hosts
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 48), st.integers(1, 8), st.integers(0, 2 ** 8 - 1))
+def test_orphan_spread_within_one_of_balanced(n_shards, n_hosts, alive_bits):
+    """Orphans go least-loaded-first, so total load stays within one shard
+    of perfectly balanced — no survivor absorbs a dead host's whole queue."""
+    from collections import Counter
+    alive = _alive_from_bits(n_hosts, alive_bits)
+    a = assign_shards(n_shards, alive, n_hosts)
+    counts = Counter(a.values())
+    loads = [counts.get(h, 0) for h in alive]
+    assert max(loads) - min(loads) <= 1
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 48), st.integers(1, 8), st.integers(0, 2 ** 8 - 1),
+       st.integers(0, 10 ** 6))
+def test_assignment_identical_across_hosts(n_shards, n_hosts, alive_bits,
+                                           shuffle_seed):
+    """Every host computes the same map from the same alive-set — argument
+    order and repetition must not matter (no coordinator anywhere)."""
+    import random as _random
+    alive = _alive_from_bits(n_hosts, alive_bits)
+    reference = assign_shards(n_shards, alive, n_hosts)
+    shuffled = list(alive)
+    _random.Random(shuffle_seed).shuffle(shuffled)
+    assert assign_shards(n_shards, shuffled, n_hosts) == reference
+    assert assign_shards(n_shards, shuffled + shuffled, n_hosts) == reference
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 48), st.integers(2, 8), st.integers(0, 7))
+def test_dead_then_revived_sequence_deterministic(n_shards, n_hosts,
+                                                  dead_host):
+    """kill → recover → revive replays to the same assignments: the map is
+    a pure function of the alive-set, so a fault-and-heal sequence is
+    reproducible and revival restores the original placement exactly."""
+    dead_host = dead_host % n_hosts
+    full = list(range(n_hosts))
+    degraded = [h for h in full if h != dead_host] or [0]
+    before = assign_shards(n_shards, full, n_hosts)
+    during1 = assign_shards(n_shards, degraded, n_hosts)
+    during2 = assign_shards(n_shards, degraded, n_hosts)
+    after = assign_shards(n_shards, full, n_hosts)
+    assert during1 == during2            # the degraded map is stable
+    assert after == before               # revival restores home placement
+    # and the degraded map reassigned exactly the dead host's shards
+    moved = {s for s in range(n_shards) if during1[s] != before[s]}
+    assert moved == {s for s in range(n_shards)
+                     if before[s] == dead_host and n_hosts > 1}
+
+
 # ---------------------------------------------------------------------------
 # heartbeat / stragglers
 # ---------------------------------------------------------------------------

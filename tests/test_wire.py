@@ -1,0 +1,251 @@
+"""service/wire.py: versioned serialization + cross-process SearchState
+resume (DESIGN.md §14.2, §14.4).
+
+Covers the wire acceptance contract — exact round-trips for index/int
+tensors, version rejection with a clear error — plus the crash/resume
+satellite: a ``SearchState`` serialized mid-rung and restored in a *fresh
+process* finishes with the same winner spec and trial accuracies within
+1e-6 of the uninterrupted run.
+"""
+import dataclasses
+import json
+import os
+import struct
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.automl.engine import (
+    AutoMLConfig, search_eval_rung, search_init, search_restore,
+    search_result, search_snapshot,
+)
+from repro.core.gen_dst import GenDSTConfig
+from repro.core.measures import factorize
+from repro.core.plan import plan
+from repro.service import wire
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _roundtrip(obj):
+    return wire.loads(wire.dumps(obj))
+
+
+# ---------------------------------------------------------------------------
+# exact round-trips
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [np.int8, np.int16, np.int32, np.int64,
+                                   np.uint8, np.uint32, np.bool_])
+def test_int_index_tensors_roundtrip_exact(dtype):
+    rng = np.random.default_rng(0)
+    arr = rng.integers(0, 100, size=(7, 3)).astype(dtype)
+    out = _roundtrip(arr)
+    assert out.dtype == arr.dtype
+    assert out.shape == arr.shape
+    np.testing.assert_array_equal(out, arr)
+
+
+@pytest.mark.parametrize("dtype", [np.float16, np.float32, np.float64])
+def test_float_tensors_roundtrip_bit_exact(dtype):
+    rng = np.random.default_rng(1)
+    arr = rng.normal(size=(5, 4)).astype(dtype)
+    out = _roundtrip(arr)
+    assert out.dtype == arr.dtype
+    # this codec ships raw buffers: floats are bit-exact, not just close
+    np.testing.assert_array_equal(
+        out.view(np.uint8), np.ascontiguousarray(arr).view(np.uint8))
+
+
+def test_empty_and_scalar_arrays():
+    empty = np.empty((0, 5), np.int64)
+    out = _roundtrip(empty)
+    assert out.shape == (0, 5) and out.dtype == np.int64
+    scalar = np.float32(2.5)
+    back = _roundtrip(scalar)
+    assert isinstance(back, np.floating) and back == scalar
+
+
+def test_decoded_arrays_are_writable_copies():
+    arr = np.arange(6, dtype=np.int32)
+    out = _roundtrip(arr)
+    out[0] = 99        # frombuffer views are read-only; we require copies
+    assert arr[0] == 0
+
+
+def test_nested_structures_roundtrip():
+    obj = {
+        "ints": np.arange(4, dtype=np.int64),
+        "tup": (1, "two", 3.0, None, True),
+        "nested": [{"k": (np.float32(1.5), b"raw-bytes")}],
+        7: "non-string-key",
+    }
+    out = _roundtrip(obj)
+    assert out["tup"] == (1, "two", 3.0, None, True)
+    assert out["nested"][0]["k"][1] == b"raw-bytes"
+    assert out[7] == "non-string-key"
+    np.testing.assert_array_equal(out["ints"], obj["ints"])
+
+
+def test_prng_key_roundtrip():
+    key = jax.random.key(42)
+    out = _roundtrip(key)
+    np.testing.assert_array_equal(
+        np.asarray(jax.random.key_data(out)),
+        np.asarray(jax.random.key_data(key)))
+    # the restored key *is* a key: splitting works and matches
+    np.testing.assert_array_equal(
+        np.asarray(jax.random.key_data(jax.random.split(out)[0])),
+        np.asarray(jax.random.key_data(jax.random.split(key)[0])))
+
+
+def test_repro_dataclasses_and_namedtuples_roundtrip():
+    p = plan("gen_dst", n=32, m=4,
+             sub_automl=AutoMLConfig(n_trials=6, rungs=(2, 4)), psi=5)
+    assert _roundtrip(p) == p
+    cfg = GenDSTConfig(psi=3, phi=8, measure="ig")
+    assert _roundtrip(cfg) == cfg
+    rng = np.random.default_rng(0)
+    coded = factorize(rng.normal(size=(20, 4)).astype(np.float32),
+                      (np.arange(20) % 2).astype(np.int64))
+    back = _roundtrip(coded)
+    assert type(back).__name__ == "CodedDataset"   # typed, not a bare tuple
+    np.testing.assert_array_equal(np.asarray(back.codes),
+                                  np.asarray(coded.codes))
+    assert back.target_col == coded.target_col
+
+
+def test_kind_tag_peek():
+    blob = wire.dumps({"x": 1}, kind="task")
+    assert wire.kind_of(blob) == "task"
+
+
+# ---------------------------------------------------------------------------
+# rejection paths
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_version_rejected_with_clear_error():
+    blob = bytearray(wire.dumps({"x": 1}))
+    struct.pack_into("<I", blob, 4, wire.WIRE_VERSION + 1)   # bump version
+    with pytest.raises(wire.WireVersionError) as exc:
+        wire.loads(bytes(blob))
+    msg = str(exc.value)
+    assert str(wire.WIRE_VERSION + 1) in msg
+    assert str(wire.WIRE_VERSION) in msg          # names both versions
+
+
+def test_bad_magic_rejected():
+    blob = b"XXXX" + wire.dumps({"x": 1})[4:]
+    with pytest.raises(wire.WireError, match="magic"):
+        wire.loads(blob)
+
+
+def test_truncated_payload_rejected():
+    blob = wire.dumps(np.arange(100, dtype=np.int64))
+    with pytest.raises(wire.WireError, match="truncated"):
+        wire.loads(blob[:-8])
+    with pytest.raises(wire.WireError):
+        wire.loads(blob[:6])
+
+
+def test_callables_rejected_by_name():
+    with pytest.raises(wire.WireError, match="not wire-serializable"):
+        wire.dumps({"thunk": lambda: 1})
+
+
+def test_foreign_dataclass_rejected():
+    @dataclasses.dataclass
+    class NotOurs:
+        x: int = 1
+
+    with pytest.raises(wire.WireError, match="non-repro"):
+        wire.dumps(NotOurs())
+
+
+def test_decode_refuses_foreign_module_tags():
+    # a crafted payload may not import arbitrary modules
+    blob = wire.dumps(GenDSTConfig())
+    evil = blob.replace(b"repro.core.gen_dst", b"os.path:::::::juno")
+    with pytest.raises((wire.WireError, Exception)):
+        wire.loads(evil)
+
+
+# ---------------------------------------------------------------------------
+# SearchState snapshot: in-process and across a real process boundary
+# ---------------------------------------------------------------------------
+
+
+def _mini_search(seed=0, N=48, d=6, c=3):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(N, d)).astype(np.float32)
+    y = (np.arange(N) % c).astype(np.int64)
+    return search_init(X, y, config=AutoMLConfig(n_trials=6, rungs=(2, 4)))
+
+
+def test_search_snapshot_roundtrip_in_process():
+    golden = _mini_search()
+    while not golden.done:
+        search_eval_rung(golden)
+    want = search_result(golden)
+
+    st = _mini_search()
+    search_eval_rung(st)                       # mid-search: one rung recorded
+    snap = wire.loads(wire.dumps(search_snapshot(st), kind="search"))
+    resumed = search_restore(snap)
+    while not resumed.done:
+        search_eval_rung(resumed)
+    got = search_result(resumed)
+
+    assert got.spec == want.spec
+    np.testing.assert_allclose([v for _, v in got.trials],
+                               [v for _, v in want.trials], atol=1e-6)
+
+
+def test_search_snapshot_resumes_in_fresh_process(tmp_path):
+    """The crash/resume satellite: wire a mid-rung SearchState to disk,
+    finish it in a *fresh* interpreter, compare with the uninterrupted run."""
+    golden = _mini_search()
+    while not golden.done:
+        search_eval_rung(golden)
+    want = search_result(golden)
+
+    st = _mini_search()
+    search_eval_rung(st)
+    blob_path = tmp_path / "search.wire"
+    blob_path.write_bytes(wire.dumps(search_snapshot(st), kind="search"))
+
+    script = textwrap.dedent(f"""
+        import json, sys
+        from repro.automl.engine import (search_eval_rung, search_restore,
+                                         search_result)
+        from repro.service import wire
+        snap = wire.loads(open({str(blob_path)!r}, "rb").read())
+        st = search_restore(snap)
+        while not st.done:
+            search_eval_rung(st)
+        res = search_result(st)
+        print(json.dumps({{
+            "spec": [res.spec.preproc, res.spec.feature_frac,
+                     res.spec.family, list(map(list, res.spec.hp))],
+            "trials": [float(v) for _, v in res.trials],
+        }}))
+    """)
+    env = dict(os.environ, PYTHONPATH=SRC)
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr
+    got = json.loads(proc.stdout.strip().splitlines()[-1])
+
+    assert got["spec"][0] == want.spec.preproc
+    assert got["spec"][1] == pytest.approx(want.spec.feature_frac)
+    assert got["spec"][2] == want.spec.family
+    assert tuple(tuple(kv) for kv in got["spec"][3]) == tuple(
+        tuple(kv) for kv in want.spec.hp)
+    np.testing.assert_allclose(got["trials"],
+                               [v for _, v in want.trials], atol=1e-6)
