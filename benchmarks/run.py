@@ -10,7 +10,10 @@ paper-scale settings (long); the default quick mode scales datasets down so
 the whole suite finishes on one CPU core.  --json additionally writes every
 section's rows to a machine-readable file so the perf trajectory can be
 tracked across PRs (CI uploads it as ``BENCH_quick.json``) instead of
-scraping CSV from stdout.  --compare reads a previous run's --json artifact
+scraping CSV from stdout.  The report carries a top-level ``meta`` block
+(jax/jaxlib version, device kind, CPU count, timestamp) so artifacts from
+different machines are attributable.  --compare reads a previous run's
+--json artifact — either layout, with or without ``meta`` —
 and exits non-zero when any section regressed by more than
 --compare-threshold (default 15%) in wall seconds — CI runs it against the
 committed ``benchmarks/BASELINE_quick.json``.
@@ -26,6 +29,30 @@ import traceback
 
 def _section(title):
     print(f"\n### {title}", flush=True)
+
+
+def _run_meta() -> dict:
+    """Run context stamped into the --json report so BENCH_*.json
+    trajectories are comparable across machines/toolchains."""
+    import datetime
+    import os
+
+    meta = {
+        "timestamp": datetime.datetime.now(datetime.timezone.utc)
+                     .isoformat(timespec="seconds"),
+        "cpu_count": os.cpu_count(),
+        "platform": sys.platform,
+    }
+    try:
+        import jax
+        import jaxlib
+        meta["jax_version"] = jax.__version__
+        meta["jaxlib_version"] = jaxlib.__version__
+        meta["device_kind"] = jax.devices()[0].device_kind
+        meta["device_count"] = jax.device_count()
+    except Exception:  # noqa: BLE001 — meta is best-effort context
+        meta.setdefault("jax_version", None)
+    return meta
 
 
 def _rowdicts(columns, rows):
@@ -130,7 +157,7 @@ def main() -> None:
     if "roofline" not in args.skip:
         sections.append(("roofline", _run_roofline))
 
-    report = {"quick": quick, "sections": {}}
+    report = {"quick": quick, "meta": _run_meta(), "sections": {}}
     failures = 0
     for name, fn in sections:
         t0 = time.time()

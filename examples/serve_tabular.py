@@ -25,6 +25,12 @@ orphaned cohorts to the survivors, and still produces the fault-free
 answer.  ``--json PATH`` writes per-job results (winner family, test
 accuracy, trial accuracies) so a chaos run can be diffed against a
 fault-free run; the CI chaos gate does exactly that.
+
+Every run ends with the observability surface (DESIGN.md §15): one job's
+span timeline (on chaos runs, the job whose killed task re-dispatched —
+the retry shows as a distinct ``(retry #1)`` span with its own queue-wait
+and eval children) and the full Prometheus exposition that ``GET
+/v1/metrics`` serves, including ``heartbeat_misses_total`` after a kill.
 """
 import argparse
 import json
@@ -39,6 +45,7 @@ from repro.automl.engine import AutoMLConfig  # noqa: E402
 from repro.core.gen_dst import GenDSTConfig  # noqa: E402
 from repro.core.plan import plan  # noqa: E402
 from repro.data.tabular import PAPER_DATASETS, make_dataset, train_test_split  # noqa: E402
+from repro.obs.trace import render_timeline  # noqa: E402
 from repro.service import (  # noqa: E402
     BudgetExceeded, DistributedScheduler, ProcessWorkerPool, SubStratServer,
 )
@@ -147,6 +154,21 @@ def main():
         for tenant, acc in stats["tenants"].items():
             print(f"tenant {tenant}: {acc['jobs_submitted']} jobs, "
                   f"{acc['spent_s']:.2f}s compute")
+
+        # trace timeline: prefer a job with a visible retry span (chaos runs)
+        # so the killed task's re-dispatch is what gets shown
+        tl_jid = ids[0][0]
+        for jid, _ in ids:
+            tr = srv.trace(jid)
+            if tr and any(s.get("attempt", 0) > 0 for s in tr["spans"]):
+                tl_jid = jid
+                break
+        tr = srv.trace(tl_jid)
+        print(f"\ntrace timeline (job {tl_jid}, trace {tr['trace_id']}):")
+        print(render_timeline(tr["spans"]))
+
+        print("\n/v1/metrics exposition:")
+        print(srv.metrics_text())
 
         if args.json:
             payload = {"jobs": records,

@@ -68,6 +68,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs.jaxprof import note_trace
 from .engine import (
     TrialCohort, _apply_preproc, _fit_preproc, _select_features, _trial_key,
 )
@@ -353,6 +354,7 @@ def _eval_rung_fused(ginputs, Xparts, Xval_parts, Yall, Yall_val,
     heterogeneous-shape merge (DESIGN.md §12.3).  ``epochs`` is the scan
     length — the max step budget across the dispatch; trials with fewer
     steps carry their budget in ``gin["steps"]`` (DESIGN.md §13.1)."""
+    note_trace("batched._eval_rung_fused")   # body runs only while tracing
     Xall = _concat_padded(Xparts, Yall.shape[1], d)
     Xall_val = _concat_padded(Xval_parts, Yall_val.shape[1], d)
     return tuple(
@@ -366,6 +368,7 @@ def _eval_group(gin, Xall, Xall_val, Yall, Yall_val,
                 *, desc, c: int, d: int, epochs: int):
     """Single sub-batch dispatch — the budget path, so the engine can check
     the wall clock between sub-batches."""
+    note_trace("batched._eval_group")
     return _run_group(desc, gin, Xall, Xall_val, Yall, Yall_val, c, d,
                       epochs)
 

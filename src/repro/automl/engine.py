@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs.jaxprof import note_trace
 from .models import FAMILIES, accuracy, train_model
 
 __all__ = [
@@ -135,6 +136,7 @@ def _trial_key(seed: int, trial_id: int, rung_i: int) -> jax.Array:
 
 @functools.partial(jax.jit, static_argnames=("keep",))
 def _promote_mask(val_acc, *, keep: int):
+    note_trace("engine._promote_mask")   # body runs only while tracing
     order = jnp.argsort(-val_acc, stable=True)
     return jnp.zeros(val_acc.shape, bool).at[order[:keep]].set(True)
 

@@ -33,6 +33,8 @@ from typing import Any, Callable, Dict, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from ..obs.jaxprof import note_trace
+
 __all__ = ["FAMILIES", "ModelFamily", "adam_train", "train_model",
            "predict_model", "accuracy", "masked_loss", "masked_fit",
            "masked_accuracy", "CLASS_MASK_NEG"]
@@ -310,6 +312,7 @@ def adam_train(grad_fn, params0, lr, epochs: int, n_steps=None):
 
 @functools.partial(jax.jit, static_argnames=("family", "c", "epochs", "hp_static"))
 def _train_gd(key, X, y, family: str, c: int, epochs: int, hp_static: tuple):
+    note_trace("models._train_gd")   # body runs only while tracing
     hp = dict(hp_static)
     fam = FAMILIES[family]
     params = fam.init(key, X.shape[1], c, hp)

@@ -49,6 +49,7 @@ from .measures import (
     MEASURES,
 )
 from ..kernels.entropy.ops import population_histogram, resolve_interpret
+from ..obs.jaxprof import note_trace
 
 __all__ = ["GenDSTConfig", "DSTResult", "gen_dst", "gen_dst_batch",
            "default_dst_size", "random_dst"]
@@ -359,6 +360,7 @@ def _gen_dst_core(key, codes, values, n, m, cfg: GenDSTConfig, B, target):
     """Trace-level GA body shared by the solo jit and the vmapped batch jit
     (``gen_dst_batch``): one definition, so a batched search runs the exact
     same per-search math as a solo one."""
+    note_trace("gen_dst._gen_dst_core")   # body runs only while tracing
     N, M = codes.shape
     I, phi = cfg.num_islands, cfg.phi
     entropy = cfg.measure == "entropy"

@@ -36,6 +36,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs.jaxprof import note_trace
+
 __all__ = [
     "CodedDataset",
     "factorize",
@@ -176,6 +178,7 @@ def full_column_entropy(codes: jax.Array, B: int, chunk: int = 65536) -> jax.Arr
 
     Used once per Gen-DST run to precompute the reference ``F(D)`` terms.
     """
+    note_trace("measures.full_column_entropy")   # body runs only at trace
     N, M = codes.shape
     pad = (-N) % chunk
     padded = jnp.pad(codes, ((0, pad), (0, 0)))

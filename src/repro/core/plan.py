@@ -31,14 +31,16 @@ registered strategy cacheable and servable, not just Gen-DST.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
-from typing import Callable, Optional, Tuple, Union
+from typing import Callable, List, Optional, Tuple, Union
 
 import jax
 import numpy as np
 
 from ..automl.engine import AutoMLConfig, automl_fit, get_backend
+from ..obs import trace as _trace
 from .gen_dst import GenDSTConfig, default_dst_size
 from .measures import CodedDataset, factorize
 from .strategies import SubsetResult, get_strategy, run_strategy
@@ -168,6 +170,7 @@ def execute(
     coded: Optional[CodedDataset] = None,
     X_test: Optional[np.ndarray] = None,
     y_test: Optional[np.ndarray] = None,
+    trace_sink: Optional[List[dict]] = None,
 ):
     """Run one plan end to end; returns a ``SubStratResult``.
 
@@ -175,38 +178,50 @@ def execute(
     machine: factorize once, run the plan's subset strategy, train the
     sub-AutoML pass on the subset, then the restricted fine-tune on the
     full data (or the SubStrat-NF test evaluation when ``fine_tune`` is
-    off)."""
+    off).
+
+    The per-phase ``times`` ledger is recorded as spans (DESIGN.md §15.1):
+    pass ``trace_sink=[]`` to receive the closed span records — the same
+    shape the serving tier emits — for ``obs.trace.render_timeline``; the
+    result's ``times`` keys are unchanged either way."""
     from .substrat import (
         SubStratResult, build_subset, dst_feature_columns, nf_test_eval,
     )
     key = jax.random.key(0) if key is None else key
     times = {}
+    spans = [] if trace_sink is None else trace_sink
+    strat_name = (p.strategy if isinstance(p.strategy, str)
+                  else getattr(p.strategy, "__name__", "<callable>"))
+    tid = _trace.span_id("substrat-oneshot", strat_name)
 
-    t0 = time.perf_counter()
-    if coded is None:
-        coded = factorize(X, y)
-    times["factorize_s"] = time.perf_counter() - t0
+    @contextlib.contextmanager
+    def _phase(name, tkey):
+        t0 = time.perf_counter()
+        with _trace.span(spans, tid, name, phase=name):
+            yield
+        times[tkey] = times.get(tkey, 0.0) + (time.perf_counter() - t0)
 
-    t0 = time.perf_counter()
-    subset: SubsetResult = run_strategy(
-        p.strategy, key, coded, p.n, p.m, p.strategy_opts)
-    times["gen_dst_s"] = time.perf_counter() - t0
+    with _phase("factorize", "factorize_s"):
+        if coded is None:
+            coded = factorize(X, y)
+
+    with _phase("gen_dst", "gen_dst_s"):
+        subset: SubsetResult = run_strategy(
+            p.strategy, key, coded, p.n, p.m, p.strategy_opts)
     col_idx = dst_feature_columns(subset.col_mask, coded.target_col)
 
-    t0 = time.perf_counter()
-    X_sub, y_sub = build_subset(X, y, subset.row_idx, col_idx, key)
-    intermediate = automl_fit(X_sub, y_sub, config=p.resolved_sub_automl())
-    times["automl_sub_s"] = time.perf_counter() - t0
+    with _phase("sub_automl", "automl_sub_s"):
+        X_sub, y_sub = build_subset(X, y, subset.row_idx, col_idx, key)
+        intermediate = automl_fit(X_sub, y_sub, config=p.resolved_sub_automl())
 
     if p.fine_tune:
-        t0 = time.perf_counter()
-        final = automl_fit(
-            X, y,
-            config=p.resolved_ft_automl(),
-            restrict_family=intermediate.spec.family,
-            X_test=X_test, y_test=y_test,
-        )
-        times["fine_tune_s"] = time.perf_counter() - t0
+        with _phase("fine_tune", "fine_tune_s"):
+            final = automl_fit(
+                X, y,
+                config=p.resolved_ft_automl(),
+                restrict_family=intermediate.spec.family,
+                X_test=X_test, y_test=y_test,
+            )
     else:
         final = intermediate
         if X_test is not None:

@@ -6,12 +6,27 @@ Decode: per-token matmuls + attention over the cached context.
 
 N_active counts matmul-visible params (embedding lookup excluded, lm_head
 included; MoE counts routed experts at top_k/E utilization + shared).
+
+``tabular_trial_flops`` is the serving tier's counterpart for the SubStrat
+AutoML trials: the same 6·P-train / 2·P-eval pricing applied to the
+batched engine's tabular MLP, used by ``obs/jaxprof.pack_flops`` for
+padded-vs-useful megabatch accounting.
 """
 from __future__ import annotations
 
 from ..models.config import ModelConfig, ShapeSpec
 
-__all__ = ["active_params", "model_flops"]
+__all__ = ["active_params", "model_flops", "tabular_trial_flops"]
+
+
+def tabular_trial_flops(n_tr: int, n_val: int, d: int, n_classes: int,
+                        steps: int, hidden: int = 32) -> float:
+    """Analytic FLOPs of one tabular AutoML trial: a ``d → hidden →
+    n_classes`` MLP trained full-batch for ``steps`` epochs on ``n_tr``
+    rows, evaluated once on ``n_val`` rows (6·P per trained example-step,
+    2·P per validation example)."""
+    p = d * hidden + hidden * n_classes
+    return 6.0 * p * float(steps) * float(n_tr) + 2.0 * p * float(n_val)
 
 
 def _attn_params(cfg: ModelConfig) -> float:

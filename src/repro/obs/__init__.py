@@ -1,0 +1,15 @@
+"""Observability subsystem (DESIGN.md §15): tracing, metrics, JAX
+compile/dispatch accounting.  Zero dependencies beyond the stdlib — the
+serving tier imports this unconditionally.
+
+- ``obs.trace``   — structured spans with deterministic ids, a contextvar
+  current-span, and cross-process propagation through the wire header.
+- ``obs.metrics`` — counters/gauges/histograms with Prometheus text
+  exposition and a bit-identical state round-trip for checkpoints.
+- ``obs.jaxprof`` — jit-retracing counters per call-site, padded-vs-useful
+  FLOP accounting for megabatch packs, and an opt-in per-dispatch profile
+  hook.
+"""
+from . import jaxprof, metrics, trace
+
+__all__ = ["jaxprof", "metrics", "trace"]

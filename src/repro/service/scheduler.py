@@ -71,6 +71,8 @@ from ..core.substrat import (
     SubStratConfig, SubStratResult, build_subset, dst_feature_columns,
     nf_test_eval,
 )
+from ..obs import jaxprof, trace
+from ..obs.metrics import MetricsRegistry
 from .cache import DSTCache, DSTCacheEntry, dst_cache_key
 from .fingerprint import dataset_fingerprint
 
@@ -199,6 +201,10 @@ class SubStratJob:
     error: Optional[BaseException] = None
     # streamed partial results: one entry per recorded rung (DESIGN.md §14.4)
     leaderboard: List[dict] = dataclasses.field(default_factory=list)
+    # observability (DESIGN.md §15.1): deterministic per-job trace id and
+    # the closed span records of every phase/rung/dispatch the job touched
+    trace_id: str = ""
+    spans: List[dict] = dataclasses.field(default_factory=list)
 
     @property
     def active(self) -> bool:
@@ -250,6 +256,43 @@ class Scheduler:
         self.solo_rungs = 0     # rungs evaluated per-job
         self.merged_dst = 0     # subset searches that rode a batched dispatch
         self.poisoned_packs = 0  # failed packs re-run solo to isolate blame
+        self.metrics = MetricsRegistry()
+        self._register_metrics()
+
+    def _register_metrics(self) -> None:
+        """Register (or re-bind, after ``load_snapshot``) the scheduler's
+        metric families — get-or-create, so calling it after a state
+        restore re-attaches the ``m_*`` handles to the restored families
+        (DESIGN.md §15.3).  Subclasses extend, never replace."""
+        m = self.metrics
+        self.m_dispatches = m.counter(
+            "dispatches_total", "rung dispatches by execution mode", ("mode",))
+        self.m_dispatch_latency = m.histogram(
+            "dispatch_latency_seconds",
+            "wall seconds of one rung dispatch (merged: whole group)",
+            ("mode",))
+        self.m_cache_hits = m.counter(
+            "cache_hits_total", "DST cache hits at job admission/re-probe")
+        self.m_cache_misses = m.counter(
+            "cache_misses_total", "cacheable jobs admitted without an entry")
+        self.m_poisoned = m.counter(
+            "poisoned_packs_total",
+            "failed packed dispatches re-run solo to isolate blame")
+        self.m_jobs_finished = m.counter(
+            "jobs_finished_total", "jobs reaching a terminal phase",
+            ("phase",))
+        self.m_pack_waste = m.gauge(
+            "pack_waste_ratio",
+            "merge_waste (padded/useful compute) of the newest megabatch "
+            "group")
+        self.m_padded_flops = m.counter(
+            "pack_padded_flops_total",
+            "analytic FLOPs packed dispatches actually execute (padded "
+            "shapes/steps)")
+        self.m_useful_flops = m.counter(
+            "pack_useful_flops_total",
+            "analytic FLOPs the packed trials needed at their own "
+            "shapes/steps")
 
     @property
     def hetero_pad_limit(self) -> float:
@@ -291,6 +334,7 @@ class Scheduler:
             job_id=self._next_id, tenant=tenant, X=X, y=y,
             key=jax.random.key(0) if key is None else key,
             plan=plan, coded=coded, X_test=X_test, y_test=y_test,
+            trace_id=trace.job_trace_id(self._next_id),
         )
         self.jobs[job.job_id] = job
         self._next_id += 1
@@ -301,12 +345,41 @@ class Scheduler:
 
     # -- phase work ---------------------------------------------------------
 
+    def _job_time_span(self, job: SubStratJob, name: str, key: str,
+                       w0: float, seconds: float, **attrs) -> None:
+        """Record one closed span on the job's trace AND fold its cost into
+        ``job.times[key]`` — the span record is the phase-time bookkeeping
+        (DESIGN.md §15.1), not a parallel ledger.  ``seconds`` may be an
+        attributed equal share of a merged dispatch rather than the span's
+        own wall extent; the span keeps both (extent in t0/t1, share in
+        attrs)."""
+        job.spans.append(trace.make_span(
+            job.trace_id, name, w0, time.time(),
+            attrs={"seconds": float(seconds), **attrs}))
+        job.times[key] = job.times.get(key, 0.0) + float(seconds)
+
+    def _fold_task_spans(self, group: Sequence[SubStratJob],
+                         spans: Sequence[dict]) -> None:
+        """Copy one remote dispatch's transport/worker spans onto every
+        participating job's trace.  The copies are re-tagged with the job's
+        trace id for single-timeline rendering; span/parent ids are stored
+        explicitly in each record, so the dispatch→queue_wait→eval tree
+        survives the re-tag intact."""
+        for job in group:
+            for sp in spans:
+                cp = dict(sp)
+                cp["trace_id"] = job.trace_id
+                cp["attrs"] = dict(sp["attrs"])
+                job.spans.append(cp)
+
     def _factorize(self, job: SubStratJob) -> None:
         t0 = time.perf_counter()
+        w0 = time.time()
         if job.coded is None:
             job.coded = factorize(job.X, job.y)
         job.fingerprint = dataset_fingerprint(job.coded)
-        job.times["factorize_s"] = time.perf_counter() - t0
+        self._job_time_span(job, "factorize", "factorize_s", w0,
+                            time.perf_counter() - t0, phase="factorize")
 
         # the cache key is the plan's resolved subset identity — the actual
         # search problem, not the (possibly None) plan fields
@@ -317,6 +390,8 @@ class Scheduler:
                 search_cfg=(strategy, opts))
 
         if not self._try_cache_hit(job):
+            if job.cache_key is not None:
+                self.m_cache_misses.inc()
             job.phase = "dst"
 
     def _try_cache_hit(self, job: SubStratJob) -> bool:
@@ -324,14 +399,17 @@ class Scheduler:
         advance the job past the subset search (and, when warm-startable,
         past the sub-AutoML pass)."""
         t0 = time.perf_counter()
+        w0 = time.time()
         entry = self.cache.get(job.cache_key) if job.cache_key else None
         if entry is None:
             return False
         # cache hit: the stored subset replaces the whole strategy search;
         # gen_dst_s records what the hit actually cost (the lookup)
         job.cache_hit = True
+        self.m_cache_hits.inc()
         self._install_subset(job, entry.row_idx, entry.col_mask, entry.fitness)
-        job.times["gen_dst_s"] = time.perf_counter() - t0
+        self._job_time_span(job, "cache_probe", "gen_dst_s", w0,
+                            time.perf_counter() - t0, cache_hit=True)
         if self.warm_start and job.plan.fine_tune and entry.winner_family:
             job.warm_family = entry.winner_family
             job.phase = "fine_tune"
@@ -393,7 +471,11 @@ class Scheduler:
     def _record_subset(self, job: SubStratJob, subset, elapsed: float) -> None:
         self._install_subset(job, subset.row_idx, subset.col_mask,
                              subset.fitness)
-        job.times["gen_dst_s"] = elapsed
+        # the span's extent approximates the dispatch window (batched
+        # searches hand each rep its equal share, not its own wall clock)
+        self._job_time_span(job, "gen_dst", "gen_dst_s",
+                            time.time() - elapsed, elapsed,
+                            phase="dst", strategy=job.strategy_name)
         if job.cache_key is not None:
             self.cache.put(job.cache_key, DSTCacheEntry(
                 row_idx=job.row_idx, col_mask=job.col_mask,
@@ -491,6 +573,7 @@ class Scheduler:
         if job.search is not None:
             return
         t0 = time.perf_counter()
+        w0 = time.time()
         p = job.plan
         if job.phase == "sub_automl":
             X_sub, y_sub = build_subset(job.X, job.y, job.row_idx, job.col_idx,
@@ -503,8 +586,9 @@ class Scheduler:
             job.search = search_init(
                 job.X, job.y, config=p.resolved_ft_automl(),
                 restrict_family=family)
-        key = _PHASE_TIME_KEY[job.phase]
-        job.times[key] = job.times.get(key, 0.0) + (time.perf_counter() - t0)
+        self._job_time_span(job, f"{job.phase}/init",
+                            _PHASE_TIME_KEY[job.phase], w0,
+                            time.perf_counter() - t0, phase=job.phase)
 
     def _finish_search(self, job: SubStratJob) -> None:
         if job.phase == "sub_automl":
@@ -540,10 +624,12 @@ class Scheduler:
             strategy=job.strategy_name,
         )
         job.phase = "done"
+        self.m_jobs_finished.inc(phase="done")
         self._release_data(job)
 
     def _fail(self, job: SubStratJob, error: BaseException) -> None:
         job.error, job.phase = error, "failed"
+        self.m_jobs_finished.inc(phase="failed")
         self._release_data(job)
 
     @staticmethod
@@ -625,10 +711,19 @@ class Scheduler:
                 len({(tc.rung_i, tc.epochs) for tc in cohorts}) > 1)
         else:
             self.solo_rungs += 1
+        mode = "merged" if len(group) > 1 else "solo"
+        wall = share * len(group)
+        self.m_dispatches.inc(mode=mode)
+        self.m_dispatch_latency.observe(wall, mode=mode)
+        jaxprof.dispatch_event("rung_dispatch", wall,
+                               mode=mode, jobs=len(group))
+        w0 = time.time() - wall   # the dispatch window just ended
         for job, (scored, positions) in zip(group, outs):
             search_record(job.search, scored, positions, share)
-            key = _PHASE_TIME_KEY[job.phase]
-            job.times[key] = job.times.get(key, 0.0) + share
+            rung = job.search.rung_i - 1   # search_record advanced past it
+            self._job_time_span(job, f"{job.phase}/rung{rung}",
+                                _PHASE_TIME_KEY[job.phase], w0, share,
+                                phase=job.phase, rung=rung, mode=mode)
             self._note_rung(job)
 
     def _isolate_failure(self, group: List[SubStratJob], cohorts,
@@ -640,6 +735,7 @@ class Scheduler:
             self._fail(group[0], error)
             return
         self.poisoned_packs += 1
+        self.m_poisoned.inc()
         for job, tc in zip(group, cohorts):
             self._run_merged([job], [tc], eval_fn)
 
@@ -690,14 +786,20 @@ class Scheduler:
 
         for job in solo:
             t0 = time.perf_counter()
+            w0 = time.time()
             try:
                 search_eval_rung(job.search)
             except Exception as e:   # noqa: BLE001 — isolate job failures
                 self._fail(job, e)
                 continue
+            dt = time.perf_counter() - t0
             self.solo_rungs += 1
-            key = _PHASE_TIME_KEY[job.phase]
-            job.times[key] = job.times.get(key, 0.0) + (time.perf_counter() - t0)
+            self.m_dispatches.inc(mode="solo")
+            self.m_dispatch_latency.observe(dt, mode="solo")
+            rung = job.search.rung_i - 1
+            self._job_time_span(job, f"{job.phase}/rung{rung}",
+                                _PHASE_TIME_KEY[job.phase], w0, dt,
+                                phase=job.phase, rung=rung, mode="solo")
             self._note_rung(job)
 
         if mega:
@@ -706,11 +808,17 @@ class Scheduler:
             # groups to exact shapes so every merge stays bit-identical
             cohorts = [search_trial_cohort(j.search) for j in mega]
             metas = [CohortMeta(tc.shape, tc.trial_steps) for tc in cohorts]
+            groups = pack_megabatches(metas, self.waste_budget,
+                                      same_shape_only=not self.hetero_merge)
+            for gidx in groups:
+                gmetas = [metas[i] for i in gidx]
+                self.m_pack_waste.set(merge_waste(gmetas))
+                padded, useful = jaxprof.pack_flops(gmetas)
+                self.m_padded_flops.inc(padded)
+                self.m_useful_flops.inc(useful)
             self._eval_groups(
                 [([mega[i] for i in gidx], [cohorts[i] for i in gidx])
-                 for gidx in pack_megabatches(
-                     metas, self.waste_budget,
-                     same_shape_only=not self.hetero_merge)],
+                 for gidx in groups],
                 eval_trial_megabatch)
 
         if merged:
@@ -786,6 +894,7 @@ class Scheduler:
             "solo_rungs": self.solo_rungs,
             "merged_dst": self.merged_dst,
             "poisoned_packs": self.poisoned_packs,
+            "metrics": self.metrics.to_dict(),
         }
 
     # -- checkpoint / restore (DESIGN.md §14.5) ------------------------------
@@ -797,7 +906,7 @@ class Scheduler:
                          "phase", "cache_hit", "warm_family", "fingerprint",
                          "cache_key", "row_idx", "col_mask", "col_idx",
                          "dst_fitness", "y_sub", "intermediate", "final",
-                         "result")
+                         "result", "trace_id")
 
     def snapshot(self) -> bytes:
         """Serialize the whole scheduler — every job (including mid-search
@@ -814,6 +923,7 @@ class Scheduler:
             d["coded"] = job.coded
             d["times"] = dict(job.times)
             d["leaderboard"] = list(job.leaderboard)
+            d["spans"] = list(job.spans)
             d["search"] = (search_snapshot(job.search)
                            if job.search is not None else None)
             d["error"] = None if job.error is None else repr(job.error)
@@ -823,6 +933,7 @@ class Scheduler:
             "next_id": self._next_id,
             "counters": {k: getattr(self, k) for k in self._COUNTER_FIELDS},
             "cache": self.cache.items(),
+            "metrics": self.metrics.state_dict(),
         }
         return wire.dumps(payload, kind="scheduler")
 
@@ -840,6 +951,7 @@ class Scheduler:
                 setattr(job, f, d[f])
             job.times = dict(d["times"])
             job.leaderboard = list(d["leaderboard"])
+            job.spans = list(d.get("spans", []))
             job.search = (search_restore(d["search"])
                           if d["search"] is not None else None)
             # the original exception class is gone; keep its repr visible
@@ -851,6 +963,11 @@ class Scheduler:
             setattr(self, k, v)
         for key, entry in payload["cache"]:
             self.cache.put(key, entry)
+        if "metrics" in payload:
+            # restore first, then re-register: get-or-create re-attaches the
+            # m_* handles to the restored families (bit-identical round trip)
+            self.metrics.load_state(payload["metrics"])
+            self._register_metrics()
 
     def save_checkpoint_to(self, ckpt_dir, step: int, *, keep: int = 3) -> None:
         """Write ``snapshot()`` as an atomic on-disk checkpoint

@@ -48,7 +48,10 @@ class JobStatus:
                                #   | sub_automl | fine_tune | done | failed
     cache_hit: bool
     warm_started: bool         # cache knew the winner family: sub pass skipped
-    times: Dict[str, float]    # per-phase seconds so far
+    times: Dict[str, float]    # per-phase seconds so far (raw ledger keys)
+    # the canonical per-phase breakdown (DESIGN.md §15.1): always all four
+    # pipeline phases, zero where a phase has not run (or was skipped)
+    phase_times: Dict[str, float] = dataclasses.field(default_factory=dict)
     error: Optional[str] = None
     # streamed partial results (DESIGN.md §14.4): the rung-by-rung
     # leaderboard entries recorded since the caller's cursor, plus the
@@ -59,6 +62,12 @@ class JobStatus:
     @property
     def done(self) -> bool:
         return self.phase == "done"
+
+
+# JobStatus.phase_times key <- job.times ledger key
+_PHASE_TIME_KEYS = (("factorize", "factorize_s"), ("gen_dst", "gen_dst_s"),
+                    ("sub_automl", "automl_sub_s"),
+                    ("fine_tune", "fine_tune_s"))
 
 
 class SubStratServer:
@@ -152,6 +161,8 @@ class SubStratServer:
             cache_hit=job.cache_hit,
             warm_started=job.warm_family is not None,
             times=dict(job.times),
+            phase_times={name: float(job.times.get(key, 0.0))
+                         for name, key in _PHASE_TIME_KEYS},
             error=None if job.error is None else repr(job.error),
             leaderboard=tuple(job.leaderboard[since:]),
             leaderboard_total=len(job.leaderboard),
@@ -185,3 +196,19 @@ class SubStratServer:
             for tenant, acc in self.tenants.items()
         }
         return out
+
+    # -- observability (DESIGN.md §15) ---------------------------------------
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition: the scheduler's registry plus the
+        process-global JAX compile/dispatch counters (``GET /v1/metrics``)."""
+        from ..obs import jaxprof
+        return self.scheduler.metrics.render() + jaxprof.render_prometheus()
+
+    def trace(self, job_id: int) -> Optional[dict]:
+        """One job's recorded spans (JSON-safe), or None for unknown ids."""
+        job = self.scheduler.jobs.get(job_id)
+        if job is None:
+            return None
+        return {"job_id": job.job_id, "trace_id": job.trace_id,
+                "spans": list(job.spans)}

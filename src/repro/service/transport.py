@@ -59,10 +59,11 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..distributed.fault import Heartbeat, assign_shards
+from ..obs import jaxprof, trace
 from . import wire
 from .scheduler import Scheduler
 from .server import SubStratServer
-from .worker import cohort_payload, eval_task, worker_main
+from .worker import cohort_payload, eval_task, handle_eval, worker_main
 
 __all__ = ["DistributedScheduler", "ProcessWorkerPool", "RemoteEvalError",
            "SimWorkerPool", "SubStratHTTPClient", "SubStratHTTPServer"]
@@ -196,7 +197,6 @@ class SimWorkerPool:
         self._inbox[worker_id].append(msg)
 
     def recv(self, timeout_s: float = 0.0):
-        import traceback
         if self._out:
             return self._out.pop(0)
         for w in sorted(self._inbox):
@@ -205,7 +205,8 @@ class SimWorkerPool:
             msg = self._inbox[w].pop(0)
             if msg is None or msg[0] == "stop":
                 continue
-            _op, task_id, payload_bytes = msg
+            _op, task_id, payload_bytes = msg[0], msg[1], msg[2]
+            attempt = int(msg[3]) if len(msg) > 3 else 0
             fault = self._faults.get((w, self._n_dequeued[w]))
             self._n_dequeued[w] += 1
             if fault is not None:
@@ -217,15 +218,9 @@ class SimWorkerPool:
                     self._stalled.add(w)    # alive but silent forever
                     return None
             self._out.append(("beat", w, time.monotonic()))
-            t0 = time.perf_counter()
-            try:
-                outs = eval_task(wire.loads(payload_bytes))
-                self._out.append(("done", task_id, w, wire.dumps(outs),
-                                  time.perf_counter() - t0))
-            except Exception as e:   # noqa: BLE001 — mirror the worker loop
-                self._out.append(("error", task_id, w, repr(e),
-                                  traceback.format_exc(),
-                                  time.perf_counter() - t0))
+            # handle_eval is the real worker's reply builder — same tuple
+            # shape, same worker-side spans, same blame-isolation semantics
+            self._out.append(handle_eval(task_id, w, payload_bytes, attempt))
             self.tasks_evaluated += 1
             return self._out.pop(0)
         return None
@@ -269,12 +264,34 @@ class DistributedScheduler(Scheduler):
         self.ckpt_every = ckpt_every
         self.ckpt_keep = ckpt_keep
         self._step_no = 0
+        self._task_seq = 0    # dispatch sequence: deterministic task traces
         # transport counters (surface in stats())
         self.remote_tasks = 0
         self.redispatched_tasks = 0
         self.worker_failures = 0
         self.local_fallbacks = 0
         self.dup_results = 0
+
+    def _register_metrics(self) -> None:
+        super()._register_metrics()
+        m = self.metrics
+        self.m_remote_tasks = m.counter(
+            "remote_tasks_total", "packed tasks shipped to the worker pool")
+        self.m_redispatched = m.counter(
+            "redispatched_tasks_total",
+            "tasks re-dispatched after their owner was declared lost")
+        self.m_heartbeat_misses = m.counter(
+            "heartbeat_misses_total",
+            "owners declared lost (dead process, or dispatched with no "
+            "heartbeat inside stall_timeout_s)")
+        self.m_worker_failures = m.counter(
+            "worker_failures_total", "workers removed from the alive set")
+        self.m_local_fallbacks = m.counter(
+            "local_fallbacks_total",
+            "tasks the front end evaluated itself (no surviving workers)")
+        self.m_dup_results = m.counter(
+            "dup_results_total",
+            "straggler results arriving after their task was re-dispatched")
 
     # -- transport hook ------------------------------------------------------
 
@@ -283,16 +300,25 @@ class DistributedScheduler(Scheduler):
             return
         kind = ("rung" if getattr(eval_fn, "__name__", "")
                 == "eval_rung_cohorts" else "mega")
-        payloads = {
-            tid: wire.dumps({"kind": kind,
-                             "cohorts": [cohort_payload(tc) for tc in cohorts]},
-                            kind="task")
-            for tid, (_, cohorts) in enumerate(packed)}
+        task_traces: Dict[int, str] = {}
+        payloads: Dict[int, bytes] = {}
+        for tid, (group, cohorts) in enumerate(packed):
+            # deterministic per-dispatch trace; the wire header carries just
+            # enough for the worker to re-derive its parent span id
+            ttrace = trace.span_id("substrat-tasks", str(self._task_seq))
+            self._task_seq += 1
+            task_traces[tid] = ttrace
+            payloads[tid] = wire.dumps(
+                {"kind": kind,
+                 "cohorts": [cohort_payload(tc) for tc in cohorts]},
+                kind="task", trace=trace.child_ctx(ttrace, "dispatch"))
         results = self._run_remote(payloads,
                                    {tid: len(g) for tid, (g, _) in
-                                    enumerate(packed)})
+                                    enumerate(packed)},
+                                   task_traces)
         for tid, (group, cohorts) in enumerate(packed):
-            status, val, share = results[tid]
+            status, val, share, spans = results[tid]
+            self._fold_task_spans(group, spans)
             if status == "ok":
                 self._record_group(group, cohorts, val, share)
             else:
@@ -310,18 +336,68 @@ class DistributedScheduler(Scheduler):
         return ("ok", outs, (time.perf_counter() - t0) / group_size)
 
     def _run_remote(self, payloads: Dict[int, bytes],
-                    group_sizes: Dict[int, int]) -> Dict[int, tuple]:
+                    group_sizes: Dict[int, int],
+                    task_traces: Optional[Dict[int, str]] = None,
+                    ) -> Dict[int, tuple]:
         """Dispatch wire payloads across the pool; collect with recovery.
 
-        Returns ``{task_id: ("ok", outs, share) | ("exc", error, 0.0)}``.
-        """
+        Returns ``{task_id: ("ok", outs, share, spans) |
+        ("exc", error, 0.0, spans)}``.  ``spans`` is the task's stitched
+        timeline: one dispatch span per attempt (a re-dispatch after a lost
+        owner appears as a distinct retry span), each with a front-end
+        queue_wait child and — for the attempt that completed — the
+        worker-attached deserialize/eval/serialize children (DESIGN.md
+        §15.2)."""
+        task_traces = task_traces or {}
         n_tasks = len(payloads)
         results: Dict[int, tuple] = {}
+        spans: Dict[int, list] = {tid: [] for tid in payloads}
+        attempts: Dict[int, int] = {tid: 0 for tid in payloads}
+        open_d: Dict[int, dict] = {}   # tid -> open dispatch span
+        open_q: Dict[int, dict] = {}   # tid -> open queue_wait child
         pending = set(payloads)
         owner: Dict[int, int] = {}
         dispatched_at: Dict[int, float] = {}
         last_beat: Dict[int, float] = {}
         self.remote_tasks += n_tasks
+        self.m_remote_tasks.inc(n_tasks)
+
+        def _open_dispatch(tid, w):
+            tt = task_traces.get(tid)
+            if tt is None:
+                return
+            now_w = time.time()
+            a = attempts[tid]
+            d = trace.make_span(tt, "dispatch", now_w, now_w, attempt=a,
+                                attrs={"worker": int(w)})
+            q = trace.make_span(tt, "queue_wait", now_w, now_w, attempt=a,
+                                parent_id=d["span_id"],
+                                attrs={"worker": int(w)})
+            open_d[tid], open_q[tid] = d, q
+
+        def _note_beat(w):
+            # a beat fires at task pickup: close the queue_wait of the
+            # earliest-dispatched task still waiting on this worker
+            waiting = [tid for tid in pending
+                       if owner.get(tid) == w and tid in open_q]
+            if waiting:
+                tid = min(waiting, key=lambda t: dispatched_at[t])
+                q = open_q.pop(tid)
+                q["t1"] = time.time()
+                spans[tid].append(q)
+
+        def _close_dispatch(tid, outcome):
+            now_w = time.time()
+            q = open_q.pop(tid, None)
+            if q is not None:       # never picked up: waited the whole time
+                q["t1"] = now_w
+                q["attrs"]["outcome"] = outcome
+                spans[tid].append(q)
+            d = open_d.pop(tid, None)
+            if d is not None:
+                d["t1"] = now_w
+                d["attrs"]["outcome"] = outcome
+                spans[tid].append(d)
 
         def _dispatch(tids, alive):
             amap = assign_shards(n_tasks, list(alive), self.pool.n_workers)
@@ -330,19 +406,29 @@ class DistributedScheduler(Scheduler):
                 w = amap[tid]
                 owner[tid] = w
                 dispatched_at[tid] = now
-                self.pool.send(w, ("eval", tid, payloads[tid]))
+                self.pool.send(w, ("eval", tid, payloads[tid], attempts[tid]))
+                _open_dispatch(tid, w)
 
         def _fall_back_locally(tids):
             self.local_fallbacks += len(tids)
+            self.m_local_fallbacks.inc(len(tids))
             for tid in sorted(tids):
-                results[tid] = self._eval_local(payloads[tid],
-                                                group_sizes[tid])
+                _close_dispatch(tid, "lost")
+                w0 = time.time()
+                status, val, share = self._eval_local(payloads[tid],
+                                                      group_sizes[tid])
+                tt = task_traces.get(tid)
+                if tt is not None:
+                    spans[tid].append(trace.make_span(
+                        tt, "local_fallback", w0, time.time(),
+                        attempt=attempts[tid], attrs={"outcome": status}))
+                results[tid] = (status, val, share)
                 pending.discard(tid)
 
         alive = self.pool.alive_workers()
         if not alive:
             _fall_back_locally(set(pending))
-            return results
+            return {tid: (*r, spans[tid]) for tid, r in results.items()}
         _dispatch(pending, alive)
 
         while pending:
@@ -353,13 +439,30 @@ class DistributedScheduler(Scheduler):
                     w = msg[1]
                     last_beat[w] = time.monotonic()
                     self.heartbeat.last_seen[w] = last_beat[w]
+                    if op == "beat":
+                        _note_beat(w)
                 elif op in ("done", "error"):
-                    tid, w, dt = msg[1], msg[2], msg[-1]
+                    # explicit per-op indices: replies now end with the
+                    # worker's span list, so msg[-1] is no longer dt
+                    if op == "done":
+                        tid, w, dt = msg[1], msg[2], msg[4]
+                        wspans = msg[5] if len(msg) > 5 else []
+                    else:
+                        tid, w, dt = msg[1], msg[2], msg[5]
+                        wspans = msg[6] if len(msg) > 6 else []
                     self.heartbeat.beat(w, dt)
                     last_beat[w] = time.monotonic()
                     if tid not in pending:
                         self.dup_results += 1   # straggler after re-dispatch
+                        self.m_dup_results.inc()
                         continue
+                    spans[tid].extend(wspans)
+                    _close_dispatch(tid, "ok" if op == "done" else "error")
+                    self.m_dispatches.inc(mode="remote")
+                    self.m_dispatch_latency.observe(dt, mode="remote")
+                    jaxprof.dispatch_event("remote_dispatch", dt,
+                                           worker=int(w),
+                                           attempt=attempts[tid])
                     if op == "done":
                         outs = wire.loads(msg[3])
                         results[tid] = ("ok", outs, dt / group_sizes[tid])
@@ -385,14 +488,20 @@ class DistributedScheduler(Scheduler):
             for w in lost:
                 self.pool.kill(w)
             self.worker_failures += len(lost)
+            self.m_worker_failures.inc(len(lost))
+            self.m_heartbeat_misses.inc(len(lost))
             orphans = {tid for tid in pending if owner[tid] in lost}
+            for tid in sorted(orphans):
+                _close_dispatch(tid, "lost")
+                attempts[tid] += 1   # the next dispatch is a visible retry
             survivors = self.pool.alive_workers()
             if survivors:
                 self.redispatched_tasks += len(orphans)
+                self.m_redispatched.inc(len(orphans))
                 _dispatch(orphans, survivors)
             else:
                 _fall_back_locally(orphans)
-        return results
+        return {tid: (*r, spans[tid]) for tid, r in results.items()}
 
     # -- checkpointed stepping ----------------------------------------------
 
@@ -455,6 +564,15 @@ def _send_wire(handler, code: int, blob: bytes) -> None:
     handler.wfile.write(blob)
 
 
+def _send_text(handler, code: int, text: str, content_type: str) -> None:
+    body = text.encode("utf-8")
+    handler.send_response(code)
+    handler.send_header("Content-Type", content_type)
+    handler.send_header("Content-Length", str(len(body)))
+    handler.end_headers()
+    handler.wfile.write(body)
+
+
 class SubStratHTTPServer:
     """HTTP transport in front of a ``SubStratServer`` (DESIGN.md §14.6).
 
@@ -468,6 +586,9 @@ class SubStratHTTPServer:
     - ``GET /v1/result?job_id=N`` — wire ``SubStratResult``; ``202`` while
       the job is still running, ``500`` with the error if it failed
     - ``GET /v1/stats`` — JSON scheduler + tenant statistics
+    - ``GET /v1/metrics`` — Prometheus text exposition (scheduler registry
+      + process-global jit/XLA counters; DESIGN.md §15.3)
+    - ``GET /v1/trace?job_id=N`` — JSON span records of one job's timeline
     """
 
     def __init__(self, server: SubStratServer, host: str = "127.0.0.1",
@@ -573,6 +694,20 @@ class SubStratHTTPServer:
                 with self._lock:
                     stats = self.server.stats()
                 _send_json(handler, 200, stats)
+            elif route == ("GET", "/v1/metrics"):
+                with self._lock:
+                    text = self.server.metrics_text()
+                _send_text(handler, 200, text,
+                           "text/plain; version=0.0.4; charset=utf-8")
+            elif route == ("GET", "/v1/trace"):
+                job_id = int(qs["job_id"])
+                with self._lock:
+                    payload = self.server.trace(job_id)
+                if payload is None:
+                    _send_json(handler, 404,
+                               {"error": f"unknown job {job_id}"})
+                else:
+                    _send_json(handler, 200, payload)
             else:
                 _send_json(handler, 404,
                            {"error": f"no route {method} {parsed.path}"})
@@ -665,4 +800,19 @@ class SubStratHTTPClient:
         status, body = self._request("/v1/stats")
         if status != 200:
             raise RuntimeError(f"stats failed ({status}): {body!r}")
+        return self._json(body)
+
+    def metrics(self) -> str:
+        """The server's Prometheus text exposition (``/v1/metrics``)."""
+        status, body = self._request("/v1/metrics")
+        if status != 200:
+            raise RuntimeError(f"metrics failed ({status}): {body!r}")
+        return body.decode("utf-8")
+
+    def trace(self, job_id: int) -> dict:
+        """One job's span records: ``{"job_id", "trace_id", "spans"}`` —
+        feed ``spans`` to ``obs.trace.render_timeline`` for the ASCII view."""
+        status, body = self._request(f"/v1/trace?job_id={job_id}")
+        if status != 200:
+            raise RuntimeError(f"trace failed ({status}): {body!r}")
         return self._json(body)

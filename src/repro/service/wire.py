@@ -24,6 +24,13 @@ reserved for future codecs that compress).
 Versioning: ``loads`` rejects any payload whose version differs from
 ``WIRE_VERSION`` with a ``WireVersionError`` naming both versions — a
 front end never silently misparses a newer worker's reply (or vice versa).
+Version 2 added the optional ``trace`` header field — the cross-process
+span-propagation context (``obs/trace.child_ctx``).  The bump is
+deliberate even though a v1 reader could parse the buffers: a v1 endpoint
+would silently *drop* the trace context and the per-job timeline would be
+missing its worker legs with no error anywhere, which is exactly the
+silent-misparse class the version check exists to prevent (DESIGN.md
+§15.2).
 
 Dataclasses are encoded by qualified name and re-imported on decode;
 decoding is restricted to ``repro.*`` modules so a wire payload can only
@@ -37,14 +44,15 @@ import dataclasses
 import importlib
 import json
 import struct
-from typing import Any, List, Tuple
+from typing import Any, List, Optional, Tuple
 
 import numpy as np
 
-__all__ = ["WIRE_VERSION", "WireError", "WireVersionError", "dumps", "loads"]
+__all__ = ["WIRE_VERSION", "WireError", "WireVersionError", "dumps", "loads",
+           "kind_of", "trace_of"]
 
 MAGIC = b"SBWR"
-WIRE_VERSION = 1
+WIRE_VERSION = 2
 
 # dataclass decoding is restricted to this package's own modules
 _DC_MODULE_PREFIX = "repro."
@@ -174,8 +182,13 @@ def _dec(node: Any, bufs: List[np.ndarray]):
     raise WireError(f"unknown wire node tags: {sorted(node)}")
 
 
-def dumps(obj: Any, *, kind: str = "") -> bytes:
-    """Serialize ``obj`` to a versioned wire payload."""
+def dumps(obj: Any, *, kind: str = "", trace: Optional[dict] = None) -> bytes:
+    """Serialize ``obj`` to a versioned wire payload.
+
+    ``trace`` is an optional JSON-safe span-propagation context
+    (``obs/trace.child_ctx``) carried in the header — readable via
+    ``trace_of`` without decoding the buffers, so a worker can parent its
+    spans before paying for deserialization."""
     bufs: List[np.ndarray] = []
     tree = _enc(obj, bufs, "$")
     header = {
@@ -184,6 +197,8 @@ def dumps(obj: Any, *, kind: str = "") -> bytes:
         "obj": tree,
         "bufs": [{"d": a.dtype.str, "s": list(a.shape)} for a in bufs],
     }
+    if trace is not None:
+        header["trace"] = trace
     hbytes = json.dumps(header, separators=(",", ":")).encode("utf-8")
     parts = [MAGIC, struct.pack("<II", WIRE_VERSION, len(hbytes)), hbytes]
     parts.extend(a.tobytes() for a in bufs)
@@ -211,6 +226,13 @@ def kind_of(data: bytes) -> str:
     """Peek a payload's ``kind`` tag without decoding its buffers."""
     header, _ = _read_header(data)
     return header.get("kind", "")
+
+
+def trace_of(data: bytes) -> Optional[dict]:
+    """Peek a payload's span-propagation context (v2 header field) without
+    decoding its buffers; None when the sender attached no trace."""
+    header, _ = _read_header(data)
+    return header.get("trace")
 
 
 def loads(data: bytes) -> Any:

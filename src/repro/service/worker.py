@@ -13,14 +13,22 @@ Message protocol (queue values are small tuples; large payloads are wire
 bytes — see ``service/wire.py``):
 
   front end -> worker
-      ("eval", task_id, wire_bytes)   evaluate one packed group
-      ("stop",)                       drain and exit
+      ("eval", task_id, wire_bytes, attempt)   evaluate one packed group
+      ("stop",)                                drain and exit
 
   worker -> front end
       ("hello", worker_id, t)              ready (jax imported, loop live)
       ("beat", worker_id, t)               heartbeat: task accepted
-      ("done", task_id, worker_id, wire_bytes, dt)
-      ("error", task_id, worker_id, repr, traceback, dt)
+      ("done", task_id, worker_id, wire_bytes, dt, spans)
+      ("error", task_id, worker_id, repr, traceback, dt, spans)
+
+The ``attempt`` number rides the queue message rather than the wire
+payload on purpose: a re-dispatch reuses the already-encoded payload
+bytes verbatim, so anything attempt-specific must travel outside them.
+``spans`` is a list of plain span dicts (``obs/trace``) covering the
+worker's deserialize/eval/serialize legs; the worker derives its parent
+dispatch-span id purely from the wire header's trace context plus the
+attempt number — no id exchange (DESIGN.md §15.2).
 
 Fault injection: ``worker_main`` takes ``fault_events`` — a tuple of
 ``(worker_id, task_index, action, seconds)`` primitives (the picklable
@@ -39,6 +47,7 @@ a deterministic step rather than by racing timers.
 """
 from __future__ import annotations
 
+import contextlib
 import os
 import time
 import traceback
@@ -47,10 +56,11 @@ from typing import Dict, Optional, Sequence, Tuple
 import numpy as np
 
 from ..automl.engine import TrialCohort, _materialize_scored
+from ..obs import trace
 from . import wire
 
-__all__ = ["cohort_payload", "cohort_restore", "eval_task", "worker_main",
-           "KILLED_EXIT_CODE"]
+__all__ = ["cohort_payload", "cohort_restore", "eval_task", "handle_eval",
+           "worker_main", "KILLED_EXIT_CODE"]
 
 KILLED_EXIT_CODE = 17     # distinguishes injected kills from real crashes
 
@@ -145,6 +155,46 @@ def apply_fault(action: Optional[Tuple[str, float]]) -> None:
         raise ValueError(f"unknown fault action {what!r}")
 
 
+def handle_eval(task_id, worker_id: int, payload_bytes: bytes,
+                attempt: int = 0) -> tuple:
+    """Evaluate one queued task and build its full reply tuple.
+
+    Shared by the real worker loop and the deterministic in-process twin
+    (``transport.SimWorkerPool``), so both produce identical reply shapes
+    and identical worker-side spans.  The parent dispatch-span id is
+    re-derived from the wire header's trace context and the queue
+    message's attempt number (``obs/trace.span_id`` is a pure hash)."""
+    try:
+        tctx = wire.trace_of(payload_bytes)
+    except wire.WireError:
+        tctx = None
+    sink: list = []
+    trace_id = parent = None
+    if tctx:
+        trace_id = tctx["trace_id"]
+        parent = trace.span_id(trace_id, tctx["parent"], attempt)
+
+    def _leg(name):
+        if trace_id is None:
+            return contextlib.nullcontext({})
+        return trace.span(sink, trace_id, name, attempt=attempt,
+                          parent_id=parent, worker=int(worker_id))
+
+    t0 = time.perf_counter()
+    try:
+        with _leg("deserialize"):
+            payload = wire.loads(payload_bytes)
+        with _leg("eval"):
+            outs = eval_task(payload)
+        with _leg("serialize"):
+            blob = wire.dumps(outs)
+        return ("done", task_id, worker_id, blob,
+                time.perf_counter() - t0, sink)
+    except BaseException as e:   # noqa: BLE001 — report, keep serving
+        return ("error", task_id, worker_id, repr(e),
+                traceback.format_exc(), time.perf_counter() - t0, sink)
+
+
 def worker_main(worker_id: int, task_q, result_q,
                 fault_events: Sequence[Tuple[int, int, str, float]] = ()):
     """Entry point of one worker process (see module docstring)."""
@@ -155,7 +205,8 @@ def worker_main(worker_id: int, task_q, result_q,
         msg = task_q.get()
         if msg is None or msg[0] == "stop":
             break
-        _op, task_id, payload_bytes = msg
+        _op, task_id, payload_bytes = msg[0], msg[1], msg[2]
+        attempt = int(msg[3]) if len(msg) > 3 else 0
         fault = faults.get(n_dequeued)
         n_dequeued += 1
         if fault is not None and fault[0] in ("kill", "stall"):
@@ -163,12 +214,4 @@ def worker_main(worker_id: int, task_q, result_q,
         result_q.put(("beat", worker_id, time.monotonic()))
         if fault is not None and fault[0] == "delay":
             apply_fault(fault)
-        t0 = time.perf_counter()
-        try:
-            outs = eval_task(wire.loads(payload_bytes))
-            result_q.put(("done", task_id, worker_id, wire.dumps(outs),
-                          time.perf_counter() - t0))
-        except BaseException as e:   # noqa: BLE001 — report, keep serving
-            result_q.put(("error", task_id, worker_id, repr(e),
-                          traceback.format_exc(),
-                          time.perf_counter() - t0))
+        result_q.put(handle_eval(task_id, worker_id, payload_bytes, attempt))
