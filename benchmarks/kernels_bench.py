@@ -117,8 +117,56 @@ def gen_dst_rows(N=100_000, psi=24, phi=100, cross_every=4, quick_tag="100k"):
     return rows
 
 
+def gen_dst_fused_rows(N=20_000, psi=6, phi=16, quick_tag="20k"):
+    """Per-generation timing of the fused backend (DESIGN.md §16).
+
+    Two regimes, each timed for ``backend="jnp"`` and ``"pallas_fused"``
+    with the same key so the trajectories are bit-identical (asserted):
+    ``delta`` (cross_every=4 — 3 of 4 generations are one-row delta
+    updates) and ``full`` (cross_every=1 — every generation rebuilds the
+    histograms).  On CPU the Pallas leg runs in *interpret mode*: the
+    timing validates semantics and recompile hygiene, not speed — the
+    compiled number needs a real TPU.  The derived column carries the
+    analytic useful/launched FLOPs ratio (``launch/flops.py``), the
+    padding+one-hot-materialization overhead a TPU roofline would see.
+    """
+    from repro.launch.flops import gen_dst_generation_flops
+
+    rng = np.random.default_rng(0)
+    X = np.column_stack([rng.integers(0, k, N)
+                         for k in (3, 5, 17, 2, 40, 7, 200, 11)]).astype(float)
+    y = rng.integers(0, 2, N).astype(float)
+    coded = factorize(X, y)
+    n = max(2, int(round(N ** 0.5)))
+    M, B = coded.codes.shape[1], coded.max_bins
+
+    def run(cfg):
+        res = gen_dst(jax.random.key(0), coded, cfg=cfg)   # warmup/compile
+        jax.block_until_ready(res.fitness)
+        t0 = time.perf_counter()
+        res = gen_dst(jax.random.key(2), coded, cfg=cfg)
+        jax.block_until_ready(res.fitness)
+        return (time.perf_counter() - t0) / cfg.psi * 1e6, res
+
+    rows = []
+    for mode, cross_every in (("delta", 4), ("full", 1)):
+        cfg = GenDSTConfig(psi=psi, phi=phi, cross_every=cross_every)
+        us_jnp, r_jnp = run(cfg._replace(backend="jnp"))
+        us_fused, r_fused = run(cfg._replace(backend="pallas_fused"))
+        assert float(r_jnp.fitness) == float(r_fused.fitness), \
+            f"fused backend parity broken ({mode})"
+        useful, launched = gen_dst_generation_flops(phi, n, M, B, mode=mode)
+        rows.append((f"gen_dst_gen_jnp_{mode}_{quick_tag}", us_jnp,
+                     f"loss={-float(r_jnp.fitness):.5f}"))
+        rows.append((f"gen_dst_gen_fused_{mode}_{quick_tag}", us_fused,
+                     f"useful/launched={useful / launched:.3f}"))
+    return rows
+
+
 if __name__ == "__main__":
     for name, us, derived in main():
         print(f"{name},{us:.1f},{derived}")
     for name, us, derived in gen_dst_rows(N=20_000, psi=12, quick_tag="20k"):
+        print(f"{name},{us:.1f},{derived}")
+    for name, us, derived in gen_dst_fused_rows(N=20_000, quick_tag="20k"):
         print(f"{name},{us:.1f},{derived}")

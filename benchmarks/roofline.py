@@ -35,10 +35,55 @@ def rows(data=None, mesh="single"):
     return out
 
 
+# representative Gen-DST regimes for the analytic fused-generation roofline:
+# the paper-default population on a 100k×23 dataset, and the quick-bench one
+GEN_DST_SHAPES = [
+    # (phi, n, M, B)
+    (100, 316, 23, 256),   # paper default: phi=100, n=sqrt(100k)
+    (16, 141, 9, 256),     # quick-bench regime (benchmarks/kernels_bench.py)
+]
+
+
+def gen_dst_rows(shapes=None, tile_p=8):
+    """Analytic roofline rows for the fused Gen-DST generation kernel
+    (DESIGN.md §16.5), same 10-column layout as the dry-run rows.
+
+    Unlike the model cells these don't come from compiled HLO — the kernel's
+    FLOPs and HBM traffic are closed-form: ``launch/flops.py`` prices the
+    launched vs useful work, and the memory term is one read + one write of
+    the padded (phi, M, B) count tensor plus the per-candidate row codes and
+    masks.  ``collective_s`` is 0 (single-chip launch)."""
+    from repro.launch.dryrun import HBM_BW, PEAK_FLOPS
+    from repro.launch.flops import gen_dst_generation_flops
+
+    out = []
+    for phi, n, M, B in shapes or GEN_DST_SHAPES:
+        phi_p = -(-phi // tile_p) * tile_p
+        counts_bytes = phi_p * M * B * 4.0
+        side_bytes = phi_p * (3 * M * 4.0 + M * 4.0 + 8.0)  # codes/mask/w/fit
+        for mode in ("delta", "full"):
+            useful, launched = gen_dst_generation_flops(
+                phi, n, M, B, mode=mode, tile_p=tile_p)
+            bytes_dev = 2.0 * counts_bytes + side_bytes
+            if mode == "full":   # rebuild also streams the gathered rows
+                bytes_dev += phi_p * n * M * 4.0
+            t_compute = launched / PEAK_FLOPS
+            t_memory = bytes_dev / HBM_BW
+            dominant = "compute" if t_compute >= t_memory else "memory"
+            bound = max(t_compute, t_memory)
+            out.append((
+                "gen_dst_fused", f"{mode}_phi{phi}_n{n}_M{M}_B{B}", "ok",
+                dominant, t_compute, t_memory, 0.0,
+                (useful / PEAK_FLOPS) / max(bound, 1e-12),
+                useful / launched, counts_bytes / 1e9,
+            ))
+    return out
+
+
 def main():
     print("arch,shape,status,dominant,compute_s,memory_s,collective_s,"
           "roofline_fraction,useful_flops_ratio,peak_gb_per_dev")
-    for row in rows():
+    for row in rows() + gen_dst_rows():
         arch, shape, status, dom, c, m, coll, frac, useful, peak = row
         if status != "ok":
             print(f"{arch},{shape},{status},{dom},,,,,,")

@@ -206,11 +206,14 @@ def _run_kernels():
 def _run_gen_dst(quick):
     _section("Gen-DST search loop: incremental fitness + islands "
              "(name,us_per_generation,derived)")
-    from .kernels_bench import gen_dst_rows
+    from .kernels_bench import gen_dst_fused_rows, gen_dst_rows
     if quick:
         rows = gen_dst_rows(N=20_000, psi=12, quick_tag="20k")
+        rows += gen_dst_fused_rows(N=20_000, psi=6, phi=16, quick_tag="20k")
     else:
         rows = gen_dst_rows(N=100_000, psi=24, quick_tag="100k")
+        rows += gen_dst_fused_rows(N=100_000, psi=12, phi=64,
+                                   quick_tag="100k")
     rows = [(name, round(us, 1), derived) for name, us, derived in rows]
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
@@ -347,14 +350,15 @@ def _run_fig5(quick):
 
 
 def _run_roofline():
-    _section("Roofline (from experiments/dryrun.json)")
-    from .roofline import main as rmain, rows as roofline_rows
+    _section("Roofline (experiments/dryrun.json + analytic Gen-DST fused "
+             "generation)")
+    from .roofline import gen_dst_rows, main as rmain, rows as roofline_rows
     rmain()
     return _rowdicts(
         ("arch", "shape", "status", "dominant", "compute_s", "memory_s",
          "collective_s", "roofline_fraction", "useful_flops_ratio",
          "peak_gb_per_dev"),
-        roofline_rows())
+        roofline_rows() + gen_dst_rows())
 
 
 if __name__ == "__main__":

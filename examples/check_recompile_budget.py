@@ -19,6 +19,12 @@ on the *full* dataset only after a winner family is known, so its first
 occurrence may legitimately land in a post-warmup round.  The steady-state
 budget is about the per-rung serving path, which SubStrat-NF exercises
 fully.  CI runs this as the recompile-budget step.
+
+The same gate also covers the Gen-DST backends directly (DESIGN.md §16):
+for every ``GEN_DST_BACKENDS`` entry, one warmup ``gen_dst`` call pays the
+tracing, then two same-shaped calls with fresh keys must add zero — the
+backend switch is a *static* jit argument, so switching backends between
+runs recompiles, but re-running one backend never does.
 """
 import argparse
 import sys
@@ -28,8 +34,11 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import jax  # noqa: E402
 
+import numpy as np  # noqa: E402
+
 from repro.automl.engine import AutoMLConfig  # noqa: E402
-from repro.core.gen_dst import GenDSTConfig  # noqa: E402
+from repro.core.gen_dst import GEN_DST_BACKENDS, GenDSTConfig, gen_dst  # noqa: E402
+from repro.core.measures import factorize  # noqa: E402
 from repro.core.plan import plan  # noqa: E402
 from repro.data.tabular import PAPER_DATASETS, make_dataset, train_test_split  # noqa: E402
 from repro.obs import jaxprof  # noqa: E402
@@ -48,6 +57,37 @@ def run_round(srv, datasets, p, n_jobs, key0):
         st = srv.poll(jid)
         assert st.phase == "done", f"job {jid} ended in {st.phase}"
     return ids
+
+
+def check_gen_dst_backends(rounds: int) -> int:
+    """Warmup + ``rounds`` same-shaped ``gen_dst`` calls per backend: the
+    steady state must add 0 jit tracings on every backend, including the
+    Pallas legs (interpret mode on CPU — tracing hygiene is backend-blind).
+    Returns the number of failing backends."""
+    rng = np.random.default_rng(0)
+    X = np.column_stack([rng.integers(0, k, 2_000)
+                         for k in (3, 5, 17, 2, 40)]).astype(float)
+    y = rng.integers(0, 2, 2_000).astype(float)
+    coded = factorize(X, y)
+    failures = 0
+    for backend in GEN_DST_BACKENDS:
+        cfg = GenDSTConfig(psi=4, phi=8, cross_every=2, backend=backend)
+        res = gen_dst(jax.random.key(0), coded, 20, 3, cfg)   # warmup
+        jax.block_until_ready(res.fitness)
+        warm = jaxprof.tracing_snapshot()
+        for r in range(rounds):
+            res = gen_dst(jax.random.key(1 + r), coded, 20, 3, cfg)
+            jax.block_until_ready(res.fitness)
+        delta = jaxprof.new_tracings_since(warm)
+        if delta:
+            failures += 1
+            print(f"FAIL: gen_dst backend={backend} re-traced after warmup:")
+            for site, n in sorted(delta.items()):
+                print(f"  {site}: +{int(n)}")
+        else:
+            print(f"gen_dst backend={backend}: 0 new tracings "
+                  f"({rounds} same-shaped rounds, fresh keys)")
+    return failures
 
 
 def main() -> int:
@@ -88,6 +128,9 @@ def main() -> int:
             return 1
         print(f"round {r + 1}: 0 new tracings "
               f"({args.jobs} jobs, fresh keys, same shapes)")
+
+    if check_gen_dst_backends(args.rounds):
+        return 1
 
     print("recompile budget: PASS (steady state adds 0 jit tracings)")
     return 0

@@ -49,10 +49,26 @@ from .measures import (
     MEASURES,
 )
 from ..kernels.entropy.ops import population_histogram, resolve_interpret
+from ..kernels.gen_dst.ops import fused_delta_fitness
 from ..obs.jaxprof import note_trace
 
 __all__ = ["GenDSTConfig", "DSTResult", "gen_dst", "gen_dst_batch",
-           "default_dst_size", "random_dst"]
+           "default_dst_size", "random_dst", "GEN_DST_BACKENDS"]
+
+# full-recompute histogram / fused-generation execution backends
+# (DESIGN.md §16.3): "jnp" is the bit-level oracle everywhere.
+GEN_DST_BACKENDS = ("jnp", "pallas", "pallas_fused")
+
+
+def _validate_cfg(cfg: "GenDSTConfig") -> None:
+    """Shared solo/batched config validation: a bad config must fail fast
+    identically on both paths instead of diverging batched-vs-solo."""
+    assert cfg.phi % 2 == 0, "population size must be even (pairwise crossover)"
+    assert cfg.num_islands >= 1 and cfg.cross_every >= 1 and cfg.migrate_every >= 1
+    if cfg.backend not in GEN_DST_BACKENDS:
+        raise ValueError(
+            f"unknown Gen-DST backend {cfg.backend!r}; expected one of "
+            f"{', '.join(GEN_DST_BACKENDS)}")
 
 
 class GenDSTConfig(NamedTuple):
@@ -62,8 +78,12 @@ class GenDSTConfig(NamedTuple):
     alpha: float = 0.05    # royalty (elite) fraction
     p_rc: float = 0.9      # P(mutate/cross rows) vs columns
     measure: str = "entropy"
-    # --- search-loop extensions (DESIGN.md §5.5) ---------------------------
-    backend: str = "jnp"   # full-recompute histogram backend: "jnp"|"pallas"
+    # --- search-loop extensions (DESIGN.md §5.5, §16) ----------------------
+    # execution backend: "jnp" (XLA reference, the bit-level oracle),
+    # "pallas" (MXU histogram on full recomputes only), or "pallas_fused"
+    # (the §16 kernel: delta-update + fitness fused into one VMEM-resident
+    # launch per generation, MXU histogram on crossover recomputes)
+    backend: str = "jnp"
     incremental: bool = True   # delta-update counts on mutation-only gens
     cross_every: int = 1   # crossover every k-th generation (1 = seed-faithful)
     num_islands: int = 1   # independent sub-populations (vmapped)
@@ -247,6 +267,20 @@ def _mutate(key, rows, cols, *, N, M, n, m, xi, p_rc, target):
     return new_rows, new_cols
 
 
+def _crossover_splits(key, half, n, m):
+    """Independent row/column crossover split sizes.
+
+    Draws ``s_r`` (how many rows child_ab takes from parent a) and ``s_c``
+    (how many columns) from *separate* keys.  A single shared key here
+    correlates the two draws — with identical ranges (``n == m - 1``) the
+    row and column split points would be bit-identical every generation —
+    so each geometry axis gets its own fold of ``key``."""
+    ksr, ksc = jax.random.split(key)
+    s_r = jax.random.randint(ksr, (half,), 1, jnp.maximum(n, 2))
+    s_c = jax.random.randint(ksc, (half,), 1, jnp.maximum(m - 1, 2))
+    return s_r, s_c
+
+
 def _crossover(key, rows, cols, *, N, M, n, m, p_rc, target):
     """Pairwise split-and-swap crossover over the whole population."""
     phi = rows.shape[0]
@@ -259,8 +293,9 @@ def _crossover(key, rows, cols, *, N, M, n, m, p_rc, target):
 
     cross_rows = jax.random.uniform(kt, (half,)) < p_rc
 
+    s_r, s_c = _crossover_splits(ks, half, n, m)
+
     # --- row crossover: child_ab = s rows of a + (n-s) rows of b ------------
-    s_r = jax.random.randint(ks, (half,), 1, jnp.maximum(n, 2))
     pa = jax.vmap(lambda k, r: jax.random.permutation(k, r))(
         jax.random.split(kra, half), ra
     )
@@ -279,7 +314,6 @@ def _crossover(key, rows, cols, *, N, M, n, m, p_rc, target):
 
     # --- column crossover: union of s members of a and (m-s) of b, refill ---
     tgt = jnp.zeros((M,), bool).at[target].set(True)
-    s_c = jax.random.randint(ks, (half,), 1, jnp.maximum(m - 1, 2))
     def col_child(k, kf, cma, cmb, s):
         k1, k2 = jax.random.split(k)
         u = _sample_members(k1, cma & ~tgt, s) | _sample_members(
@@ -366,9 +400,15 @@ def _gen_dst_core(key, codes, values, n, m, cfg: GenDSTConfig, B, target):
     entropy = cfg.measure == "entropy"
     interpret = resolve_interpret(None)
 
+    use_fused = entropy and cfg.backend == "pallas_fused"
+
     def pop_counts(rows):
+        # full-recompute histograms: the fused backend shares the entropy
+        # kernel's MXU one-hot-contraction path (DESIGN.md §16.3)
+        hist_backend = "pallas" if cfg.backend in ("pallas", "pallas_fused") \
+            else "jnp"
         return _population_counts(
-            codes, rows, B, backend=cfg.backend, interpret=interpret
+            codes, rows, B, backend=hist_backend, interpret=interpret
         )
 
     if entropy:
@@ -415,30 +455,62 @@ def _gen_dst_core(key, codes, values, n, m, cfg: GenDSTConfig, B, target):
         )
         xkeys = jax.random.split(kx, I)
 
-        def with_cross(_):
-            rows2, cols2 = jax.vmap(cross1)(xkeys, rows1, cols1)
-            counts2 = pop_counts(rows2) if entropy else counts
-            return rows2, cols2, counts2
+        if use_fused:
+            # §16 path: the cond only decides *which counts and delta* feed
+            # the fused kernel; delta-update + fitness always run as one
+            # launch.  Crossover generations rebuild histograms on the MXU
+            # path and pass a zero delta, so both branches share one
+            # fitness code path (and one jaxpr shape for the cond).
+            no_delta = jnp.zeros_like(applied)
 
-        def without_cross(_):
-            if not entropy:
-                return rows1, cols1, counts
-            if cfg.incremental:
-                counts2 = jax.vmap(
-                    lambda c, o, f_, a: _row_delta(codes, c, o, f_, a)
-                )(counts, old_vals, fresh, applied)
+            def with_cross(_):
+                rows2, cols2 = jax.vmap(cross1)(xkeys, rows1, cols1)
+                return rows2, cols2, pop_counts(rows2), no_delta
+
+            def without_cross(_):
+                if cfg.incremental:
+                    return rows1, cols1, counts, applied
+                return rows1, cols1, pop_counts(rows1), no_delta
+
+            if cfg.cross_every == 1:
+                rows2, cols2, counts_b, app = with_cross(None)
             else:
-                counts2 = pop_counts(rows1)
-            return rows1, cols1, counts2
-
-        if cfg.cross_every == 1:
-            rows2, cols2, counts2 = with_cross(None)
-        else:
-            rows2, cols2, counts2 = jax.lax.cond(
-                gen_idx % cfg.cross_every == 0, with_cross, without_cross, None
+                rows2, cols2, counts_b, app = jax.lax.cond(
+                    gen_idx % cfg.cross_every == 0,
+                    with_cross, without_cross, None,
+                )
+            counts2, fit = fused_delta_fitness(
+                counts_b,
+                jnp.take(codes, old_vals, axis=0),
+                jnp.take(codes, fresh, axis=0),
+                app, cols2, f_ref,
+                backend="pallas_fused", interpret=interpret,
             )
+        else:
+            def with_cross(_):
+                rows2, cols2 = jax.vmap(cross1)(xkeys, rows1, cols1)
+                counts2 = pop_counts(rows2) if entropy else counts
+                return rows2, cols2, counts2
 
-        fit = fitness_of(rows2, cols2, counts2)                 # (I, phi)
+            def without_cross(_):
+                if not entropy:
+                    return rows1, cols1, counts
+                if cfg.incremental:
+                    counts2 = jax.vmap(
+                        lambda c, o, f_, a: _row_delta(codes, c, o, f_, a)
+                    )(counts, old_vals, fresh, applied)
+                else:
+                    counts2 = pop_counts(rows1)
+                return rows1, cols1, counts2
+
+            if cfg.cross_every == 1:
+                rows2, cols2, counts2 = with_cross(None)
+            else:
+                rows2, cols2, counts2 = jax.lax.cond(
+                    gen_idx % cfg.cross_every == 0, with_cross, without_cross,
+                    None,
+                )
+            fit = fitness_of(rows2, cols2, counts2)             # (I, phi)
         flat = fit.reshape(-1)
         g = jnp.argmax(flat)
         better = flat[g] > best_f
@@ -497,8 +569,7 @@ def gen_dst(
     dn, dm = default_dst_size(N, M)
     n = dn if n is None else min(n, N)
     m = dm if m is None else min(m, M)
-    assert cfg.phi % 2 == 0, "population size must be even (pairwise crossover)"
-    assert cfg.num_islands >= 1 and cfg.cross_every >= 1 and cfg.migrate_every >= 1
+    _validate_cfg(cfg)
     best_r, best_c, best_f, history, f_ref = _gen_dst_jit(
         key, coded.codes, coded.values, n, m, cfg, coded.max_bins, coded.target_col
     )
@@ -534,7 +605,7 @@ def gen_dst_batch(
     dn, dm = default_dst_size(N, M)
     n = dn if n is None else min(n, N)
     m = dm if m is None else min(m, M)
-    assert cfg.phi % 2 == 0, "population size must be even (pairwise crossover)"
+    _validate_cfg(cfg)
     rb, cb, fb, hist, f_ref = _gen_dst_batch_jit(
         jnp.stack(list(keys)),
         jnp.stack([c.codes for c in codeds]),

@@ -222,9 +222,13 @@ def subset_entropy(
 # ---------------------------------------------------------------------------
 
 
-def _subset_values(values: jax.Array, row_idx: jax.Array, col_mask: jax.Array):
+def _subset_values(values: jax.Array, row_idx: jax.Array,
+                   col_mask: Optional[jax.Array]):
     sub = jnp.take(values, row_idx, axis=0)  # (n, M)
-    cm = col_mask.astype(jnp.float32)
+    # registry contract: col_mask=None means "all columns" — every measure
+    # must accept fn(values, row_idx) without a mask
+    cm = (jnp.ones((values.shape[1],), jnp.float32) if col_mask is None
+          else col_mask.astype(jnp.float32))
     return sub, cm
 
 

@@ -52,10 +52,13 @@ class SubStratConfig:
       (paper §3.4, DESIGN.md §10.2).
     - ``ft_automl`` — the "restricted, much shorter" step-3 pass on the full
       data, constrained to M''s family (paper §3.4, DESIGN.md §10.2).
-    - ``num_islands`` / ``dst_backend`` — Gen-DST overrides (DESIGN.md §5.5);
-      when set they win over the corresponding ``gen`` fields, so callers can
-      turn on islands / the Pallas histogram kernel without rebuilding the
-      whole GenDSTConfig.
+    - ``num_islands`` / ``dst_backend`` — Gen-DST overrides (DESIGN.md §5.5,
+      §16); when set they win over the corresponding ``gen`` fields, so
+      callers can turn on islands or switch the accelerator backend
+      (``"jnp"``/``"pallas"``/``"pallas_fused"``) without rebuilding the
+      whole GenDSTConfig.  The override rides the GenDSTConfig into the
+      Plan's ``strategy_opts`` — and therefore into the service DST-cache
+      key — unchanged.
     - ``automl_backend`` — AutoML-engine execution override (DESIGN.md §10.3):
       ``"batched"`` (vmap cohort) or ``"loop"`` (sequential reference),
       applied to *both* the sub-AutoML and fine-tune passes when set.

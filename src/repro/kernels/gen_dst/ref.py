@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the fused Gen-DST generation kernel.
+
+Semantics are exactly the two steps the kernel fuses — the scatter-add
+row-delta update (``gen_dst._row_delta``) followed by the masked-entropy
+fitness (``gen_dst._counts_fitness``) — written with the identical
+operation sequence so the jnp path stays a *bit-level* oracle for the
+interpret-mode kernel on CPU (same adds of exact small integers, same
+reduction axes/order, same eps clamps).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["fused_delta_fitness_ref"]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def fused_delta_fitness_ref(
+    counts: jax.Array,        # (P, M, B) f32 per-candidate histograms
+    old_codes: jax.Array,     # (P, M) int32 codes of the evicted row
+    new_codes: jax.Array,     # (P, M) int32 codes of the inserted row
+    applied: jax.Array,       # (P,) bool/f32 — row mutations that fired
+    col_mask: jax.Array,      # (P, M) bool column membership
+    f_ref: jax.Array,         # scalar F(D)
+):
+    """Delta-update counts, then masked-entropy fitness; returns
+    ``(counts', fitness)`` with ``fitness[p] = -|F(d_p) - F(D)|``."""
+    P, M = old_codes.shape
+    w = applied.astype(jnp.float32)[:, None]          # (P, 1)
+    ai = jnp.arange(P)[:, None]
+    aj = jnp.arange(M)[None, :]
+    counts = counts.at[ai, aj, old_codes].add(-w)
+    counts = counts.at[ai, aj, new_codes].add(w)
+
+    total = jnp.maximum(counts.sum(axis=-1, keepdims=True), 1e-12)
+    p = counts / total
+    h = -jnp.sum(jnp.where(p > 0, p * jnp.log2(jnp.maximum(p, 1e-30)), 0.0),
+                 axis=-1)                             # (P, M)
+    cmf = col_mask.astype(jnp.float32)
+    f_d = jnp.sum(h * cmf, axis=-1) / jnp.maximum(cmf.sum(axis=-1), 1.0)
+    return counts, -jnp.abs(f_d - f_ref)

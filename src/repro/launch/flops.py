@@ -16,7 +16,8 @@ from __future__ import annotations
 
 from ..models.config import ModelConfig, ShapeSpec
 
-__all__ = ["active_params", "model_flops", "tabular_trial_flops"]
+__all__ = ["active_params", "model_flops", "tabular_trial_flops",
+           "gen_dst_generation_flops"]
 
 
 def tabular_trial_flops(n_tr: int, n_val: int, d: int, n_classes: int,
@@ -27,6 +28,40 @@ def tabular_trial_flops(n_tr: int, n_val: int, d: int, n_classes: int,
     2·P per validation example)."""
     p = d * hidden + hidden * n_classes
     return 6.0 * p * float(steps) * float(n_tr) + 2.0 * p * float(n_val)
+
+
+def gen_dst_generation_flops(phi: int, n: int, M: int, B: int, *,
+                             mode: str = "delta",
+                             tile_p: int = 8) -> tuple[float, float]:
+    """``(useful, launched)`` FLOPs of one Gen-DST generation's fitness pass
+    (DESIGN.md §16.5), for the roofline's padded-vs-useful accounting.
+
+    ``useful`` is the algorithmic minimum per live candidate: the
+    scatter-equivalent count update — 4 ops/column for a one-row ``delta``
+    (subtract old + add new, each a read-modify-write), or ``2·n·M`` adds
+    for a ``full`` histogram rebuild — plus the masked-entropy reduction
+    (~5 ops per (M, B) histogram cell: normalize, log2, multiply,
+    predicate, accumulate).
+
+    ``launched`` is what the fused kernel actually executes: the delta is
+    materialized as one-hot compares against the bin iota (6 ops per cell
+    instead of 4 per column), the full rebuild as a one-hot matmul
+    (``2·n·M·B``), and the candidate axis is padded up to the ``tile_p``
+    grid — padded lanes compute a fitness nobody reads.  The histogram
+    path's own row-tile padding is not priced here (it varies with the
+    entropy kernel's tile_n and is negligible at Gen-DST row counts).
+    """
+    entropy = 5.0 * M * B
+    if mode == "delta":
+        useful_pc = 4.0 * M + entropy
+        launched_pc = 6.0 * M * B + entropy
+    elif mode == "full":
+        useful_pc = 2.0 * n * M + entropy
+        launched_pc = 2.0 * n * M * B + entropy
+    else:
+        raise ValueError(f"unknown Gen-DST generation mode: {mode!r}")
+    phi_padded = -(-phi // tile_p) * tile_p
+    return useful_pc * phi, launched_pc * phi_padded
 
 
 def _attn_params(cfg: ModelConfig) -> float:

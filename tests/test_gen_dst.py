@@ -5,8 +5,8 @@ import numpy as np
 import pytest
 
 from repro.core.gen_dst import (
-    GenDSTConfig, default_dst_size, gen_dst, random_dst,
-    _init_population, _mutate, _crossover, _select,
+    GenDSTConfig, default_dst_size, gen_dst, gen_dst_batch, random_dst,
+    _init_population, _mutate, _crossover, _crossover_splits, _select,
 )
 from repro.core.measures import factorize, subset_entropy
 
@@ -94,6 +94,43 @@ def test_gen_dst_alternative_measure(coded):
                   GenDSTConfig(psi=4, phi=8, measure="pnorm"))
     assert int(res.col_mask.sum()) == 3
     assert np.isfinite(float(res.fitness))
+
+
+def test_crossover_split_sizes_decorrelated():
+    """Regression: the row and column split sizes must come from separate
+    key folds.  The old code drew both from the same key, so with identical
+    ranges (n == m - 1) the two draws were bit-identical every generation —
+    row and column crossover geometry moved in lockstep."""
+    half, n, m = 256, 10, 11   # randint(1, 10) range for BOTH draws
+    for seed in range(3):
+        s_r, s_c = _crossover_splits(jax.random.key(seed), half, n, m)
+        s_r, s_c = np.asarray(s_r), np.asarray(s_c)
+        assert not np.array_equal(s_r, s_c), \
+            "row/column split sizes are bit-identical — correlated RNG"
+        # and they should look independent, not merely unequal
+        assert 0 < (s_r == s_c).mean() < 0.5
+
+
+def test_gen_dst_batch_validates_config(coded):
+    """gen_dst_batch must fail fast on the same bad configs gen_dst rejects
+    (it used to skip the islands/cadence validation entirely)."""
+    keys = [jax.random.key(0)]
+    for bad in (GenDSTConfig(psi=2, phi=8, num_islands=0),
+                GenDSTConfig(psi=2, phi=8, cross_every=0),
+                GenDSTConfig(psi=2, phi=8, migrate_every=0),
+                GenDSTConfig(psi=2, phi=7)):
+        with pytest.raises(AssertionError):
+            gen_dst(jax.random.key(0), coded, 10, 3, bad)
+        with pytest.raises(AssertionError):
+            gen_dst_batch(keys, [coded], 10, 3, bad)
+
+
+def test_gen_dst_unknown_backend_rejected(coded):
+    bad = GenDSTConfig(psi=2, phi=8, backend="cuda")
+    with pytest.raises(ValueError, match="unknown Gen-DST backend"):
+        gen_dst(jax.random.key(0), coded, 10, 3, bad)
+    with pytest.raises(ValueError, match="unknown Gen-DST backend"):
+        gen_dst_batch([jax.random.key(0)], [coded], 10, 3, bad)
 
 
 def test_gen_dst_deterministic(coded):

@@ -70,6 +70,46 @@ def test_entropy_kernel_property(N, M, B, seed):
     np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_r), atol=1e-3)
 
 
+# padding edges (DESIGN.md §16.4): rows shorter than one tile, a ragged
+# column tile, and bins beyond every observed code (B > max(n_bins)) must
+# all agree compiled/interpret/jnp — padding lanes carry zero weight.
+PADDING_EDGE_SHAPES = [
+    # (N, M, B, code_max)
+    (5, 3, 8, None),        # N=5 < tile_n — one mostly-padded row tile
+    (300, 13, 16, None),    # M=13 % tile_m=8 != 0 — ragged column tile
+    (200, 4, 64, 11),       # codes < 11 << B=64 — padding bins
+    (7, 9, 32, 5),          # all three edges at once
+]
+
+
+def _padding_case(N, M, B, code_max):
+    rng = np.random.default_rng(N * 7 + M)
+    hi = B if code_max is None else code_max
+    codes = jnp.asarray(rng.integers(0, hi, (N, M)), jnp.int32)
+    w = jnp.asarray(rng.random(N), jnp.float32)
+    return codes, w
+
+
+@pytest.mark.parametrize("N,M,B,code_max", PADDING_EDGE_SHAPES)
+def test_histogram_padding_edges_interpret(N, M, B, code_max):
+    codes, w = _padding_case(N, M, B, code_max)
+    h_k = masked_histogram_pallas(codes, w, B, interpret=True)
+    h_r = masked_histogram_ref(codes, w, B)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_r), atol=1e-4)
+    if code_max is not None:  # bins no code can reach must stay empty
+        assert not np.asarray(h_k)[:, code_max:].any()
+
+
+@pytest.mark.skipif(jax.default_backend() != "tpu",
+                    reason="compiled Mosaic leg needs a TPU")
+@pytest.mark.parametrize("N,M,B,code_max", PADDING_EDGE_SHAPES)
+def test_histogram_padding_edges_compiled(N, M, B, code_max):
+    codes, w = _padding_case(N, M, B, code_max)
+    h_k = masked_histogram_pallas(codes, w, B, interpret=False)
+    h_r = masked_histogram_ref(codes, w, B)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_r), atol=1e-4)
+
+
 def test_column_entropy_masked_matches_measures():
     from repro.core.measures import column_entropy
     rng = np.random.default_rng(3)

@@ -110,6 +110,19 @@ def test_alternative_measures_run(coded_paper):
         assert np.isfinite(full) and np.isfinite(sub)
 
 
+@pytest.mark.parametrize("fn", [measure_pnorm, measure_mean_correlation,
+                                measure_coeff_variation])
+def test_measures_row_idx_without_col_mask(fn, coded_paper):
+    """Registry contract: fn(values, row_idx) with col_mask=None must mean
+    "all columns" — it used to crash on col_mask.astype(None-type)."""
+    rows = jnp.array([0, 1, 2, 5, 7])
+    all_cols = jnp.ones(coded_paper.values.shape[1], bool)
+    got = float(fn(coded_paper.values, rows))                  # must not crash
+    want = float(fn(coded_paper.values, rows, all_cols))
+    assert np.isfinite(got)
+    assert got == pytest.approx(want, abs=1e-6)
+
+
 def test_weighted_counts_match_subset():
     rng = np.random.default_rng(1)
     codes = jnp.asarray(rng.integers(0, 6, (50, 4)), jnp.int32)
