@@ -1,0 +1,126 @@
+"""Cross-tenant meta-learning benchmark (DESIGN.md §17): trials to reach
+the cold baseline's winner accuracy, cold vs portfolio-warm-started.
+
+Protocol:
+
+1. **History** — serve ``n_history`` distinct synthetic datasets on one
+   scheduler, populating its experience store.
+2. **Cold** — a fresh scheduler (empty store) serves ``n_eval`` *new*
+   distinct datasets with ``Plan(warm_start=False)``; per job, record the
+   sub-AutoML pass's dispatched-trial count and the trial index at which
+   the winner's validation accuracy was first reached.
+3. **Warm** — another fresh scheduler, its store restored from the history
+   run's ``state_dict()`` (exercising the persistence path), serves the
+   same datasets warm-started; count the dispatched trials until each job
+   first reaches its cold winner accuracy (within 1e-6).
+
+The section asserts the ISSUE acceptance bar inline so CI's bench-smoke
+run enforces it: every warm job reaches its cold winner accuracy, every
+warm pass is portfolio-seeded, and warm dispatches <= 0.75x the cold
+trial count in total.  Everything is seeded — the verdict is
+deterministic, not a timing race.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.automl.engine import AutoMLConfig
+from repro.core.plan import plan
+from repro.meta import ExperienceStore
+from repro.service.scheduler import Scheduler
+
+
+def _make_data(seed: int, N: int, d: int):
+    """One distinct-fingerprint synthetic binary task per seed."""
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, 2, N)
+    X = np.column_stack([y * 1.5 + rng.normal(0, 0.8, N) for _ in range(d)])
+    return X, y
+
+
+def _trials_to_reach(result, target_acc: float):
+    """Index (1-based) of the first logged trial scoring >= target - 1e-6,
+    or None if the search never reached it."""
+    for i, (_spec, acc) in enumerate(result.trials):
+        if float(acc) >= target_acc - 1e-6:
+            return i + 1
+    return None
+
+
+def _serve(scheduler: Scheduler, datasets, p):
+    """Submit every dataset, drive to completion, return the job results."""
+    ids = [scheduler.submit(X, y, plan=p) for X, y in datasets]
+    scheduler.run()
+    out = []
+    for jid in ids:
+        job = scheduler.jobs[jid]
+        if job.phase != "done":
+            raise RuntimeError(f"bench job {jid} failed: {job.error!r}")
+        out.append(job.result)
+    return out
+
+
+def meta_rows(*, n_history: int = 4, n_eval: int = 8, N: int = 400,
+              d: int = 8, quick_tag: str = "quick"):
+    """The ``meta`` section's ``(name, us, derived)`` rows."""
+    automl = AutoMLConfig(n_trials=10, rungs=(8, 16))
+    cold_plan = plan("mc", budget=200, fine_tune=False, sub_automl=automl,
+                     warm_start=False)
+    warm_plan = plan("mc", budget=200, fine_tune=False, sub_automl=automl)
+    history = [_make_data(100 + i, N, d) for i in range(n_history)]
+    evals = [_make_data(200 + i, N, d) for i in range(n_eval)]
+
+    t0 = time.perf_counter()
+    hist_sched = Scheduler(warm_min_history=n_history + 1)  # never self-warm
+    _serve(hist_sched, history, warm_plan)
+    hist_us = (time.perf_counter() - t0) * 1e6
+    store_state = hist_sched.experience.state_dict()
+    n_hist_trained = hist_sched.experience.n_trained()
+
+    t0 = time.perf_counter()
+    cold = _serve(Scheduler(), evals, cold_plan)
+    cold_us = (time.perf_counter() - t0) * 1e6
+    cold_trials = [r.intermediate.n_trials for r in cold]
+    cold_accs = [float(r.intermediate.val_acc) for r in cold]
+    cold_reach = [_trials_to_reach(r.intermediate, a)
+                  for r, a in zip(cold, cold_accs)]
+
+    t0 = time.perf_counter()
+    restored = ExperienceStore()
+    restored.load_state(store_state)
+    warm_sched = Scheduler(experience=restored, warm_min_history=3)
+    warm = _serve(warm_sched, evals, warm_plan)
+    warm_us = (time.perf_counter() - t0) * 1e6
+    warm_trials = [r.intermediate.n_trials for r in warm]
+    warm_reach = [_trials_to_reach(r.intermediate, a)
+                  for r, a in zip(warm, cold_accs)]
+
+    hits = int(warm_sched.m_portfolio_hits.value())
+    ratio = sum(warm_trials) / max(sum(cold_trials), 1)
+
+    # the ISSUE acceptance bar, enforced by CI's bench-smoke --json run
+    unreached = [i for i, r in enumerate(warm_reach) if r is None]
+    assert not unreached, (
+        f"warm jobs {unreached} never reached their cold winner accuracy")
+    assert hits == n_eval, (
+        f"only {hits}/{n_eval} warm passes were portfolio-seeded")
+    assert ratio <= 0.75, (
+        f"warm dispatched {sum(warm_trials)} trials vs cold "
+        f"{sum(cold_trials)} (ratio {ratio:.2f} > 0.75)")
+
+    return [
+        (f"meta/history{n_history}[{quick_tag}]", hist_us,
+         f"trained={n_hist_trained}"),
+        (f"meta/cold{n_eval}[{quick_tag}]", cold_us,
+         f"trials={sum(cold_trials)} reach={sum(cold_reach)}"),
+        (f"meta/warm{n_eval}[{quick_tag}]", warm_us,
+         f"trials={sum(warm_trials)} reach={sum(warm_reach)} "
+         f"ratio={ratio:.2f} hits={hits}"),
+    ]
+
+
+if __name__ == "__main__":
+    for name, us, derived in meta_rows():
+        print(f"{name},{us:.1f},{derived}")

@@ -99,7 +99,7 @@ def main() -> None:
     ap.add_argument("--skip", nargs="*", default=[],
                     help="section names to skip (table4 fig2 fig3 fig4 fig5 "
                          "kernels gen_dst automl service service_transport "
-                         "hetero_merge continuous_batching roofline)")
+                         "hetero_merge continuous_batching meta roofline)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write each section's rows to a machine-readable "
                          "JSON file (perf trajectory tracking across PRs)")
@@ -144,6 +144,8 @@ def main() -> None:
         sections.append(("hetero_merge", lambda: _run_hetero(quick)))
     if "continuous_batching" not in args.skip:
         sections.append(("continuous_batching", lambda: _run_continuous(quick)))
+    if "meta" not in args.skip:
+        sections.append(("meta", lambda: _run_meta_learning(quick)))
     if "table4" not in args.skip:
         sections.append(("table4", lambda: _run_table4(quick)))
     if "fig2" not in args.skip:
@@ -277,6 +279,22 @@ def _run_continuous(quick):
              "cross-rung step-masked megabatch (name,us,derived)")
     from .continuous_bench import continuous_rows
     rows = continuous_rows(n_jobs=8, quick_tag="quick" if quick else "full")
+    rows = [(name, round(us, 1), derived) for name, us, derived in rows]
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return _rowdicts(("name", "us", "derived"), rows)
+
+
+def _run_meta_learning(quick):
+    _section("Cross-tenant meta-learning: trials to reach the cold winner "
+             "accuracy, cold vs portfolio-warm-started (name,us,derived)")
+    from .meta_bench import meta_rows
+    if quick:
+        rows = meta_rows(n_history=4, n_eval=8, N=400, d=8,
+                         quick_tag="quick")
+    else:
+        rows = meta_rows(n_history=8, n_eval=8, N=2_000, d=10,
+                         quick_tag="full")
     rows = [(name, round(us, 1), derived) for name, us, derived in rows]
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

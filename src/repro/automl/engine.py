@@ -302,8 +302,20 @@ def search_init(
     *,
     config: AutoMLConfig = AutoMLConfig(),
     restrict_family: Optional[str] = None,
+    seed_trials: Optional[Sequence[PipelineSpec]] = None,
 ) -> SearchState:
-    """Build the evaluation context and sample the initial population."""
+    """Build the evaluation context and sample the initial population.
+
+    ``seed_trials`` is the meta-learning warm-start hook (DESIGN.md §17.4):
+    when given, rung 0 runs *only* those specs instead of the whole sampled
+    population.  The sampled population depends only on ``config.seed``
+    (never on the data), so a seed spec that matches a sampled one keeps
+    the sampled trial id — and with it the exact ``(seed, trial_id, rung)``
+    PRNG key a cold run would use, making the warm trial's accuracy at
+    every rung bit-identical to the corresponding cold trial's.  Seed specs
+    outside the population are appended with fresh ids (still
+    deterministic).  ``seed_trials=None`` (or empty) is byte-for-byte the
+    pre-warm-start cold path."""
     get_backend(config.backend)   # unknown names raise, listing the registry
     t_start = time.perf_counter()
     X = np.asarray(X, dtype=np.float32)
@@ -323,6 +335,21 @@ def search_init(
     families = [restrict_family] if restrict_family else list(FAMILIES)
     n_seed_trials = config.n_trials if not restrict_family else max(4, config.n_trials // 4)
     specs = _sample_specs(rng, n_seed_trials, families)
+    alive_ids = list(range(len(specs)))
+    if seed_trials:
+        # warm start: keep only the seeded specs alive.  Matches inherit the
+        # sampled trial id (bit-identical PRNG trajectory vs the cold run);
+        # novel specs append after the population with fresh ids.
+        index = {s: i for i, s in enumerate(specs)}
+        ids = []
+        for s in seed_trials:
+            i = index.get(s)
+            if i is None:
+                specs.append(s)
+                i = len(specs) - 1
+                index[s] = i
+            ids.append(i)
+        alive_ids = sorted(set(ids))
 
     ctx = {
         "X_tr": X_tr, "y_tr": y_tr, "X_val": X_val, "y_val": y_val,
@@ -334,8 +361,8 @@ def search_init(
     }
     return SearchState(
         config=config, classes=classes, ctx=ctx, specs=specs,
-        alive_ids=list(range(len(specs))), t_start=t_start,
-        trial_rung={i: 0 for i in range(len(specs))},
+        alive_ids=alive_ids, t_start=t_start,
+        trial_rung={i: 0 for i in alive_ids},
     )
 
 

@@ -77,6 +77,10 @@ class Plan:
     # Off, the job still merges, but only with cohorts at its exact
     # (rung_i, epochs) — the pre-§13 lockstep behavior.
     continuous_batching: bool = True
+    # opt into portfolio warm-starts from the server's experience store
+    # (DESIGN.md §17).  Off, the sub-AutoML pass always seeds its full cold
+    # rung-0 population, regardless of accumulated history.
+    warm_start: bool = True
 
     def __post_init__(self):
         if not callable(self.strategy):
@@ -129,6 +133,7 @@ def plan(
     ft_automl: Optional[AutoMLConfig] = None,
     backend: Optional[str] = None,
     continuous_batching: bool = True,
+    warm_start: bool = True,
     **strategy_opts,
 ) -> Plan:
     """Build a ``Plan``; extra keyword arguments become strategy options.
@@ -142,7 +147,8 @@ def plan(
         kw["ft_automl"] = ft_automl
     return Plan(strategy=strategy, strategy_opts=_norm_opts(strategy_opts),
                 n=n, m=m, fine_tune=fine_tune, backend=backend,
-                continuous_batching=continuous_batching, **kw)
+                continuous_batching=continuous_batching,
+                warm_start=warm_start, **kw)
 
 
 def plan_from_config(config, dst_fn: Optional[Callable] = None) -> Plan:

@@ -1,0 +1,69 @@
+"""Dataset meta-features for the experience store (DESIGN.md §17.2).
+
+The k-NN slice of the portfolio builder needs a cheap vector describing
+"what kind of dataset is this?".  Everything here is derived from the
+*already factorized* ``CodedDataset`` the scheduler computes at admission —
+shapes, the per-column code cardinalities, the target-column class
+distribution, and the per-column entropy profile via the same jitted
+``measures.full_column_entropy`` the Gen-DST phase precomputes its
+reference ``F(D)`` terms with.  No new passes over the raw data, and (for
+jobs that also run a DST search) no new jit tracings: the entropy call
+shares the DST phase's ``(N, M, B)`` trace.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.measures import CodedDataset, full_column_entropy
+
+__all__ = ["META_FEATURE_NAMES", "meta_features"]
+
+# one name per slot of the vector ``meta_features`` returns, in order
+META_FEATURE_NAMES = (
+    "log1p_rows",          # log1p(N)
+    "log1p_cols",          # log1p(M) (feature columns, target excluded)
+    "n_classes",           # target-column cardinality
+    "class_skew",          # max class frequency (1/k balanced .. 1.0 degenerate)
+    "class_entropy",       # Shannon entropy (log2) of the class distribution
+    "col_entropy_mean",    # mean per-column code entropy (target excluded)
+    "col_entropy_std",     # std of the per-column code entropies
+    "log2_mean_bins",      # log2 of the mean per-column code cardinality
+)
+
+
+def meta_features(coded: CodedDataset) -> np.ndarray:
+    """The ``(len(META_FEATURE_NAMES),)`` float32 meta-feature vector.
+
+    Deterministic function of the factorized codes — two datasets with the
+    same fingerprint always produce bit-identical vectors, so k-NN
+    decisions survive snapshot/restore exactly."""
+    codes = np.asarray(coded.codes)
+    n_bins = np.asarray(coded.n_bins)
+    N, M = codes.shape
+    t = int(coded.target_col)
+
+    k = max(int(n_bins[t]), 1)
+    counts = np.bincount(codes[:, t], minlength=k).astype(np.float64)
+    p = counts / max(counts.sum(), 1.0)
+    nz = p[p > 0.0]
+    class_entropy = float(-(nz * np.log2(nz)).sum()) if nz.size else 0.0
+    class_skew = float(p.max()) if p.size else 1.0
+
+    h = np.asarray(full_column_entropy(coded.codes, coded.max_bins),
+                   dtype=np.float64)                      # (M,)
+    feat = np.ones(M, dtype=bool)
+    feat[t] = False
+    hf = h[feat] if feat.any() else h
+    bins_f = n_bins[feat].astype(np.float64) if feat.any() else \
+        n_bins.astype(np.float64)
+
+    return np.array([
+        np.log1p(float(N)),
+        np.log1p(float(feat.sum())),
+        float(k),
+        class_skew,
+        class_entropy,
+        float(hf.mean()),
+        float(hf.std()),
+        float(np.log2(max(bins_f.mean(), 1.0))),
+    ], dtype=np.float32)

@@ -9,7 +9,8 @@ over the one-shot ``substrat()`` pipeline.
                     phases, merging compatible rung cohorts from different
                     jobs into one batched-engine dispatch; snapshottable.
 - ``server``      — in-process submit/poll/result front end with per-tenant
-                    budget accounting and streamed rung leaderboards.
+                    budget accounting, token-bucket admission rate limits,
+                    and streamed rung leaderboards.
 - ``wire``        — versioned binary serialization for everything the
                     transport ships (cohorts, results, scheduler state).
 - ``worker``      — per-device worker-process loop (pull task, eval, push).
@@ -19,7 +20,9 @@ over the one-shot ``substrat()`` pipeline.
 from .cache import DSTCache, DSTCacheEntry
 from .fingerprint import dataset_fingerprint
 from .scheduler import Scheduler, SubStratJob
-from .server import BudgetExceeded, JobStatus, SubStratServer
+from .server import (
+    BudgetExceeded, JobStatus, RateLimited, SubStratServer, TokenBucket,
+)
 from .transport import (
     DistributedScheduler, ProcessWorkerPool, SimWorkerPool,
     SubStratHTTPClient, SubStratHTTPServer,
@@ -29,7 +32,8 @@ from .wire import WireError, WireVersionError
 __all__ = [
     "DSTCache", "DSTCacheEntry", "dataset_fingerprint",
     "Scheduler", "SubStratJob",
-    "BudgetExceeded", "JobStatus", "SubStratServer",
+    "BudgetExceeded", "JobStatus", "RateLimited", "SubStratServer",
+    "TokenBucket",
     "DistributedScheduler", "ProcessWorkerPool", "SimWorkerPool",
     "SubStratHTTPClient", "SubStratHTTPServer",
     "WireError", "WireVersionError",

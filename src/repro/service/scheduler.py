@@ -49,6 +49,16 @@ The DST cache keys on the plan's subset identity —
 registered cacheable strategy (all the paper baselines, the ASP proxy
 scorer) is cached and warm-started exactly like Gen-DST.  Jobs with a bare
 callable strategy (the deprecated ``dst_fn``) bypass the cache.
+
+Beyond the exact-fingerprint cache, the scheduler meta-learns across
+tenants (DESIGN.md §17): every sub-AutoML rung feeds the
+``meta.ExperienceStore`` (fingerprint × trial spec → rung accuracies), and
+once enough *distinct* datasets have finished (``warm_min_history``), a new
+job's sub pass is seeded with the greedy submodular portfolio built from
+the k-NN meta-feature slice of that history — fewer rung-0 trials, each
+bit-identical to its cold-run counterpart (the portfolio filters the
+deterministically sampled population, preserving trial ids).  Cold starts
+and ``Plan(warm_start=False)`` jobs run the unchanged full population.
 """
 from __future__ import annotations
 
@@ -70,6 +80,9 @@ from ..core.strategies import run_strategy, run_strategy_batch
 from ..core.substrat import (
     SubStratConfig, SubStratResult, build_subset, dst_feature_columns,
     nf_test_eval,
+)
+from ..meta import (
+    ExperienceStore, meta_features, portfolio_coverage, portfolio_for,
 )
 from ..obs import jaxprof, trace
 from ..obs.metrics import MetricsRegistry
@@ -227,9 +240,20 @@ class Scheduler:
                  warm_start: bool = True, hetero_merge: bool = True,
                  megabatch: bool = True, waste_budget: float = 4.0,
                  hetero_pad_limit: Optional[float] = None,
-                 batch_dst: bool = False):
+                 batch_dst: bool = False,
+                 experience: Optional[ExperienceStore] = None,
+                 warm_min_history: int = 3, portfolio_k: int = 6,
+                 portfolio_knn: int = 4):
         self.cache = cache if cache is not None else DSTCache()
         self.warm_start = warm_start
+        # cross-tenant meta-learning (DESIGN.md §17): served-job history and
+        # the portfolio warm-start policy built from it.  warm_start=False
+        # disables feeding and seeding alike (the pre-§17 scheduler).
+        self.experience = (experience if experience is not None
+                           else ExperienceStore())
+        self.warm_min_history = warm_min_history
+        self.portfolio_k = portfolio_k
+        self.portfolio_knn = portfolio_knn
         self.hetero_merge = hetero_merge
         # continuous rung batching (DESIGN.md §13): one standing cross-rung
         # dispatch per step instead of lockstep (rung_i, epochs) buckets
@@ -293,6 +317,22 @@ class Scheduler:
             "pack_useful_flops_total",
             "analytic FLOPs the packed trials needed at their own "
             "shapes/steps")
+        self.m_portfolio_hits = m.counter(
+            "portfolio_hits_total",
+            "sub-AutoML passes seeded from the experience-store portfolio")
+        self.m_portfolio_seeded = m.counter(
+            "portfolio_seeded_trials_total",
+            "rung-0 trials seeded by portfolio warm-starts")
+        self.m_portfolio_saved = m.counter(
+            "portfolio_trials_saved_total",
+            "rung-0 trials a warm-started pass skipped vs its cold "
+            "population")
+        self.m_portfolio_coverage = m.gauge(
+            "portfolio_coverage",
+            "covered-dataset best-accuracy F(P) of the newest portfolio")
+        self.m_experience_datasets = m.gauge(
+            "experience_datasets",
+            "distinct trained fingerprints in the experience store")
 
     @property
     def hetero_pad_limit(self) -> float:
@@ -378,6 +418,11 @@ class Scheduler:
         if job.coded is None:
             job.coded = factorize(job.X, job.y)
         job.fingerprint = dataset_fingerprint(job.coded)
+        if self.warm_start:
+            # register the dataset's meta-feature vector (free: derived
+            # from the codes just factorized, sharing the DST entropy trace)
+            self.experience.note_meta(job.fingerprint,
+                                      meta_features(job.coded))
         self._job_time_span(job, "factorize", "factorize_s", w0,
                             time.perf_counter() - t0, phase="factorize")
 
@@ -569,6 +614,30 @@ class Scheduler:
 
     # -- AutoML phases ------------------------------------------------------
 
+    def _portfolio_seeds(self, job: SubStratJob):
+        """The experience-store seed portfolio for a job's sub-AutoML pass,
+        or None for the cold path (opted out, or not enough *other*
+        datasets finished to meta-learn from)."""
+        if not (self.warm_start and job.plan.warm_start
+                and job.fingerprint is not None):
+            return None
+        store = self.experience
+        exclude = {job.fingerprint}
+        if store.n_trained(exclude) < self.warm_min_history:
+            return None
+        rec = store.records.get(job.fingerprint)
+        feats = rec.features if rec is not None else None
+        seeds = portfolio_for(store, feats, k=self.portfolio_k,
+                              knn=self.portfolio_knn, exclude=exclude)
+        if not seeds:
+            return None
+        self.m_portfolio_hits.inc()
+        self.m_portfolio_seeded.inc(len(seeds))
+        self.m_portfolio_coverage.set(
+            portfolio_coverage(store.matrix(store.trained(exclude)), seeds))
+        self.m_experience_datasets.set(store.n_trained())
+        return seeds
+
     def _ensure_search(self, job: SubStratJob) -> None:
         if job.search is not None:
             return
@@ -579,8 +648,14 @@ class Scheduler:
             X_sub, y_sub = build_subset(job.X, job.y, job.row_idx, job.col_idx,
                                         job.key)
             job.y_sub = y_sub
+            seeds = self._portfolio_seeds(job)
             job.search = search_init(
-                X_sub, y_sub, config=p.resolved_sub_automl())
+                X_sub, y_sub, config=p.resolved_sub_automl(),
+                seed_trials=seeds)
+            if seeds:
+                saved = len(job.search.specs) - len(job.search.alive_ids)
+                if saved > 0:
+                    self.m_portfolio_saved.inc(saved)
         else:   # fine_tune: restricted to M''s (or the cache-known) family
             family = job.warm_family or job.intermediate.spec.family
             job.search = search_init(
@@ -597,6 +672,12 @@ class Scheduler:
             if job.cache_key is not None:
                 self.cache.note_winner(job.cache_key,
                                        job.intermediate.spec.family)
+            if self.warm_start and job.fingerprint is not None:
+                # the fingerprint's history is now usable warm-start
+                # material (trained() requires a winner)
+                self.experience.note_winner(job.fingerprint,
+                                            job.intermediate.spec)
+                self.m_experience_datasets.set(self.experience.n_trained())
             if job.plan.fine_tune:
                 job.phase = "fine_tune"
                 return
@@ -685,6 +766,13 @@ class Scheduler:
         st = job.search
         if st is None or not st.live:
             return
+        if (job.phase == "sub_automl" and self.warm_start
+                and job.fingerprint is not None):
+            # feed the experience store: every scored trial of the rung just
+            # recorded (rung_i already advanced past it)
+            for spec, v, *_rest in st.live:
+                self.experience.note_trial(job.fingerprint, spec,
+                                           st.rung_i - 1, float(v))
         ranked = sorted(((float(v), i) for i, (s, v, *_) in enumerate(st.live)),
                         key=lambda t: -t[0])
         job.leaderboard.append({
@@ -934,6 +1022,9 @@ class Scheduler:
             "counters": {k: getattr(self, k) for k in self._COUNTER_FIELDS},
             "cache": self.cache.items(),
             "metrics": self.metrics.state_dict(),
+            # the experience store rides every snapshot (wire version 3) so
+            # a restored server warm-starts exactly like the one that died
+            "experience": self.experience.state_dict(),
         }
         return wire.dumps(payload, kind="scheduler")
 
@@ -968,6 +1059,8 @@ class Scheduler:
             # m_* handles to the restored families (bit-identical round trip)
             self.metrics.load_state(payload["metrics"])
             self._register_metrics()
+        if "experience" in payload:
+            self.experience.load_state(payload["experience"])
 
     def save_checkpoint_to(self, ckpt_dir, step: int, *, keep: int = 3) -> None:
         """Write ``snapshot()`` as an atomic on-disk checkpoint

@@ -7,6 +7,12 @@ participant its equal share) accrue to the submitting tenant, and a tenant
 over its budget gets ``BudgetExceeded`` at the next ``submit``.  Already
 admitted jobs always run to completion — admission control, not preemption.
 
+Admission is also *rate*-limited per tenant: each tenant draws from a
+token bucket (``rate`` jobs/second refill, ``burst`` capacity) and an
+empty bucket gets ``RateLimited`` — carrying ``retry_after_s`` — which the
+HTTP transport maps to ``429`` with a ``Retry-After`` header.  Buckets use
+an injectable clock so the policy is deterministic under test.
+
 This is deliberately in-process (one Python heap, one device): the
 cross-process transport is an open ROADMAP item, and nothing here assumes
 more than the scheduler's cooperative ``step()`` loop.
@@ -14,7 +20,8 @@ more than the scheduler's cooperative ``step()`` loop.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional
+import time
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import numpy as np
@@ -25,11 +32,62 @@ from ..core.substrat import SubStratConfig, SubStratResult
 from .cache import DSTCache
 from .scheduler import Scheduler
 
-__all__ = ["BudgetExceeded", "JobStatus", "SubStratServer", "TenantAccount"]
+__all__ = ["BudgetExceeded", "JobStatus", "RateLimited", "SubStratServer",
+           "TenantAccount", "TokenBucket"]
 
 
 class BudgetExceeded(RuntimeError):
     """Raised by ``submit`` when the tenant has spent its budget."""
+
+
+class RateLimited(RuntimeError):
+    """Raised by ``submit`` when the tenant's token bucket is empty.
+
+    ``retry_after_s`` is the seconds until the bucket refills one token —
+    the HTTP layer surfaces it as the ``Retry-After`` header of a 429."""
+
+    def __init__(self, tenant: str, retry_after_s: float):
+        super().__init__(
+            f"tenant {tenant!r} is rate limited; retry in "
+            f"{retry_after_s:.2f}s")
+        self.tenant = tenant
+        self.retry_after_s = retry_after_s
+
+
+class TokenBucket:
+    """A standard token bucket: ``rate`` tokens/second refill up to
+    ``burst`` capacity; each admission costs one token.  The clock is
+    injectable (tests drive a fake monotonic clock)."""
+
+    def __init__(self, rate: float, burst: float,
+                 clock: Callable[[], float] = time.monotonic):
+        if rate <= 0 or burst <= 0:
+            raise ValueError("rate and burst must be positive")
+        self.rate = float(rate)
+        self.burst = float(burst)
+        self._clock = clock
+        self._tokens = float(burst)
+        self._t_last = clock()
+
+    def _refill(self) -> None:
+        now = self._clock()
+        self._tokens = min(self.burst,
+                           self._tokens + (now - self._t_last) * self.rate)
+        self._t_last = now
+
+    @property
+    def tokens(self) -> float:
+        self._refill()
+        return self._tokens
+
+    def try_acquire(self) -> float:
+        """Take one token.  Returns 0.0 on success, else the seconds until
+        one token is available (nothing is consumed on failure)."""
+        self._refill()
+        if self._tokens >= 1.0:
+            self._tokens -= 1.0
+            return 0.0
+        return (1.0 - self._tokens) / self.rate
 
 
 @dataclasses.dataclass
@@ -87,6 +145,9 @@ class SubStratServer:
         batch_dst: bool = False,
         tenant_budgets: Optional[Dict[str, float]] = None,
         scheduler: Optional[Scheduler] = None,
+        tenant_rate_limits: Optional[Dict[str, Tuple[float, float]]] = None,
+        default_rate_limit: Optional[Tuple[float, float]] = None,
+        rate_clock: Callable[[], float] = time.monotonic,
     ):
         # an injected scheduler (e.g. transport.DistributedScheduler) wins;
         # the cache/merge kwargs then belong to its constructor, not ours
@@ -100,6 +161,13 @@ class SubStratServer:
         self.tenants: Dict[str, TenantAccount] = {}
         for tenant, budget in (tenant_budgets or {}).items():
             self.tenants[tenant] = TenantAccount(budget_s=budget)
+        # per-tenant admission rate limits: tenant -> (rate/s, burst).
+        # ``default_rate_limit`` applies to tenants without an explicit
+        # entry; None (the default) leaves those tenants unlimited.
+        self._rate_limits = dict(tenant_rate_limits or {})
+        self._default_rate_limit = default_rate_limit
+        self._rate_clock = rate_clock
+        self._buckets: Dict[str, TokenBucket] = {}
 
     # -- tenancy ------------------------------------------------------------
 
@@ -110,6 +178,42 @@ class SubStratServer:
 
     def set_budget(self, tenant: str, budget_s: Optional[float]) -> None:
         self._account(tenant).budget_s = budget_s
+
+    def set_rate_limit(self, tenant: str,
+                       limit: Optional[Tuple[float, float]]) -> None:
+        """(Re)set a tenant's ``(rate/s, burst)`` admission limit; None
+        removes it (the tenant falls back to the default limit, if any)."""
+        self._buckets.pop(tenant, None)
+        if limit is None:
+            self._rate_limits.pop(tenant, None)
+        else:
+            self._rate_limits[tenant] = limit
+
+    def _bucket(self, tenant: str) -> Optional[TokenBucket]:
+        bucket = self._buckets.get(tenant)
+        if bucket is None:
+            limit = self._rate_limits.get(tenant, self._default_rate_limit)
+            if limit is None:
+                return None
+            rate, burst = limit
+            bucket = TokenBucket(rate, burst, clock=self._rate_clock)
+            self._buckets[tenant] = bucket
+        return bucket
+
+    def _check_rate(self, tenant: str) -> None:
+        bucket = self._bucket(tenant)
+        if bucket is None:
+            return
+        m = self.scheduler.metrics
+        retry_after = bucket.try_acquire()
+        m.gauge("rate_limit_tokens",
+                "admission tokens remaining in the tenant's bucket",
+                ("tenant",)).set(bucket.tokens, tenant=tenant)
+        if retry_after > 0.0:
+            m.counter("rate_limited_total",
+                      "submissions rejected by the tenant rate limiter",
+                      ("tenant",)).inc(tenant=tenant)
+            raise RateLimited(tenant, retry_after)
 
     def _refresh_spend(self) -> None:
         for account in self.tenants.values():
@@ -137,6 +241,7 @@ class SubStratServer:
 
         ``plan`` is the native payload (DESIGN.md §12); ``config`` (+ the
         deprecated ``dst_fn``) is converted on admission."""
+        self._check_rate(tenant)
         account = self._account(tenant)
         self._refresh_spend()
         if account.budget_s is not None and account.spent_s >= account.budget_s:
@@ -195,6 +300,17 @@ class SubStratServer:
                      "jobs_submitted": acc.jobs_submitted}
             for tenant, acc in self.tenants.items()
         }
+        out["rate_limits"] = {
+            tenant: {"rate": limit[0], "burst": limit[1],
+                     "tokens": (self._buckets[tenant].tokens
+                                if tenant in self._buckets else limit[1])}
+            for tenant, limit in sorted(self._rate_limits.items())
+        }
+        if self._default_rate_limit is not None:
+            out["default_rate_limit"] = {
+                "rate": self._default_rate_limit[0],
+                "burst": self._default_rate_limit[1],
+            }
         return out
 
     # -- observability (DESIGN.md §15) ---------------------------------------

@@ -47,6 +47,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 import queue
 import threading
 import time
@@ -62,7 +63,7 @@ from ..distributed.fault import Heartbeat, assign_shards
 from ..obs import jaxprof, trace
 from . import wire
 from .scheduler import Scheduler
-from .server import SubStratServer
+from .server import RateLimited, SubStratServer
 from .worker import cohort_payload, eval_task, handle_eval, worker_main
 
 __all__ = ["DistributedScheduler", "ProcessWorkerPool", "RemoteEvalError",
@@ -547,11 +548,14 @@ class DistributedScheduler(Scheduler):
 # ---------------------------------------------------------------------------
 
 
-def _send_json(handler, code: int, obj) -> None:
+def _send_json(handler, code: int, obj,
+               headers: Optional[Dict[str, str]] = None) -> None:
     body = json.dumps(obj).encode("utf-8")
     handler.send_response(code)
     handler.send_header("Content-Type", "application/json")
     handler.send_header("Content-Length", str(len(body)))
+    for name, value in (headers or {}).items():
+        handler.send_header(name, value)
     handler.end_headers()
     handler.wfile.write(body)
 
@@ -580,7 +584,8 @@ class SubStratHTTPServer:
     steps the scheduler whenever jobs are pending):
 
     - ``POST /v1/submit`` — wire payload ``{"X", "y", "tenant", "key",
-      "plan", "X_test", "y_test"}`` → ``{"job_id": N}``
+      "plan", "X_test", "y_test"}`` → ``{"job_id": N}``; ``429`` with a
+      ``Retry-After`` header when the tenant's token bucket is empty
     - ``GET /v1/poll?job_id=N&since=K`` — JSON ``JobStatus`` including the
       leaderboard entries from index ``K`` (streamed partial results)
     - ``GET /v1/result?job_id=N`` — wire ``SubStratResult``; ``202`` while
@@ -661,12 +666,20 @@ class SubStratHTTPServer:
                 length = int(handler.headers.get("Content-Length", 0))
                 req = wire.loads(handler.rfile.read(length))
                 self._last_submit = time.monotonic()
-                with self._lock:
-                    job_id = self.server.submit(
-                        req["X"], req["y"],
-                        tenant=req.get("tenant") or "default",
-                        key=req.get("key"), plan=req.get("plan"),
-                        X_test=req.get("X_test"), y_test=req.get("y_test"))
+                try:
+                    with self._lock:
+                        job_id = self.server.submit(
+                            req["X"], req["y"],
+                            tenant=req.get("tenant") or "default",
+                            key=req.get("key"), plan=req.get("plan"),
+                            X_test=req.get("X_test"), y_test=req.get("y_test"))
+                except RateLimited as e:
+                    _send_json(
+                        handler, 429,
+                        {"error": str(e), "retry_after_s": e.retry_after_s},
+                        headers={"Retry-After":
+                                 str(max(1, math.ceil(e.retry_after_s)))})
+                    return
                 self._last_submit = time.monotonic()
                 self._wake.set()
                 _send_json(handler, 200, {"job_id": job_id})

@@ -31,6 +31,11 @@ would silently *drop* the trace context and the per-job timeline would be
 missing its worker legs with no error anywhere, which is exactly the
 silent-misparse class the version check exists to prevent (DESIGN.md
 §15.2).
+Version 3 marks the addition of the experience store to scheduler
+snapshot payloads (DESIGN.md §17.4).  Same rationale: a v2 reader would
+parse the buffers fine but silently *drop* the accumulated cross-tenant
+history, and the restored server would quietly cold-start every job —
+a behavioral regression with no error anywhere.
 
 Dataclasses are encoded by qualified name and re-imported on decode;
 decoding is restricted to ``repro.*`` modules so a wire payload can only
@@ -52,7 +57,7 @@ __all__ = ["WIRE_VERSION", "WireError", "WireVersionError", "dumps", "loads",
            "kind_of", "trace_of"]
 
 MAGIC = b"SBWR"
-WIRE_VERSION = 2
+WIRE_VERSION = 3
 
 # dataclass decoding is restricted to this package's own modules
 _DC_MODULE_PREFIX = "repro."

@@ -1,0 +1,411 @@
+"""Cross-tenant meta-learning (DESIGN.md §17): the experience store, the
+greedy submodular portfolio builder, and the warm-start path.
+
+Layers under test, bottom up:
+
+- ``meta.portfolio`` — property-based: greedy coverage is monotone
+  non-decreasing in k; the selection is a pure function of the history
+  *contents* (permuting insertion order changes nothing); a portfolio of
+  k >= the number of distinct per-dataset winners recovers every winner.
+- ``engine.search_init(seed_trials=...)`` — None/empty is byte-for-byte
+  the cold path; a seeded subset keeps the sampled trial ids, so its
+  rung-0 accuracies are bit-identical to the same trials of a cold run;
+  novel specs append with fresh ids.
+- ``meta.ExperienceStore`` — ``state_dict`` round-trips through the wire
+  codec bytes-identically.
+- the ``Scheduler`` — snapshots carry the store and the restored scheduler
+  makes identical portfolio decisions; a warm-started job reaches the cold
+  run's winner accuracy with strictly fewer dispatched trials;
+  ``Plan(warm_start=False)`` restores the exact cold behavior.
+- ``server.TokenBucket`` / rate limiting — deterministic under an
+  injected clock; ``submit`` raises ``RateLimited``; the HTTP layer maps
+  it to 429 + ``Retry-After``.
+
+Property tests use ``hypothesis`` when installed and fall back to the
+deterministic ``_hyp_fallback`` shim otherwise (CI runs both legs).
+"""
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                    # minimal environments
+    from _hyp_fallback import given, settings, strategies as st
+
+from repro.automl.engine import (
+    AutoMLConfig, PipelineSpec, search_eval_rung, search_init,
+)
+from repro.core.measures import factorize
+from repro.core.plan import plan
+from repro.meta import (
+    ExperienceStore, META_FEATURE_NAMES, greedy_portfolio, knn_fingerprints,
+    meta_features, portfolio_coverage, portfolio_for, spec_sort_key,
+)
+from repro.service import (
+    RateLimited, SubStratServer, TokenBucket, wire,
+)
+from repro.service.scheduler import Scheduler
+
+
+def _spec(i: int) -> PipelineSpec:
+    return PipelineSpec(preproc="none", feature_frac=1.0,
+                        family=f"fam{i}", hp=(("lr", i),))
+
+
+def _matrix_from_rng(rng, n_specs: int, n_datasets: int):
+    return {
+        _spec(i): {f"fp{j}": float(rng.uniform(0.3, 1.0))
+                   for j in range(n_datasets)}
+        for i in range(n_specs)
+    }
+
+
+def _make_data(seed: int, N: int = 150, d: int = 6):
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, 2, N)
+    X = np.column_stack([y * 1.5 + rng.normal(0, 0.8, N) for _ in range(d)])
+    return X, y
+
+
+# ---------------------------------------------------------------------------
+# portfolio builder
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 9), st.integers(1, 5), st.integers(0, 10_000))
+def test_greedy_coverage_monotone(n_specs, n_datasets, seed):
+    matrix = _matrix_from_rng(np.random.default_rng(seed), n_specs,
+                              n_datasets)
+    last = 0.0
+    for k in range(1, n_specs + 2):
+        cov = portfolio_coverage(matrix, greedy_portfolio(matrix, k))
+        assert cov >= last - 1e-12
+        last = cov
+    # full-portfolio coverage equals the matrix's ceiling
+    ceiling = portfolio_coverage(matrix, list(matrix))
+    assert last == pytest.approx(ceiling)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 8), st.integers(2, 5), st.integers(0, 10_000))
+def test_selection_invariant_under_insertion_order(n_specs, n_datasets, seed):
+    rng = np.random.default_rng(seed)
+    entries = []
+    for i in range(n_specs):
+        for j in range(n_datasets):
+            entries.append((f"fp{j}", _spec(i), int(rng.integers(0, 3)),
+                            float(rng.uniform(0.3, 1.0))))
+    winners = {f"fp{j}": _spec(int(rng.integers(0, n_specs)))
+               for j in range(n_datasets)}
+    feats = {f"fp{j}": rng.normal(size=len(META_FEATURE_NAMES))
+                       .astype(np.float32)
+             for j in range(n_datasets)}
+
+    def build(order):
+        store = ExperienceStore()
+        for idx in order:
+            fp, spec, rung, acc = entries[idx]
+            store.note_trial(fp, spec, rung, acc)
+        for fp in sorted(winners):
+            store.note_meta(fp, feats[fp])
+            store.note_winner(fp, winners[fp])
+        return store
+
+    base = build(range(len(entries)))
+    query = rng.normal(size=len(META_FEATURE_NAMES)).astype(np.float32)
+    expected = portfolio_for(base, query, k=3, knn=2)
+    for _ in range(3):
+        perm = rng.permutation(len(entries))
+        assert portfolio_for(build(perm), query, k=3, knn=2) == expected
+
+
+def test_k_covers_every_distinct_winner():
+    # spec i is the unique maximum on dataset i: any coverage-maximizing
+    # portfolio of k >= n must contain every one of them
+    n = 5
+    matrix = {}
+    for i in range(n):
+        accs = {f"fp{j}": 0.5 for j in range(n)}
+        accs[f"fp{i}"] = 0.9 + 0.01 * i
+        matrix[_spec(i)] = accs
+    chosen = greedy_portfolio(matrix, n)
+    assert set(chosen) == set(matrix)
+    # and the families they carry are all recovered
+    assert {s.family for s in chosen} == {f"fam{i}" for i in range(n)}
+
+
+def test_greedy_size_and_tie_break():
+    matrix = {_spec(i): {"fp0": 0.7} for i in range(4)}   # 4-way exact tie
+    assert greedy_portfolio(matrix, 2) == sorted(matrix,
+                                                 key=spec_sort_key)[:2]
+    assert len(greedy_portfolio(matrix, 99)) == len(matrix)
+    assert greedy_portfolio({}, 3) == []
+
+
+def test_knn_slice():
+    feats = {
+        "a": np.array([0.0, 0.0], np.float32),
+        "b": np.array([1.0, 0.0], np.float32),
+        "c": np.array([5.0, 0.0], np.float32),
+    }
+    q = np.array([0.4, 0.0], np.float32)
+    assert knn_fingerprints(feats, q, 2) == ["a", "b"]
+    # exact distance tie -> lexically smaller fingerprint first
+    tie = {"x": np.array([1.0], np.float32), "m": np.array([-1.0], np.float32)}
+    assert knn_fingerprints(tie, np.zeros(1, np.float32), 1) == ["m"]
+
+
+def test_meta_features_deterministic():
+    X, y = _make_data(7)
+    coded = factorize(X, y)
+    f1, f2 = meta_features(coded), meta_features(coded)
+    assert f1.shape == (len(META_FEATURE_NAMES),)
+    assert f1.dtype == np.float32
+    assert f1.tobytes() == f2.tobytes()
+
+
+# ---------------------------------------------------------------------------
+# engine seeding
+# ---------------------------------------------------------------------------
+
+_CFG = AutoMLConfig(n_trials=6, rungs=(4, 8))
+
+
+def test_search_init_none_seed_is_cold_path():
+    X, y = _make_data(3)
+    a = search_init(X, y, config=_CFG)
+    b = search_init(X, y, config=_CFG, seed_trials=None)
+    c = search_init(X, y, config=_CFG, seed_trials=[])
+    for other in (b, c):
+        assert other.specs == a.specs
+        assert other.alive_ids == a.alive_ids
+        assert other.trial_rung == a.trial_rung
+
+
+def test_seeded_subset_rung0_bit_identical():
+    X, y = _make_data(11)
+    cold = search_init(X, y, config=_CFG)
+    search_eval_rung(cold)
+    cold_accs = {spec: float(v) for spec, v, *_ in cold.live}
+
+    seeds = [cold.specs[1], cold.specs[4]]
+    warm = search_init(X, y, config=_CFG, seed_trials=seeds)
+    assert warm.alive_ids == [1, 4]        # sampled trial ids preserved
+    assert warm.specs == cold.specs        # population untouched
+    search_eval_rung(warm)
+    assert len(warm.live) == 2
+    for spec, v, *_ in warm.live:
+        assert float(v) == cold_accs[spec]   # bitwise: same (seed, tid, rung)
+
+
+def test_unmatched_seed_appends_fresh_id():
+    X, y = _make_data(11)
+    cold = search_init(X, y, config=_CFG)
+    novel = PipelineSpec(preproc="none", feature_frac=1.0,
+                         family=cold.specs[0].family, hp=cold.specs[0].hp)
+    if novel in cold.specs:   # make it genuinely novel
+        novel = PipelineSpec(preproc="standard", feature_frac=0.5,
+                             family=cold.specs[0].family,
+                             hp=cold.specs[0].hp)
+    assert novel not in cold.specs
+    warm = search_init(X, y, config=_CFG,
+                       seed_trials=[cold.specs[2], novel])
+    n = len(cold.specs)
+    assert warm.specs[:n] == cold.specs
+    assert warm.specs[n] == novel
+    assert warm.alive_ids == [2, n]
+
+
+# ---------------------------------------------------------------------------
+# store persistence
+# ---------------------------------------------------------------------------
+
+
+def test_store_wire_round_trip_bytes_identical():
+    store = ExperienceStore()
+    rng = np.random.default_rng(0)
+    for j in range(3):
+        fp = f"fp{j}"
+        store.note_meta(fp, rng.normal(size=8).astype(np.float32))
+        for i in range(4):
+            for rung in (0, 1):
+                store.note_trial(fp, _spec(i), rung,
+                                 float(rng.uniform(0.3, 1.0)))
+        store.note_winner(fp, _spec(j))
+    blob = wire.dumps(store.state_dict())
+    other = ExperienceStore()
+    other.load_state(wire.loads(blob))
+    assert wire.dumps(other.state_dict()) == blob
+    assert other.trained() == store.trained()
+    assert other.matrix() == store.matrix()
+
+
+def test_store_keeps_best_per_rung():
+    store = ExperienceStore()
+    store.note_trial("fp", _spec(0), 0, 0.5)
+    store.note_trial("fp", _spec(0), 0, 0.8)
+    store.note_trial("fp", _spec(0), 0, 0.6)   # worse: ignored
+    store.note_trial("fp", _spec(0), 1, 0.7)
+    rec = store.records["fp"]
+    assert rec.rung_accs[_spec(0)] == {0: 0.8, 1: 0.7}
+    assert rec.final_acc(_spec(0)) == 0.7      # deepest rung wins
+
+
+# ---------------------------------------------------------------------------
+# scheduler end-to-end
+# ---------------------------------------------------------------------------
+
+_SUB = AutoMLConfig(n_trials=6, rungs=(4, 8))
+_WARM_PLAN = plan("mc", budget=120, fine_tune=False, sub_automl=_SUB)
+_COLD_PLAN = plan("mc", budget=120, fine_tune=False, sub_automl=_SUB,
+                  warm_start=False)
+
+
+def _run_jobs(sched, datasets, p):
+    ids = [sched.submit(X, y, plan=p) for X, y in datasets]
+    sched.run()
+    out = []
+    for jid in ids:
+        job = sched.jobs[jid]
+        assert job.phase == "done", repr(job.error)
+        out.append(job.result)
+    return out
+
+
+@pytest.fixture(scope="module")
+def trained_scheduler():
+    sched = Scheduler(warm_min_history=10)   # feed only, never self-warm
+    _run_jobs(sched, [_make_data(30 + i) for i in range(3)], _WARM_PLAN)
+    return sched
+
+
+def test_scheduler_feeds_experience(trained_scheduler):
+    store = trained_scheduler.experience
+    assert store.n_trained() == 3
+    for fp in store.trained():
+        rec = store.records[fp]
+        assert rec.winner is not None
+        assert rec.features is not None
+        assert len(rec.rung_accs) > 0
+
+
+def test_snapshot_preserves_store_and_decisions(trained_scheduler):
+    blob = trained_scheduler.snapshot()
+    restored = Scheduler()
+    restored.load_snapshot(blob)
+    a = trained_scheduler.experience.state_dict()
+    b = restored.experience.state_dict()
+    assert wire.dumps(a) == wire.dumps(b)
+    X, y = _make_data(77)
+    feats = meta_features(factorize(X, y))
+    assert (portfolio_for(trained_scheduler.experience, feats, k=4, knn=2)
+            == portfolio_for(restored.experience, feats, k=4, knn=2))
+
+
+def test_warm_reaches_cold_winner_with_fewer_trials(trained_scheduler):
+    evals = [_make_data(90 + i) for i in range(2)]
+    cold = _run_jobs(Scheduler(), evals, _COLD_PLAN)
+
+    # portfolio_k below the cold population size, else nothing is saved
+    warm_sched = Scheduler(warm_min_history=3, portfolio_k=4)
+    warm_sched.experience.load_state(
+        trained_scheduler.experience.state_dict())
+    warm = _run_jobs(warm_sched, evals, _WARM_PLAN)
+
+    assert warm_sched.m_portfolio_hits.value() == len(evals)
+    for c, w in zip(cold, warm):
+        assert (float(w.intermediate.val_acc)
+                >= float(c.intermediate.val_acc) - 1e-6)
+    assert (sum(w.intermediate.n_trials for w in warm)
+            < sum(c.intermediate.n_trials for c in cold))
+
+
+def test_plan_opt_out_is_cold_identical(trained_scheduler):
+    data = [_make_data(123)]
+    cold = _run_jobs(Scheduler(), data, _COLD_PLAN)[0]
+
+    opted = Scheduler(warm_min_history=3)
+    opted.experience.load_state(trained_scheduler.experience.state_dict())
+    out = _run_jobs(opted, data, _COLD_PLAN)[0]
+
+    assert opted.m_portfolio_hits.value() == 0
+    assert out.intermediate.spec == cold.intermediate.spec
+    assert (float(out.intermediate.val_acc)
+            == float(cold.intermediate.val_acc))
+    assert out.intermediate.n_trials == cold.intermediate.n_trials
+    assert ([float(a) for _s, a in out.intermediate.trials]
+            == [float(a) for _s, a in cold.intermediate.trials])
+
+
+# ---------------------------------------------------------------------------
+# rate limiting
+# ---------------------------------------------------------------------------
+
+
+def test_token_bucket_deterministic_clock():
+    t = [0.0]
+    bucket = TokenBucket(rate=2.0, burst=3.0, clock=lambda: t[0])
+    assert [bucket.try_acquire() for _ in range(3)] == [0.0, 0.0, 0.0]
+    retry = bucket.try_acquire()
+    assert retry == pytest.approx(0.5)     # 1 token / 2 per s
+    t[0] += 0.5
+    assert bucket.try_acquire() == 0.0
+    t[0] += 100.0                          # refill caps at burst
+    assert bucket.tokens == pytest.approx(3.0)
+    with pytest.raises(ValueError):
+        TokenBucket(rate=0.0, burst=1.0)
+
+
+def test_server_submit_rate_limited():
+    t = [0.0]
+    srv = SubStratServer(tenant_rate_limits={"a": (1.0, 2.0)},
+                         rate_clock=lambda: t[0])
+    X, y = _make_data(5, N=40)
+    srv.submit(X, y, tenant="a")
+    srv.submit(X, y, tenant="a")
+    with pytest.raises(RateLimited) as exc:
+        srv.submit(X, y, tenant="a")
+    assert exc.value.retry_after_s == pytest.approx(1.0)
+    srv.submit(X, y, tenant="b")           # unlimited tenant unaffected
+    t[0] += 1.0
+    srv.submit(X, y, tenant="a")           # bucket refilled
+    text = srv.metrics_text()
+    assert 'rate_limited_total{tenant="a"} 1' in text
+    assert srv.stats()["rate_limits"]["a"]["burst"] == 2.0
+
+
+def test_http_submit_429_retry_after():
+    from repro.service.transport import SubStratHTTPServer
+
+    t = [0.0]
+    srv = SubStratServer(default_rate_limit=(0.5, 1.0),
+                         rate_clock=lambda: t[0])
+    http = SubStratHTTPServer(srv).start()
+    try:
+        X, y = _make_data(5, N=40)
+        payload = wire.dumps({"X": X, "y": y, "tenant": "t", "key": None,
+                              "plan": _COLD_PLAN, "X_test": None,
+                              "y_test": None}, kind="submit")
+
+        def post():
+            req = urllib.request.Request(
+                http.url + "/v1/submit", data=payload,
+                headers={"Content-Type": "application/x-substrat-wire"})
+            try:
+                with urllib.request.urlopen(req, timeout=30) as resp:
+                    return resp.status, dict(resp.headers), resp.read()
+            except urllib.error.HTTPError as e:
+                return e.code, dict(e.headers), e.read()
+
+        status, _headers, _body = post()
+        assert status == 200
+        status, headers, body = post()
+        assert status == 429
+        assert int(headers["Retry-After"]) == 2     # ceil(1/0.5)
+        assert b"retry_after_s" in body
+    finally:
+        http.close()
